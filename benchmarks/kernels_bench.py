@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: jit'd wall time of the neighborhood ops on this
+host (CPU XLA path; the Pallas kernels are TPU-target and interpret-only
+here, so their timing is meaningless — structure is validated in tests)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.neighbors.bitset import pack_sets
+
+
+def _bench(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def run(rows: List[str]) -> None:
+    rng = np.random.default_rng(0)
+    for n, d in ((1024, 16), (4096, 16)):
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        w = jnp.ones((n,), jnp.float32)
+        us_dist = _bench(lambda: ops.pairwise_euclidean(x, x))
+        us_count = _bench(lambda: ops.eps_count(x, x, 1.0, w))
+        rows.append(f"kernel,pairwise_euclidean,n={n},d={d},us={us_dist:.0f}")
+        rows.append(f"kernel,eps_count_fused,n={n},d={d},us={us_count:.0f}")
+        # fused counting must not be slower than distance materialization
+        rows.append(f"kernel,fusion_speedup,n={n},"
+                    f"x{us_dist / max(us_count, 1e-9):.2f}")
+    sets = [set(rng.choice(512, size=12, replace=False)) for _ in range(2048)]
+    bits, sizes = pack_sets(sets, 512)
+    b = jnp.asarray(bits)
+    s = jnp.asarray(sizes)
+    us_j = _bench(lambda: ops.jaccard_distance(b, s, b, s))
+    rows.append(f"kernel,jaccard_bitmap,n=2048,W={bits.shape[1]},us={us_j:.0f}")

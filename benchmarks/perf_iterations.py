@@ -1,0 +1,126 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: compiles named variants of the three chosen
+cells (+ one bonus) and records each under `<cell>#<variant>` in the
+dry-run store. EXPERIMENTS.md §Perf reads these.
+
+Chosen per the mandate:
+  * worst roofline fraction ......... mamba2-130m | train_4k
+  * most collective-bound ........... qwen2-moe-a2.7b | train_4k
+  * paper-technique representative .. finex (sharded neighborhood plane)
+  * bonus (largest dense cell) ...... qwen2-72b | train_4k
+"""
+
+import dataclasses
+import json
+import sys
+
+from repro.launch import dryrun
+from repro.launch.dryrun import RESULTS_PATH, load_results, run_cell
+
+
+def record(arch, shape, variant, overrides=None, finex_kw=None):
+    key = f"{arch}|{shape}|16x16#{variant}"
+    existing = load_results()
+    if key in existing and existing[key].get("status") == "ok" \
+            and "--force" not in sys.argv:
+        print(f"[cached ] {key}")
+        return existing[key]
+    if finex_kw is not None:
+        rec = _run_finex_variant(finex_kw)
+    else:
+        rec = run_cell(arch, shape, multi_pod=False, overrides=overrides)
+    rec["variant"] = variant
+    rec["arch"] = arch      # keep original key fields
+    results = load_results()
+    results[key] = rec
+    tmp = RESULTS_PATH + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, RESULTS_PATH)
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"[ok     ] {key} comp={r['compute_term_s']:.3f} "
+              f"mem={r['memory_term_s']:.3f} coll={r['collective_term_s']:.3f} "
+              f"frac={r['roofline_fraction']:.4f} "
+              f"flash={r['roofline_fraction_flash']:.4f}", flush=True)
+    else:
+        print(f"[error  ] {key}: {rec.get('error', '')[:200]}", flush=True)
+    return rec
+
+
+def _run_finex_variant(kw):
+    """finex cell with distributed-sweep knobs (row_chunk, nbins, dtype)."""
+    import time
+    import traceback
+    import jax
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.neighbors import distributed as D
+    t0 = time.time()
+    mesh = make_production_mesh()
+    try:
+        fn, args, shardings = D.finex_dryrun_lowerable(mesh, **kw.get("lower", {}))
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            compiled = lowered.compile()
+        rec = {"arch": "finex", "shape": "train_4k", "mesh": "16x16",
+               "chips": mesh.devices.size, "n_micro": 1,
+               "model_flops": 2.0 * (1 << 20) ** 2 * 64, "status": "ok"}
+        dryrun._fill_analysis(rec, compiled, t0)
+        return rec
+    except Exception as e:                              # noqa: BLE001
+        return {"arch": "finex", "shape": "train_4k", "mesh": "16x16",
+                "status": "error", "error": str(e)[:1500],
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def main():
+    # ---- cell 1: mamba2-130m train (worst fraction; SSD memory-bound) --
+    for variant, over in [
+        ("baseline", {}),
+        ("chunk64", {}),           # handled via config override below
+        ("chunk256", {}),
+        ("accum_grads", {"accum_mode": "grads"}),
+    ]:
+        if variant.startswith("chunk"):
+            import repro.configs as C
+            q = int(variant[5:])
+            cfg = dataclasses.replace(C.ARCHS["mamba2-130m"], ssm_chunk=q)
+            C.ARCHS["mamba2-130m-tmp"] = cfg
+            rec = record("mamba2-130m-tmp", "train_4k", variant)
+            del C.ARCHS["mamba2-130m-tmp"]
+        else:
+            record("mamba2-130m", "train_4k", variant, over)
+
+    # ---- cell 2: qwen2-moe train (collective-bound) --------------------
+    for variant, over in [
+        ("baseline", {}),
+        ("accum_grads", {"accum_mode": "grads"}),
+        ("seq_parallel", {"sequence_parallel": True}),
+        ("micro1", {"microbatch": 1}),      # no grad accumulation at all
+    ]:
+        record("qwen2-moe-a2.7b", "train_4k", variant, over)
+
+    # ---- cell 3: finex sharded neighborhood plane ----------------------
+    for variant, kw in [
+        ("baseline", {"lower": {}}),
+        ("rowchunk512", {"lower": {"row_chunk": 512}}),
+        ("rowchunk8192", {"lower": {"row_chunk": 8192}}),
+        ("nbins8", {"lower": {"nbins": 8}}),
+    ]:
+        record("finex", "train_4k", variant, finex_kw=kw)
+
+    # ---- bonus: qwen2-72b train (largest dense) ------------------------
+    for variant, over in [
+        ("baseline", {}),
+        ("accum_grads", {"accum_mode": "grads"}),
+        ("no_sqrt_remat", {"remat_blocks": 1}),
+        ("micro_x2", {"microbatch": 32}),
+    ]:
+        record("qwen2-72b", "train_4k", variant, over)
+
+
+if __name__ == "__main__":
+    main()

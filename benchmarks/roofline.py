@@ -1,0 +1,76 @@
+"""Roofline table reader: renders EXPERIMENTS.md §Roofline from the
+dry-run JSON store (benchmarks/results/dryrun.json).
+
+    python -m benchmarks.roofline             # full table
+    python -m benchmarks.roofline --mesh 16x16 --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def load(path: str = RESULTS) -> Dict[str, dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(rec: dict, markdown: bool = False) -> str:
+    r = rec["roofline"]
+    m = rec["memory"]
+    cols = [
+        rec["arch"], rec["shape"], rec["mesh"],
+        f"{r['compute_term_s']:.3f}", f"{r['memory_term_s']:.3f}",
+        f"{r['collective_term_s']:.3f}", r["bottleneck"],
+        f"{r['model_flops_ratio']:.2f}", f"{r['roofline_fraction']:.4f}",
+        f"{r['roofline_fraction_flash']:.4f}",
+        f"{m['peak_per_device'] / 2**30:.1f}",
+    ]
+    return ("| " + " | ".join(cols) + " |") if markdown else ",".join(cols)
+
+
+HEADER = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+          "bottleneck", "6ND/HLO", "frac", "frac_flash", "GiB/dev"]
+
+
+def render(results: Dict[str, dict], mesh: str = None,
+           markdown: bool = False) -> str:
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(HEADER) + " |")
+        lines.append("|" + "---|" * len(HEADER))
+    else:
+        lines.append(",".join(HEADER))
+    skipped = []
+    for key in sorted(results):
+        rec = results[key]
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "ok":
+            lines.append(fmt_row(rec, markdown))
+        elif rec.get("status") == "skipped":
+            skipped.append(f"{rec['arch']}|{rec['shape']}|{rec['mesh']}: "
+                           f"{rec['reason']}")
+    if skipped:
+        lines.append("")
+        lines.append("# skipped cells (mandated):")
+        for s in skipped:
+            lines.append(f"#   {s}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--path", default=RESULTS)
+    args = ap.parse_args()
+    print(render(load(args.path), args.mesh, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

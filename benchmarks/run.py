@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+kernels and the dry-run-derived roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller datasets, skip exactness cross-checks")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    rows = []
+
+    from benchmarks import kernels_bench, paper_tables
+    print("== paper tables (Fig 6/7, Fig 8/9, Table 3, Table 4) ==",
+          flush=True)
+    paper_tables.run(rows, quick=args.quick)
+    for r in rows:
+        print(r)
+
+    print("\n== kernel microbenchmarks ==", flush=True)
+    krows = []
+    kernels_bench.run(krows)
+    for r in krows:
+        print(r)
+
+    if not args.skip_roofline:
+        print("\n== roofline (from multi-pod dry-run store) ==", flush=True)
+        from benchmarks import roofline
+        try:
+            print(roofline.render(roofline.load()))
+        except FileNotFoundError:
+            print("no dry-run results yet: run "
+                  "`python -m repro.launch.dryrun --sweep` first")
+
+    print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fault-tolerance walkthrough: train, get preempted, resume bit-exact.
+
+    PYTHONPATH=src python examples/train_resume.py
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="finex_resume_")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "deepseek-7b", "--smoke", "--steps", "24", "--batch", "4",
+            "--seq-len", "64", "--ckpt-every", "8", "--ckpt-dir", ckpt,
+            "--log-every", "4"]
+    print("=== run 1: preempted hard at step 16 ===")
+    p = subprocess.run(base + ["--preempt-at", "16"], env=ENV, cwd=REPO)
+    assert p.returncode == 42      # the simulated kill
+    print("\n=== run 2: same command — auto-resumes from step 16 ===")
+    subprocess.run(base, env=ENV, cwd=REPO, check=True)
+    print("\n(final losses are bit-identical to an uninterrupted run — "
+          "see tests/test_checkpoint.py::test_preemption_resume_bit_exact)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.elastic import restore_for_mesh
+
+__all__ = ["CheckpointManager", "restore_for_mesh"]

@@ -1,0 +1,42 @@
+"""Elastic restore: resume a run on a *different* mesh/device count.
+
+Checkpoints store logical (global) arrays; restore places each array with
+the sharding derived from the *new* mesh — so a job preempted on 512
+chips can resume on 256, or a single-host smoke run can be reloaded onto
+an 8-device test mesh. This is the checkpoint half of elastic scaling;
+the data half is free because the token stream is a pure function of
+(step, dp_rank, dp_size) (repro/data/tokens.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint.manager import CheckpointManager, _flatten, \
+    _unflatten_like
+from repro.sharding import param_shardings
+
+
+def restore_for_mesh(mgr: CheckpointManager, step: int, like: Any,
+                     mesh: Optional[Mesh],
+                     sharding_for: Optional[Dict[str, NamedSharding]] = None
+                     ) -> Any:
+    """Restore ``like``-shaped state, placing arrays onto ``mesh``.
+
+    ``sharding_for``: optional {flat-path: NamedSharding}; paths not listed
+    are replicated. With mesh=None this is a plain host restore.
+    """
+    flat = mgr.load_flat(step)
+    if mesh is None:
+        return _unflatten_like(like, flat)
+
+    placed: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        sh = (sharding_for or {}).get(path)
+        if sh is None:
+            sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        placed[path] = jax.device_put(arr, sh)
+    return _unflatten_like(like, placed)

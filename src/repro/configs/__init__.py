@@ -1,0 +1,29 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig, SHAPES,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2_moe
+from repro.configs.llama4_maverick_400b_a17b import CONFIG as _llama4
+from repro.configs.minicpm_2b import CONFIG as _minicpm
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.deepseek_7b import CONFIG as _deepseek
+from repro.configs.qwen2_72b import CONFIG as _qwen72
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.chameleon_34b import CONFIG as _chameleon
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+
+ARCHS = {c.name: c for c in [
+    _qwen2_moe, _llama4, _minicpm, _stablelm, _deepseek, _qwen72,
+    _mamba2, _chameleon, _hymba, _hubert,
+]}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "get_arch", "ModelConfig", "RunConfig", "ShapeConfig",
+           "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K"]

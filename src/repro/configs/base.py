@@ -1,0 +1,196 @@
+"""Config system: model / shape / run configs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; input-shape regimes are ``ShapeConfig``s shared across
+architectures. ``RunConfig`` binds (model × shape × mesh × execution knobs)
+and is what the launcher, dry-run and benchmarks consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Literal, Optional, Tuple
+
+VOCAB_PAD = 2048          # pad vocab so TP shards stay MXU-aligned
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "vlm", "hybrid", "audio"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    causal: bool = True              # False → encoder-only (hubert)
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    # --- MoE ---
+    n_experts: int = 0               # routed experts (0 → dense)
+    top_k: int = 0
+    moe_dff: int = 0                 # per-routed-expert hidden dim
+    shared_dff: int = 0              # merged shared-experts hidden dim
+    moe_every: int = 1               # layer i is MoE iff (i+1) % moe_every == 0
+    capacity_factor: float = 1.25
+    expert_parallel: bool = True     # EP (experts sharded) vs expert-TP
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_groups: int = 1
+    # --- hybrid / attention flavor ---
+    swa_window: int = 0              # >0 → sliding-window attention
+    mlp_glu: bool = True             # SwiGLU (False → 2-matrix GELU FFN)
+    # --- modality frontend ---
+    embed_inputs: bool = True        # False → inputs are precomputed
+    #                                  frame/patch embeddings (audio/vlm stub)
+    notes: str = ""
+
+    # ------------------------------------------------------------ derived
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // VOCAB_PAD) * VOCAB_PAD
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def ssm_dinner(self) -> int:
+        return self.ssm_expand * self.d_model if self.has_ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_dinner // self.ssm_headdim if self.has_ssm else 0
+
+    @property
+    def scan_group(self) -> int:
+        """Layers per scan step (MoE interleave forms one group)."""
+        return self.moe_every if self.is_moe else 1
+
+    def param_count(self) -> int:
+        """Analytic parameter count (unpadded vocab) for 6ND rooflines."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.qkv_bias:
+            per_attn += self.n_heads * hd + 2 * self.n_kv_heads * hd
+        per_dense_mlp = (3 if self.mlp_glu else 2) * d * self.d_ff
+        per_moe = (self.n_experts * 3 * d * self.moe_dff
+                   + 3 * d * self.shared_dff + d * self.n_experts)
+        dinner = self.ssm_dinner
+        per_ssm = (d * (2 * dinner + 2 * self.ssm_groups * self.ssm_state
+                        + self.ssm_heads)
+                   + dinner * d + 4 * (dinner + 2 * self.ssm_groups * self.ssm_state)
+                   + 3 * self.ssm_heads) if self.has_ssm else 0
+        for i in range(self.n_layers):
+            total += 2 * d                       # norms
+            if self.has_attention:
+                total += per_attn
+            if self.has_ssm:
+                total += per_ssm
+            if self.is_moe and (i + 1) % self.moe_every == 0:
+                total += per_moe
+            elif self.family != "ssm":
+                total += per_dense_mlp
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — 6·N_active·D for MoE rooflines."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        inactive = ((self.n_experts - self.top_k) * 3 * d * self.moe_dff
+                    * (self.n_layers // self.moe_every))
+        return self.param_count() - inactive
+
+    def reduced(self, **over) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw: dict = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2 * self.scan_group),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+        )
+        if self.is_moe:
+            kw.update(n_experts=4, top_k=min(self.top_k, 2), moe_dff=64,
+                      shared_dff=128 if self.shared_dff else 0)
+        if self.has_ssm:
+            kw.update(ssm_state=16, ssm_headdim=32, ssm_chunk=32)
+        if self.swa_window:
+            kw.update(swa_window=16)
+        kw.update(over)
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    multi_pod: bool = False
+    microbatch: int = 0              # 0 → auto (see launch.dryrun)
+    remat: bool = True
+    remat_blocks: int = 0            # √-remat: nested scan, only block
+    #                                  inputs saved (0 → auto by act size)
+    fsdp_over_pod: bool = False      # extend FSDP across the pod axis
+    #                                  (400B-class models on multi-pod)
+    sequence_parallel: bool = False  # shard long-seq activations on 'model'
+    attn_chunk: int = 1024           # q-chunk for chunked attention
+    full_attn_max_seq: int = 8192    # above this, chunked attention
+    grad_compression: bool = False   # int8 DP gradient compression
+    accum_mode: str = "loss"         # "loss": grad of scanned loss (single
+    #                                  grad buffer + one DP reduction/step)
+    #                                  "grads": per-micro grad + explicit
+    #                                  accumulator (§Perf baseline variant)
+    flash_attention: bool = False    # account attention dots as VMEM-fused
+    #                                  (Pallas flash kernels on real TPU)
+    dtype: str = "bfloat16"
+
+    def skip_reason(self) -> Optional[str]:
+        """Mandated shape skips (DESIGN.md §Arch-applicability)."""
+        m, s = self.model, self.shape
+        if s.kind == "decode" and not m.causal:
+            return "encoder-only architecture has no decode step"
+        full_attn = m.has_attention and m.swa_window == 0
+        if s.seq_len > 100_000 and full_attn:
+            return "long_500k needs sub-quadratic attention (full-attention arch)"
+        return None

@@ -1,0 +1,13 @@
+"""Chameleon-34B  [arXiv:2405.09818] — early-fusion VLM.
+
+The VQ image tokenizer is a frontend stub: image patches arrive as token
+ids in the shared 65536 vocab (early fusion), so the backbone is a plain
+dense decoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab=65536, head_dim=128,
+    notes="early fusion; VQ image tokens share the text vocab")

@@ -1,0 +1,14 @@
+"""HuBERT-XLarge  [arXiv:2106.07447] — encoder-only audio backbone.
+
+The CNN waveform frontend is a stub: input_specs() feeds precomputed
+frame embeddings (B, T, 1280). Vocab 504 = masked-prediction cluster
+targets. No decode shapes (encoder-only), 2-matrix GELU FFN, no RoPE.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, d_ff=5120,
+    vocab=504, head_dim=80, causal=False, mlp_glu=False,
+    embed_inputs=False,
+    notes="encoder-only; frame-embedding frontend stub; GELU FFN")

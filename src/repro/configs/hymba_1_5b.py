@@ -1,0 +1,15 @@
+"""Hymba-1.5B  [arXiv:2411.13676] — parallel attention + mamba heads.
+
+Per DESIGN.md: all attention is sliding-window (1024) with the SSM path
+carrying global context (the published model keeps 3 full-attn layers;
+we deviate so long_500k is honestly sub-quadratic). ssm_expand=1 so the
+25 SSM heads run parallel to the 25 attention heads at matched width.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab=32001, head_dim=64, swa_window=1024,
+    ssm_state=16, ssm_expand=1, ssm_headdim=64, ssm_chunk=128,
+    notes="parallel SWA-attn + mamba heads; long_500k capable")

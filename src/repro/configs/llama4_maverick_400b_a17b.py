@@ -1,0 +1,16 @@
+"""Llama-4 Maverick 400B-A17B  [hf:meta-llama/Llama-4-*; unverified].
+
+128 routed experts top-1 + 1 shared expert, MoE every other layer
+(interleave step 2), dense layers use d_ff 16384. Early fusion: image
+tokens share the 202048 vocab (frontend stub). EP: 128/16 = 8 experts
+per model shard.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=16384,
+    vocab=202048, head_dim=128, rope_theta=500_000.0,
+    n_experts=128, top_k=1, moe_dff=8192, shared_dff=8192, moe_every=2,
+    expert_parallel=True,
+    notes="MoE every 2nd layer; 128e top-1 + shared; early-fusion vocab")

@@ -1,0 +1,12 @@
+"""Mamba2-130M  [arXiv:2405.21060] — SSD, attention-free.
+
+O(1)-state decode makes this one of the two long_500k-capable archs.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab=50280, tie_embeddings=True,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=128,
+    notes="SSD (state-space duality); pure SSM blocks, no FFN sublayer")

@@ -1,0 +1,9 @@
+"""MiniCPM-2B  [arXiv:2404.06395]. Tied embeddings; trains with the WSD
+(warmup-stable-decay) schedule from the paper (repro.train.optimizer)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36, d_ff=5760,
+    vocab=122753, head_dim=64, tie_embeddings=True,
+    notes="llama-like; WSD schedule; 36 heads pad unevenly -> fused-dim TP")

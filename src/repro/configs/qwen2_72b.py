@@ -1,0 +1,8 @@
+"""Qwen2-72B  [arXiv:2407.10671] — GQA (64 q / 8 kv heads), QKV bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568,
+    vocab=152064, head_dim=128, qkv_bias=True, rope_theta=1_000_000.0,
+    notes="largest dense cell; decode_32k uses flash-decode seq-sharded cache")

@@ -1,0 +1,15 @@
+"""Qwen1.5-MoE-A2.7B  [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+60 routed experts (top-4) + 4 shared experts merged into one 5632-wide
+SwiGLU with a sigmoid gate. 60 does not divide the 16-way model axis, so
+this config uses expert-TP (expert hidden dims sharded: 1408/16 = 88).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=151936, head_dim=128, qkv_bias=True, rope_theta=1_000_000.0,
+    n_experts=60, top_k=4, moe_dff=1408, shared_dff=5632, moe_every=1,
+    expert_parallel=False,
+    notes="4 shared + 60 routed top-4; qkv bias; expert-TP (60 % 16 != 0)")

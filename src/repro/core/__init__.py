@@ -1,0 +1,16 @@
+"""FINEX — the paper's contribution: exact, flexible density-based
+clustering behind a linear-space index (Thiel et al., SIGMOD 2023)."""
+from repro.core.ordering import ClusterOrdering, FinexOrdering
+from repro.core.build import finex_build, optics_build
+from repro.core.extract import query_clustering
+from repro.core.queries import eps_star_query, minpts_star_query, QueryStats
+from repro.core.dbscan import dbscan, dbscan_from_csr, filtered_counts
+from repro.core.equivalence import (assert_equivalent_exact, border_recall,
+                                    canonical_core_partition)
+
+__all__ = [
+    "ClusterOrdering", "FinexOrdering", "finex_build", "optics_build",
+    "query_clustering", "eps_star_query", "minpts_star_query", "QueryStats",
+    "dbscan", "dbscan_from_csr", "filtered_counts",
+    "assert_equivalent_exact", "border_recall", "canonical_core_partition",
+]

@@ -1,0 +1,203 @@
+"""FINEX-build — Algorithms 2 and 3 of the paper.
+
+The ordering sweep is inherently sequential (a stable priority queue with
+re-insertion of processed non-cores) and runs on the host; all distance
+work — counts, CSR neighborhoods, core distances — was produced by the
+device tile sweep in ``repro.neighbors.engine`` beforehand, mirroring the
+paper's "materialize neighborhoods in a separate step in advance" strategy.
+
+Fidelity notes:
+  * The priority queue is *stable*: ties pop in insertion order, and a
+    priority decrease counts as a fresh insertion. Theorem 5.4 requires
+    stability; tests/test_paper_properties.py checks the consequence
+    (former-cores classified identically by FINEX and OPTICS).
+  * Case 3 of Algorithm 3 re-inserts processed non-cores whenever a later
+    core lowers their reachability; each non-core re-enters at most
+    MinPts−1 times, so the asymptotic complexity is unchanged (§5.1).
+  * The finder reference F is updated for *every* neighbor of *every*
+    processed core (lines 16–17 of Alg. 3), so at termination F[o] is the
+    densest core reaching o — the datum that lets MinPts*-queries place
+    border objects without any neighborhood computation (§5.4).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.ordering import ClusterOrdering, FinexOrdering
+from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
+
+
+class _StablePQ:
+    """Min-heap keyed by (priority, insertion-seq) with lazy deletion."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._best: dict[int, float] = {}    # obj -> current live priority
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+    def __contains__(self, obj: int) -> bool:
+        return obj in self._best
+
+    def priority(self, obj: int) -> float:
+        return self._best[obj]
+
+    def insert(self, obj: int, priority: float) -> None:
+        self._best[obj] = priority
+        heapq.heappush(self._heap, (priority, next(self._seq), obj))
+
+    # a decrease re-inserts: the element's tie-break order is its update time
+    decrease = insert
+
+    def pop(self) -> Tuple[int, float]:
+        while True:
+            priority, _, obj = heapq.heappop(self._heap)
+            if self._best.get(obj) == priority:
+                del self._best[obj]
+                return obj, priority
+            # stale entry from a later decrease or a removal — skip
+
+
+def _prepare(engine: NeighborEngine, eps: float, minpts: int,
+             csr: Optional[CSRNeighborhoods] = None):
+    if csr is None:
+        counts, csr = engine.materialize(eps)
+    else:
+        counts = np.zeros(engine.n, dtype=np.int64)
+        for p in range(engine.n):
+            idx = csr.indices[csr.indptr[p]:csr.indptr[p + 1]]
+            counts[p] = engine.weights[idx].sum()
+    C = NeighborEngine.core_distances(csr, counts, engine.weights, minpts)
+    return counts, csr, C
+
+
+def finex_build(engine: NeighborEngine, eps: float, minpts: int,
+                csr: Optional[CSRNeighborhoods] = None
+                ) -> Tuple[FinexOrdering, CSRNeighborhoods]:
+    """Algorithm 2 (with Algorithm 3 queue updates). Returns (index, CSR)."""
+    n = engine.n
+    counts, csr, C = _prepare(engine, eps, minpts, csr)
+
+    R = np.full(n, np.inf, dtype=np.float64)
+    N = counts.astype(np.int64)               # o.N — weighted |N_ε(o)|
+    F = np.arange(n, dtype=np.int64)          # o.F — init: self-reference
+    # paper initializes o.N to 0 until processed; for the F-comparison we
+    # track the "visible" N exactly as Algorithm 2 does:
+    visible_N = np.zeros(n, dtype=np.int64)
+    processed = np.zeros(n, dtype=bool)
+    slot = np.full(n, -1, dtype=np.int64)     # position in order_list or -1
+    order_list: list[int] = []                # with tombstones (-1)
+    is_core = np.isfinite(C)
+
+    pq = _StablePQ()
+
+    def q_update(c: int) -> None:
+        """Algorithm 3: PriorityQueue::update(c, N_ε(c), Õ)."""
+        s, e = csr.indptr[c], csr.indptr[c + 1]
+        nbrs = csr.indices[s:e]
+        dists = csr.dists[s:e]
+        Cc = C[c]
+        for q, d in zip(nbrs, dists):
+            rdist = Cc if Cc >= d else float(d)
+            if not processed[q] and q not in pq:
+                R[q] = rdist
+                pq.insert(int(q), rdist)
+            elif q in pq:
+                if rdist < R[q]:
+                    R[q] = rdist
+                    pq.decrease(int(q), rdist)
+            else:  # processed
+                if not is_core[q] and rdist < R[q]:
+                    # globally minimize non-core reachability: re-process
+                    processed[q] = False
+                    order_list[slot[q]] = -1       # tombstone
+                    slot[q] = -1
+                    R[q] = rdist
+                    pq.insert(int(q), rdist)
+            if visible_N[c] > visible_N[F[q]]:
+                F[q] = c
+
+    def append(o: int) -> None:
+        processed[o] = True
+        slot[o] = len(order_list)
+        order_list.append(o)
+        visible_N[o] = N[o]
+
+    for o in range(n):
+        if processed[o]:
+            continue
+        # o.C, o.N computed; o.R = inf (outer-loop object)
+        append(o)
+        if is_core[o]:
+            q_update(o)
+            while len(pq):
+                p, _ = pq.pop()
+                append(p)
+                if is_core[p]:
+                    q_update(p)
+
+    order = np.asarray([x for x in order_list if x >= 0], dtype=np.int64)
+    assert order.shape[0] == n
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    idx = FinexOrdering(eps=float(eps), minpts=int(minpts), order=order,
+                        pos=pos, C=C.astype(np.float64), R=R,
+                        N=N, F=F)
+    return idx, csr
+
+
+def optics_build(engine: NeighborEngine, eps: float, minpts: int,
+                 csr: Optional[CSRNeighborhoods] = None
+                 ) -> Tuple[ClusterOrdering, CSRNeighborhoods]:
+    """The OPTICS baseline (§3.2): same sweep, no re-insertion, no (N, F).
+
+    Kept as a separate function rather than a flag so the two algorithms
+    can be diffed side by side; they share the stable queue implementation,
+    which Theorem 5.4 relies on.
+    """
+    n = engine.n
+    counts, csr, C = _prepare(engine, eps, minpts, csr)
+
+    R = np.full(n, np.inf, dtype=np.float64)
+    processed = np.zeros(n, dtype=bool)
+    order_list: list[int] = []
+    is_core = np.isfinite(C)
+    pq = _StablePQ()
+
+    def q_update(c: int) -> None:
+        s, e = csr.indptr[c], csr.indptr[c + 1]
+        Cc = C[c]
+        for q, d in zip(csr.indices[s:e], csr.dists[s:e]):
+            rdist = Cc if Cc >= d else float(d)
+            if not processed[q] and q not in pq:
+                R[q] = rdist
+                pq.insert(int(q), rdist)
+            elif q in pq and rdist < R[q]:
+                R[q] = rdist
+                pq.decrease(int(q), rdist)
+
+    for o in range(n):
+        if processed[o]:
+            continue
+        processed[o] = True
+        order_list.append(o)
+        if is_core[o]:
+            q_update(o)
+            while len(pq):
+                p, _ = pq.pop()
+                processed[p] = True
+                order_list.append(p)
+                if is_core[p]:
+                    q_update(p)
+
+    order = np.asarray(order_list, dtype=np.int64)
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    return ClusterOrdering(eps=float(eps), minpts=int(minpts), order=order,
+                           pos=pos, C=C.astype(np.float64), R=R), csr

@@ -1,0 +1,85 @@
+"""Exact-clustering equivalence modulo ambiguous border assignment.
+
+Definition 3.5 pins down everything except which cluster an *ambiguous*
+border object lands in. Two exact clusterings of the same (ε, MinPts)
+problem are therefore equivalent iff:
+
+  1. their noise sets are identical,
+  2. they partition the core objects identically,
+  3. every border object is assigned, in both, to a cluster containing a
+     core whose ε-ball covers it (validity).
+
+This is the correctness contract used by the tests to compare FINEX
+queries against the DBSCAN oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.dbscan import filtered_counts
+from repro.neighbors.engine import CSRNeighborhoods
+
+
+def canonical_core_partition(labels: np.ndarray, core: np.ndarray
+                             ) -> set[frozenset]:
+    out: dict[int, set] = {}
+    for obj in np.nonzero(core)[0]:
+        l = labels[obj]
+        assert l >= 0, f"core object {obj} labeled noise"
+        out.setdefault(int(l), set()).add(int(obj))
+    return {frozenset(v) for v in out.values()}
+
+
+def border_assignment_valid(labels: np.ndarray, core: np.ndarray,
+                            csr: CSRNeighborhoods, eps_star: float) -> bool:
+    """Every labeled non-core must touch a same-labeled core within ε*."""
+    for obj in np.nonzero((labels >= 0) & (~core))[0]:
+        s, e = csr.indptr[obj], csr.indptr[obj + 1]
+        nbrs = csr.indices[s:e]
+        good = csr.dists[s:e] <= np.float32(eps_star)
+        ok = np.any(core[nbrs[good]] & (labels[nbrs[good]] == labels[obj]))
+        if not ok:
+            return False
+    return True
+
+
+def assert_equivalent_exact(labels_a: np.ndarray, labels_b: np.ndarray,
+                            csr: CSRNeighborhoods, weights: np.ndarray,
+                            eps_star: float, minpts: int,
+                            context: str = "") -> None:
+    counts = filtered_counts(csr, weights, eps_star)
+    core = counts >= minpts
+
+    noise_a = set(np.nonzero(labels_a < 0)[0].tolist())
+    noise_b = set(np.nonzero(labels_b < 0)[0].tolist())
+    assert noise_a == noise_b, (
+        f"{context}: noise sets differ "
+        f"(only-A={sorted(noise_a - noise_b)[:10]}, "
+        f"only-B={sorted(noise_b - noise_a)[:10]})")
+
+    pa = canonical_core_partition(labels_a, core)
+    pb = canonical_core_partition(labels_b, core)
+    assert pa == pb, f"{context}: core partitions differ"
+
+    assert border_assignment_valid(labels_a, core, csr, eps_star), \
+        f"{context}: invalid border assignment in A"
+    assert border_assignment_valid(labels_b, core, csr, eps_star), \
+        f"{context}: invalid border assignment in B"
+
+
+def border_recall(labels: np.ndarray, oracle: np.ndarray, core: np.ndarray
+                  ) -> float:
+    """Fraction of the oracle's border objects that ``labels`` clusters.
+
+    The paper's Table 3 metric: OPTICS misses border objects (labels them
+    noise); FINEX must never miss a non-core border (Thm 5.3) and misses
+    only former-cores.
+    """
+    border = (oracle >= 0) & (~core)
+    total = int(border.sum())
+    if total == 0:
+        return 1.0
+    hit = int(((labels >= 0) & border).sum())
+    return hit / total

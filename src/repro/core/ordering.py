@@ -1,0 +1,77 @@
+"""The FINEX-ordering data structure (Definition 5.1).
+
+A permutation of the dataset where every object x carries the quintuple
+(P, C, R, N, F):
+
+  P — permutation number (position in processing order)
+  C — core distance w.r.t. the generating (ε, MinPts)        (Def. 3.7)
+  R — reachability distance; *globally minimized over all of D for
+      non-core objects* (the key delta vs. OPTICS)            (Def. 5.1)
+  N — ε-neighborhood size |N_ε(x)| (weighted by duplicates)
+  F — finder reference: the densest core that reaches x       (§5.4)
+
+Stored as a struct-of-arrays over object ids — linear space, trivially
+serializable, and the Alg.-1 linear scan vectorizes over it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class ClusterOrdering:
+    """OPTICS-ordering (Def. 4.1): the (P, C, R) subset of FINEX."""
+    eps: float
+    minpts: int
+    order: np.ndarray                 # (n,) object ids in processing order
+    pos: np.ndarray                   # (n,) P attribute: pos[obj] = rank
+    C: np.ndarray                     # (n,) core distance, inf for non-core
+    R: np.ndarray                     # (n,) reachability distance
+
+    @property
+    def n(self) -> int:
+        return int(self.order.shape[0])
+
+    def validate(self) -> None:
+        n = self.n
+        assert self.order.shape == (n,) and self.pos.shape == (n,)
+        assert np.array_equal(np.sort(self.order), np.arange(n)), \
+            "order must be a permutation"
+        assert np.array_equal(self.pos[self.order], np.arange(n)), \
+            "pos must invert order"
+        assert np.all((self.C[self.C != np.inf] <= self.eps + 1e-6)), \
+            "finite core distances must be <= generating eps"
+
+
+@dataclass
+class FinexOrdering(ClusterOrdering):
+    """Full FINEX index: adds neighborhood sizes and finder references."""
+    N: np.ndarray = field(default=None)   # (n,) weighted |N_ε(x)|
+    F: np.ndarray = field(default=None)   # (n,) finder reference object id
+
+    def validate(self) -> None:
+        super().validate()
+        n = self.n
+        assert self.N.shape == (n,) and self.F.shape == (n,)
+        core = np.isfinite(self.C)
+        # F is a self-reference exactly for objects no core reaches;
+        # noise w.r.t. (ε, MinPts) always self-references (Def. 5.1).
+        assert np.all((self.F >= 0) & (self.F < n))
+        # every non-self finder must be a core object
+        nonself = self.F != np.arange(n)
+        assert np.all(core[self.F[nonself]]), "finder refs must be cores"
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, eps=self.eps, minpts=self.minpts,
+                            order=self.order, pos=self.pos, C=self.C,
+                            R=self.R, N=self.N, F=self.F)
+
+    @classmethod
+    def load(cls, path: str) -> "FinexOrdering":
+        z = np.load(path)
+        return cls(eps=float(z["eps"]), minpts=int(z["minpts"]),
+                   order=z["order"], pos=z["pos"], C=z["C"], R=z["R"],
+                   N=z["N"], F=z["F"])

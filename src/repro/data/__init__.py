@@ -1,0 +1,4 @@
+from repro.data.synthetic import (gaussian_mixture, heavy_tail_sets,
+                                  two_scale_blobs)
+
+__all__ = ["gaussian_mixture", "heavy_tail_sets", "two_scale_blobs"]

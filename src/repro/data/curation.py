@@ -1,0 +1,101 @@
+"""FINEX-powered training-data curation (the paper ↔ LM-stack bridge).
+
+Documents are modeled as *sets of token n-grams* — exactly the paper's
+process-mining set modeling (a trace becomes the set of its transitions) —
+and clustered under Jaccard distance. Near-duplicate clusters are
+downsampled to ``keep_per_cluster`` representatives; noise (the unique
+long tail) is kept in full.
+
+The point of using FINEX rather than one-shot DBSCAN: dedup aggressiveness
+is a *hyperparameter*. With the index built once at a permissive
+(ε, MinPts), every tighter setting — ε* ≤ ε or MinPts* ≥ MinPts — is an
+exact re-clustering in a fraction of the cost (``CurationReport.retune``),
+so the data pipeline can sweep dedup levels interactively, which is the
+paper's headline capability applied to LM training data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import eps_star_query, minpts_star_query, query_clustering
+from repro.core.build import finex_build
+from repro.core.ordering import FinexOrdering
+from repro.neighbors.bitset import pack_sets
+from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
+
+
+def docs_to_ngram_sets(docs: Sequence[Sequence[int]], ngram: int = 2,
+                       universe: int = 1 << 16) -> List[set]:
+    """Token sequences → sets of hashed n-grams (the set modeling)."""
+    out = []
+    for doc in docs:
+        s = set()
+        toks = list(doc)
+        for i in range(len(toks) - ngram + 1):
+            h = 0
+            for t in toks[i:i + ngram]:
+                h = (h * 1000003 + int(t)) & 0x7FFFFFFF
+            s.add(h % universe)
+        out.append(s or {0})
+    return out
+
+
+@dataclass
+class CurationReport:
+    index: FinexOrdering
+    csr: CSRNeighborhoods
+    engine: NeighborEngine
+    labels: np.ndarray
+    kept_indices: np.ndarray
+    keep_per_cluster: int
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.labels.max()) + 1 if (self.labels >= 0).any() else 0
+
+    @property
+    def n_noise(self) -> int:
+        return int((self.labels < 0).sum())
+
+    def retune(self, eps_star: Optional[float] = None,
+               minpts_star: Optional[int] = None) -> "CurationReport":
+        """Exact re-clustering at new parameters — NO index rebuild."""
+        if eps_star is not None and minpts_star is not None:
+            raise ValueError("tune one parameter per query (paper §5)")
+        if eps_star is not None:
+            labels = eps_star_query(self.index, self.engine, eps_star)
+        elif minpts_star is not None:
+            labels = minpts_star_query(self.index, self.csr, minpts_star)
+        else:
+            labels = query_clustering(self.index, self.index.eps)
+        kept = _select_survivors(labels, self.keep_per_cluster)
+        return replace(self, labels=labels, kept_indices=kept)
+
+
+def _select_survivors(labels: np.ndarray, keep: int) -> np.ndarray:
+    kept = []
+    seen: dict[int, int] = {}
+    for i, l in enumerate(labels):
+        if l < 0:
+            kept.append(i)                    # noise = unique docs: keep
+        elif seen.get(int(l), 0) < keep:
+            kept.append(i)
+            seen[int(l)] = seen.get(int(l), 0) + 1
+    return np.asarray(kept, dtype=np.int64)
+
+
+def curate_corpus(docs: Sequence[Sequence[int]], eps: float = 0.3,
+                  minpts: int = 8, ngram: int = 2,
+                  keep_per_cluster: int = 2) -> CurationReport:
+    """Build the FINEX index over the corpus and apply dedup once."""
+    sets = docs_to_ngram_sets(docs, ngram=ngram)
+    bits, sizes = pack_sets(sets)
+    engine = NeighborEngine((bits, sizes), metric="jaccard")
+    index, csr = finex_build(engine, eps, minpts)
+    labels = query_clustering(index, eps)     # exact (Cor. 5.5)
+    kept = _select_survivors(labels, keep_per_cluster)
+    return CurationReport(index=index, csr=csr, engine=engine, labels=labels,
+                          kept_indices=kept, keep_per_cluster=keep_per_cluster)

@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention with sliding window (hymba / long-context).
+
+Online-softmax attention: the (BQ × BK) score tile lives only in VMEM;
+running max/denominator/accumulator carry across key blocks. With a
+window w, each query block visits only ⌈(w + BQ)/BK⌉ key blocks —
+O(T·w) work and O(T·hd) HBM traffic, never O(T²).
+
+This kernel is what the dry-run's "flash" roofline variant models
+(launch/hlo_analysis.py): on real TPUs it replaces the XLA attention path
+of models/layers.py (the portable oracle), which materializes scores in
+HBM. Validated in interpret mode against ref.sliding_window_attention.
+
+Layout: inputs are reshaped to (B·H, T, hd) in the wrapper; grid is
+(B·H, T/BQ); K/V stream through VMEM in BK-row slices of the per-head
+(T, hd) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(window, bq, bk, causal, scale, q_ref, k_ref, v_ref, o_ref):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale                  # (BQ, hd)
+    hd = q.shape[-1]
+
+    if window > 0:
+        # key span of one query block: (bq-1) diagonal + (window-1) back
+        nb = (window + bq + bk - 2) // bk + 1
+    else:
+        # causal full attention: all blocks up to the diagonal; T static
+        nb = (k_ref.shape[1] + bk - 1) // bk
+
+    def body(j, carry):
+        m, l, acc = carry
+        if window > 0:
+            kb_last = (qi * bq + bq - 1) // bk                # diagonal end
+            kb = kb_last + j - (nb - 1)                       # trailing band
+        else:
+            kb = j
+        valid_block = kb >= 0
+        if window == 0 and causal:
+            valid_block = valid_block & (kb * bk <= qi * bq + bq - 1)
+        kstart = jnp.maximum(kb, 0) * bk
+        kblk = k_ref[0, pl.ds(kstart, bk), :].astype(jnp.float32)  # (BK, hd)
+        vblk = v_ref[0, pl.ds(kstart, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kstart + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.full((bq, bk), valid_block)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, vblk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nb, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "bq", "bk",
+                                             "interpret"))
+def flash_swa_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int = 0, causal: bool = True,
+                     bq: int = 128, bk: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """(B, T, H, hd) attention with KV repeated to H heads already.
+
+    window=0 → plain causal flash attention; window>0 → sliding window.
+    """
+    B, T, H, hd = q.shape
+    assert T % bq == 0 and T % bk == 0, (T, bq, bk)
+    scale = hd ** -0.5
+    qr = jnp.moveaxis(q, 2, 1).reshape(B * H, T, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * H, T, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * H, T, hd)
+    grid = (B * H, T // bq)
+    kernel = functools.partial(_flash_kernel, window, bq, bk, causal, scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bq, hd), lambda bh, qi: (bh, qi, 0)),
+                  pl.BlockSpec((1, T, hd), lambda bh, qi: (bh, 0, 0)),
+                  pl.BlockSpec((1, T, hd), lambda bh, qi: (bh, 0, 0))],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(B, H, T, hd), 1, 2)
+
+
+def flash_swa_attention(q, k, v, *, window: int = 0, causal: bool = True,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """GQA-aware wrapper: repeats KV heads then calls the kernel."""
+    H = q.shape[2]
+    kv = k.shape[2]
+    if kv != H:
+        k = jnp.repeat(k, H // kv, axis=2)
+        v = jnp.repeat(v, H // kv, axis=2)
+    return flash_swa_pallas(q, k, v, window=window, causal=causal,
+                            bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,67 @@
+"""Public jit'd wrappers over the Pallas kernels with jnp fallbacks.
+
+On the TPU target the Pallas kernels run compiled; on this CPU container
+they run in interpret mode (Python-level execution of the kernel body),
+which is semantically exact but slow — so the default execution path on CPU
+is the pure-jnp oracle from ``ref.py`` (same math, XLA-compiled). Kernel
+tests exercise the interpret path explicitly against the oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pairwise import pairwise_euclidean_pallas, eps_count_pallas
+from repro.kernels.jaccard import (jaccard_distance_pallas,
+                                   jaccard_eps_count_pallas)
+from repro.kernels.kthdist import dist_histogram_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def pairwise_euclidean(x, y, use_pallas: bool = False):
+    if use_pallas:
+        return pairwise_euclidean_pallas(x, y, interpret=not _on_tpu())
+    return ref.pairwise_euclidean(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def jaccard_distance(bits_a, size_a, bits_b, size_b, use_pallas: bool = False):
+    if use_pallas:
+        return jaccard_distance_pallas(bits_a, size_a, bits_b, size_b,
+                                       interpret=not _on_tpu())
+    return ref.jaccard_distance(bits_a, size_a, bits_b, size_b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def eps_count(x, y, eps, weights, use_pallas: bool = False):
+    """Weighted |N_eps| counts of x-rows against corpus y (euclidean)."""
+    if use_pallas:
+        return eps_count_pallas(x, y, eps, weights, interpret=not _on_tpu())
+    d = ref.pairwise_euclidean(x, y)
+    return jnp.where(d <= eps, weights[None, :].astype(jnp.float32), 0.0).sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def jaccard_eps_count(bits_a, size_a, bits_b, size_b, eps, weights,
+                      use_pallas: bool = False):
+    if use_pallas:
+        return jaccard_eps_count_pallas(bits_a, size_a, bits_b, size_b, eps,
+                                        weights, interpret=not _on_tpu())
+    d = ref.jaccard_distance(bits_a, size_a, bits_b, size_b)
+    return jnp.where(d <= eps, weights[None, :].astype(jnp.float32), 0.0).sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "use_pallas"))
+def dist_histogram(x, y, edges, nbins: int = 16, use_pallas: bool = False):
+    if use_pallas:
+        return dist_histogram_pallas(x, y, edges, nbins=nbins,
+                                     interpret=not _on_tpu())
+    d = ref.pairwise_euclidean(x, y)
+    return ref.tile_histogram(d, edges).astype(jnp.float32)

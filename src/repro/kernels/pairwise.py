@@ -1,0 +1,118 @@
+"""Pallas TPU kernels for the pairwise-Euclidean distance plane.
+
+The TPU-native formulation of the paper's neighborhood computation: the
+(m × n) distance matrix is produced in (TM × TN) VMEM tiles, where the cross
+term is a single MXU matmul per tile pair:
+
+    d²(x, y) = ‖x‖² + ‖y‖² − 2·x·yᵀ
+
+Two kernels:
+  * ``pairwise_euclidean_pallas`` — emits the distance tile (for CSR
+    extraction / verification sub-matrices).
+  * ``eps_count_pallas`` — *fused* threshold counting: the (TM × TN) tile
+    never leaves VMEM; only per-row weighted neighbor counts |N_ε| are
+    written. This is the build-time hot loop (the paper's o.N attribute).
+
+Tiles default to 128×128: MXU-aligned on the matmul dims, and the fp32
+working set (TM·d + TN·d + TM·TN floats, d ≤ 4k) stays well under the
+~16 MiB/core VMEM budget of a v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_to(a: jax.Array, mult: int, axis: int, value=0.0) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _dist_tile_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                       # (TM, d)
+    y = y_ref[...].astype(jnp.float32)                       # (TN, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)              # (TM, 1)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T            # (1, TN)
+    cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def pairwise_euclidean_pallas(x: jax.Array, y: jax.Array,
+                              tm: int = 128, tn: int = 128,
+                              interpret: bool = False) -> jax.Array:
+    """(m, d) × (n, d) → (m, n) float32 Euclidean distances."""
+    m, d = x.shape
+    n, _ = y.shape
+    xp = _pad_to(x.astype(jnp.float32), tm, 0)
+    yp = _pad_to(y.astype(jnp.float32), tn, 0)
+    grid = (xp.shape[0] // tm, yp.shape[0] // tn)
+    out = pl.pallas_call(
+        _dist_tile_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _count_kernel(n_valid, tn, x_ref, y_ref, eps_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    dist = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))    # (TM, TN)
+    col = j * tn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    w = w_ref[...].astype(jnp.float32)                           # (1, TN)
+    hit = jnp.where((dist <= eps_ref[0, 0]) & (col < n_valid), w, 0.0)
+    o_ref[...] += jnp.sum(hit, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def eps_count_pallas(x: jax.Array, y: jax.Array, eps: jax.Array,
+                     weights: jax.Array, tm: int = 128, tn: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """Fused |N_ε| count: (m,) float32 weighted neighbor counts of x in y.
+
+    The distance tile stays in VMEM; HBM traffic is O(m·d + n·d + m) instead
+    of O(m·n). ``weights`` are the paper's duplicate counts (§6).
+    """
+    m, d = x.shape
+    n, _ = y.shape
+    xp = _pad_to(x.astype(jnp.float32), tm, 0)
+    yp = _pad_to(y.astype(jnp.float32), tn, 0)
+    wp = _pad_to(weights.astype(jnp.float32)[None, :], tn, 1)
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    grid = (xp.shape[0] // tm, yp.shape[0] // tn)
+    kernel = functools.partial(_count_kernel, n, tn)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, tn), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+        interpret=interpret,
+    )(xp, yp, eps_arr, wp)
+    return out[:m, 0]

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each TPU kernel in ``pairwise.py``,
+``jaccard.py``, ``kthdist.py`` and ``flash_swa.py`` must agree with the
+corresponding function here (see tests/test_kernels.py). They are also the
+fast execution path on CPU, where Pallas runs in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_euclidean(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared Euclidean distances between rows of x (m,d) and y (n,d).
+
+    Uses the MXU-friendly expansion ||x||^2 + ||y||^2 - 2 x.y^T with a
+    clamp at zero (the expansion can go slightly negative in floating point).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)        # (m, 1)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T      # (1, n)
+    d2 = x2 + y2 - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def pairwise_euclidean(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.sqrt(pairwise_sq_euclidean(x, y))
+
+
+def jaccard_distance(bits_a: jax.Array, size_a: jax.Array,
+                     bits_b: jax.Array, size_b: jax.Array) -> jax.Array:
+    """Jaccard distances between packed-bitmap set rows.
+
+    bits_*: (m, W) / (n, W) uint32 packed membership bitmaps.
+    size_*: (m,) / (n,) int32 set cardinalities (= popcount of the row).
+    Returns (m, n) float32 with d_J(r, s) = 1 - |r ∩ s| / |r ∪ s|.
+    Empty-vs-empty pairs get distance 0 (identical sets).
+    """
+    inter = _jaccard_intersections(bits_a, bits_b)
+    union = size_a[:, None] + size_b[None, :] - inter
+    return jnp.where(union > 0, 1.0 - inter / union, 0.0).astype(jnp.float32)
+
+
+def _jaccard_intersections(bits_a: jax.Array, bits_b: jax.Array,
+                           wc: int = 2) -> jax.Array:
+    """|r ∩ s| for all pairs: (m, n) int32 via AND + popcount.
+
+    Words are processed in slices of ``wc`` so the broadcast intermediate
+    is (m, n, wc), not (m, n, W) — on the 64k-corpus distributed tiles the
+    full broadcast would be tens of GB.
+    """
+    m, W = bits_a.shape
+    n = bits_b.shape[0]
+    acc = jnp.zeros((m, n), jnp.int32)
+    for w0 in range(0, W, wc):
+        part = jax.lax.population_count(
+            bits_a[:, None, w0:w0 + wc] & bits_b[None, :, w0:w0 + wc]
+        ).astype(jnp.int32).sum(-1)
+        acc = acc + part
+    return acc
+
+
+def eps_count(dists: jax.Array, eps: jax.Array) -> jax.Array:
+    """Number of entries per row with distance <= eps. (m, n) -> (m,) int32."""
+    return jnp.sum(dists <= eps, axis=-1).astype(jnp.int32)
+
+
+def kth_smallest(dists: jax.Array, k: int) -> jax.Array:
+    """k-th smallest value per row (1-based k). (m, n) -> (m,) float32.
+
+    This is the MinPts-distance M(p) when ``dists`` is a full distance row
+    (self-distance 0 included) and k = MinPts.
+    """
+    srt = jnp.sort(dists, axis=-1)
+    return srt[:, k - 1]
+
+
+def tile_histogram(dists: jax.Array, edges: jax.Array) -> jax.Array:
+    """Per-row histogram of distances over ``edges`` bin boundaries.
+
+    dists: (m, n); edges: (B+1,) monotone. Returns (m, B) int32 counts with
+    bin b counting edges[b] <= d < edges[b+1] (last bin right-inclusive).
+    Oracle for the kthdist refinement kernel.
+
+    Loops over bins (fori) instead of broadcasting an (m, B, n) mask — the
+    distributed sweep calls this on (rows × 64k-corpus) tiles where the
+    broadcast intermediate would be gigabytes.
+    """
+    nbins = edges.shape[0] - 1
+
+    def bin_count(b):
+        lo = edges[b]
+        hi = edges[b + 1]
+        inside = (dists >= lo) & ((dists < hi)
+                                  | ((b == nbins - 1) & (dists <= hi)))
+        return inside.sum(-1).astype(jnp.int32)          # (m,)
+
+    cols = jax.lax.map(bin_count, jnp.arange(nbins))      # (nbins, m)
+    return cols.T
+
+
+def sliding_window_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             window: int, causal: bool = True) -> jax.Array:
+    """Reference sliding-window attention.
+
+    q,k,v: (B, T, H, Dh) with kv already repeated to H heads. A query at
+    position t attends to keys in [t-window+1, t] (causal) — the oracle for
+    kernels/flash_swa.py.
+    """
+    B, T, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    ti = jnp.arange(T)[:, None]
+    si = jnp.arange(T)[None, :]
+    mask = (si <= ti) & (si > ti - window) if causal else (jnp.abs(si - ti) < window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the
+# device count at first initialization, and the production meshes below
+# need 512 placeholder host devices. Do not move them.
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. builds the cell's production step from input_specs (ShapeDtypeStruct
+     stand-ins only — nothing is allocated),
+  3. ``.lower().compile()`` — any sharding mismatch, non-divisible dim or
+     compile-time OOM is a bug in the framework and fails the run,
+  4. records memory_analysis / cost_analysis / while-weighted HLO terms
+     (launch.hlo_analysis) and the three roofline terms into a JSON store
+     that benchmarks/roofline.py and EXPERIMENTS.md read.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --sweep                 # all cells
+  python -m repro.launch.dryrun --arch finex            # paper workload
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, RunConfig, get_arch
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import auto_n_micro, build_lowerable, dp_size
+
+# --- TPU v5e-class hardware constants (mandate §Roofline) ---
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link per chip
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/results/dryrun.json")
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS: 6·N·D (train), 2·N·D (prefill/decode fwd)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # decode: 1 tok/seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[dict] = None) -> Dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "chips": chips}
+
+    if arch == "finex":
+        from repro.neighbors.distributed import finex_dryrun_lowerable
+        fn, args, shardings = finex_dryrun_lowerable(mesh)
+        rec["n_micro"] = 1
+        rec["model_flops"] = 2.0 * (1 << 20) ** 2 * 64   # n² d-dim distances
+    elif arch == "finex-jaccard":
+        from repro.neighbors.distributed import finex_jaccard_dryrun_lowerable
+        fn, args, shardings = finex_jaccard_dryrun_lowerable(mesh)
+        rec["n_micro"] = 1
+        # AND + popcount + accumulate ≈ 3 VPU ops per packed word pair
+        rec["model_flops"] = 3.0 * (1 << 20) ** 2 * 64
+    else:
+        cfg = get_arch(arch)
+        shape = SHAPES[shape_name]
+        rc = RunConfig(model=cfg, shape=shape, multi_pod=multi_pod,
+                       **(overrides or {}))
+        skip = rc.skip_reason()
+        if skip:
+            rec.update(status="skipped", reason=skip)
+            return rec
+        rec["n_micro"] = (rc.microbatch or auto_n_micro(cfg, shape, mesh)
+                          if shape.kind == "train" else 1)
+        rec["model_flops"] = model_flops(cfg, shape)
+        fn, args, shardings = build_lowerable(cfg, rc, mesh)
+
+    # donate the mutable state (train state / decode cache) — production
+    # steps run in place; without donation every step double-buffers GBs
+    if arch.startswith("finex"):
+        donate = ()
+    elif SHAPES[shape_name].kind == "train":
+        donate = (0,)                  # TrainState
+    elif SHAPES[shape_name].kind == "decode":
+        donate = (1,)                  # cache
+    else:
+        donate = ()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    _fill_analysis(rec, compiled, t0, t_lower, t_compile)
+    return rec
+
+
+def _fill_analysis(rec: Dict, compiled, t0: float,
+                   t_lower: float = None, t_compile: float = None) -> Dict:
+    """Populate a cell record from a compiled executable (shared by the
+    sweep and the §Perf variant driver)."""
+    if t_lower is None:
+        t_lower = t_compile = time.time()
+    chips = rec["chips"]
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = analyze_hlo(compiled.as_text())
+
+    # cost_analysis counts while bodies once; scale its numbers by the
+    # weighted/unweighted ratio from the HLO walk (keeps XLA's own per-op
+    # accounting, fixes the trip counts).
+    dot_w = hlo.get("dot_flops", 0.0)
+    dot_u = hlo.get("dot_flops_unweighted", 0.0)
+    hbm_w = hlo.get("hbm_bytes", 0.0)
+    hbm_u = hlo.get("hbm_bytes_unweighted", 0.0)
+    flops_mult = max(1.0, dot_w / dot_u) if dot_u else 1.0
+    bytes_mult = max(1.0, hbm_w / hbm_u) if hbm_u else 1.0
+    flops_dev = max(cost.get("flops", 0.0) * flops_mult, dot_w)
+    bytes_dev = min(cost.get("bytes accessed", 0.0) * bytes_mult,
+                    hbm_w) or hbm_w
+    coll_dev = hlo.get("collective_operand_bytes", 0.0)
+    wire_dev = hlo.get("collective_wire_bytes", 0.0)
+    attn_excess = hlo.get("attn_excess_bytes", 0.0) * bytes_mult
+
+    compute_term = flops_dev / PEAK_FLOPS            # = global/(chips·peak)
+    memory_term = bytes_dev / HBM_BW
+    collective_term = coll_dev / ICI_BW
+    terms = {"compute": compute_term, "memory": memory_term,
+             "collective": collective_term}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = rec["model_flops"]
+    useful_ratio = mf / (flops_dev * chips) if flops_dev else 0.0
+    mfu = (mf / chips / PEAK_FLOPS) / step_time if step_time else 0.0
+    # flash-kernel variant: attention score/probs traffic stays in VMEM
+    # (kernels/flash_swa.py on real TPUs); same FLOPs, less memory traffic
+    mem_flash = max(0.0, bytes_dev - min(attn_excess, bytes_dev)) / HBM_BW
+    step_flash = max(compute_term, mem_flash, collective_term)
+    mfu_flash = (mf / chips / PEAK_FLOPS) / step_flash if step_flash else 0.0
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower - t0, 1),
+        compile_s=round(t_compile - t_lower, 1),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            code_bytes=mem.generated_code_size_in_bytes,
+            peak_per_device=(mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes
+                             - mem.alias_size_in_bytes
+                             + mem.temp_size_in_bytes)),
+        cost_analysis=dict(
+            flops=cost.get("flops", 0.0),
+            bytes_accessed=cost.get("bytes accessed", 0.0)),
+        hlo_weighted=dict(
+            dot_flops_per_dev=dot_w,
+            hbm_model_bytes_per_dev=hbm_w,
+            flops_mult=flops_mult,
+            bytes_mult=bytes_mult,
+            flops_per_dev=flops_dev,
+            hbm_bytes_per_dev=bytes_dev,
+            collective_operand_bytes_per_dev=coll_dev,
+            collective_wire_bytes_per_dev=wire_dev,
+            collective_count=hlo.get("collective_count", 0.0),
+            per_op={k: v for k, v in hlo.items() if k.startswith("bytes[")}),
+        roofline=dict(
+            compute_term_s=compute_term,
+            memory_term_s=memory_term,
+            collective_term_s=collective_term,
+            bottleneck=bottleneck,
+            step_time_s=step_time,
+            model_flops_ratio=useful_ratio,
+            roofline_fraction=mfu,
+            memory_term_flash_s=mem_flash,
+            step_time_flash_s=step_flash,
+            roofline_fraction_flash=mfu_flash,
+            attn_excess_bytes_per_dev=attn_excess),
+    )
+    return rec
+
+
+def load_results(path: str = RESULTS_PATH) -> Dict[str, Dict]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_result(rec: Dict, path: str = RESULTS_PATH) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    results = load_results(path)
+    key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+    results[key] = rec
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id, or 'finex' for the paper cell")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the results store")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    if args.sweep:
+        cells = [(a, s) for a in list(ARCHS) + ["finex", "finex-jaccard"]
+                 for s in (["train_4k"] if a.startswith("finex")
+                           else list(SHAPES))]
+    else:
+        assert args.arch, "--arch or --sweep required"
+        shapes = [args.shape] if args.shape else (
+            ["train_4k"] if args.arch.startswith("finex") else list(SHAPES))
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    existing = load_results(args.out)
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+            if not args.force and existing.get(key, {}).get("status") in (
+                    "ok", "skipped"):
+                print(f"[cached ] {key}")
+                continue
+            try:
+                rec = run_cell(arch, shape, mp)
+            except Exception as e:                        # noqa: BLE001
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": str(e)[:2000],
+                       "traceback": traceback.format_exc()[-4000:]}
+                failures += 1
+            save_result(rec, args.out)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" bottleneck={r['bottleneck']}"
+                         f" frac={r['roofline_fraction']:.3f}"
+                         f" compile={rec['compile_s']}s"
+                         f" mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB")
+            elif status == "skipped":
+                extra = f" ({rec['reason']})"
+            else:
+                extra = f" !! {rec['error'][:160]}"
+            print(f"[{status:7s}] {key}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

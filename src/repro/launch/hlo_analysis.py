@@ -1,0 +1,291 @@
+"""Roofline-term analysis of compiled (partitioned) HLO text.
+
+Why parse text at all:
+  * ``cost_analysis()`` has no collective-bytes entry, and
+  * it counts ``while`` bodies ONCE — a scan over 80 layer groups or 16
+    microbatches under-reports FLOPs/bytes by that factor (verified
+    empirically; see EXPERIMENTS.md §Dry-run notes).
+
+So this module walks the HLO computation graph:
+  * builds a per-block symbol table (name → shape) to resolve operand
+    sizes (HLO operands are name references),
+  * recovers loop trip counts from each while-condition's comparison
+    constant and multiplies everything inside accordingly,
+  * accumulates three quantities per device:
+      - dot FLOPs (2·M·N·K from the dot's shapes — matmuls dominate LMs),
+      - HBM-traffic model: operand+result bytes of top-level instructions
+        (fusion internals excluded — only fusion boundaries touch HBM),
+      - collective operand/wire bytes per op type, with ring-algorithm
+        wire modeling 2·(g−1)/g for all-reduce etc.
+
+All results are per-device for the partitioned module; the dry-run
+multiplies by chip count where the mandate's formulas want globals.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{(\{[\d, ]+\})")
+# ops whose "operands" are control/metadata, not data
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "copy", "after-all", "partition-id", "replica-id", "iota",
+             "custom-call"}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d.strip())
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Collective:
+    op: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+
+
+@dataclass
+class _Block:
+    name: str
+    collectives: List[_Collective] = field(default_factory=list)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    calls: List[Tuple[str, bool]] = field(default_factory=list)  # (tgt, fused)
+    max_const: int = 1
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    attn_excess: float = 0.0   # (T,S)-sized dot traffic a flash kernel
+    #                            keeps in VMEM (score dot result / probs·V
+    #                            operand)
+
+
+def _split_blocks(text: str) -> Dict[str, List[str]]:
+    blocks: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(\([^{]*\))?\s*(->[^{]*)?\{",
+                         line)
+            if m:
+                cur = m.group(1)
+                blocks[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        blocks[cur].append(line)
+    return blocks
+
+
+def _first_paren_args(rhs: str, op_end: int) -> List[str]:
+    """Operand names inside the opcode's argument parens."""
+    depth = 0
+    start = None
+    for i in range(op_end - 1, len(rhs)):
+        ch = rhs[i]
+        if ch == "(":
+            depth += 1
+            if start is None:
+                start = i + 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner = rhs[start:i]
+                args = []
+                for a in _split_top(inner):
+                    a = a.strip()
+                    if not a:
+                        continue
+                    args.append(a.split(" ")[-1].lstrip("%"))
+                return args
+    return []
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return out
+
+
+def _parse_block(name: str, lines: List[str]) -> _Block:
+    blk = _Block(name=name)
+    symbols: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = {}
+    for line in lines:
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        lhs, rhs = d.group(1), d.group(2)
+        op_m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        type_str = rhs[:op_m.start()] if op_m else rhs
+        res_shapes = _parse_shapes(type_str)
+        symbols[lhs] = res_shapes
+        cm = re.search(r"constant\((\d+)\)", rhs)
+        if cm:
+            blk.max_const = max(blk.max_const, int(cm.group(1)))
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        result_bytes = _bytes_of(res_shapes)
+        args = _first_paren_args(rhs, op_m.end())
+        operand_bytes = sum(_bytes_of(symbols.get(a, [])) for a in args)
+
+        if opcode == "while":
+            cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+            body = re.search(r"body=%?([\w.\-]+)", rhs)
+            if cond and body:
+                blk.whiles.append((cond.group(1), body.group(1)))
+            continue
+        if opcode in ("call", "fusion", "conditional"):
+            for tgt in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)", rhs):
+                blk.calls.append((tgt, opcode == "fusion"))
+            # fusion boundary = HBM traffic (internals never touch HBM)
+            blk.hbm_bytes += operand_bytes + result_bytes
+            continue
+
+        base = opcode
+        for suf in ("-start", "-done", "-update"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            if operand_bytes == 0:
+                operand_bytes = result_bytes
+            g = 1
+            gm = _GROUPS_RE.search(rhs)
+            if gm:
+                g = int(gm.group(2))           # [n_groups, group_size]
+            else:
+                g1 = _GROUPS_V1_RE.search(rhs)
+                if g1:
+                    g = g1.group(1).count(",") + 1
+            blk.collectives.append(_Collective(
+                op=base, result_bytes=result_bytes,
+                operand_bytes=operand_bytes, group_size=max(g, 1)))
+            blk.hbm_bytes += operand_bytes + result_bytes
+            continue
+
+        if opcode == "dot":
+            lhs_shape = symbols.get(args[0], []) if args else []
+            k = 1
+            cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if cm2 and lhs_shape:
+                dims = lhs_shape[0][1]
+                for ci in cm2.group(1).split(","):
+                    if ci.strip():
+                        k *= dims[int(ci)] if int(ci) < len(dims) else 1
+            res_elems = 0
+            for _, shp in res_shapes:
+                n = 1
+                for dd in shp:
+                    n *= dd
+                res_elems += n
+            blk.dot_flops += 2.0 * res_elems * k
+            blk.hbm_bytes += operand_bytes + result_bytes
+            # attention-shaped dots: the (T,S) score matrix dwarfs the
+            # (T,hd)/(S,hd) operands (score dot) or vice versa (probs·V).
+            # A flash kernel never writes it to HBM.
+            if result_bytes > 4 * max(operand_bytes, 1):
+                blk.attn_excess += result_bytes
+            elif operand_bytes > 4 * max(result_bytes, 1):
+                blk.attn_excess += operand_bytes - result_bytes
+            continue
+
+        if opcode not in _SKIP_OPS:
+            blk.hbm_bytes += operand_bytes + result_bytes
+    return blk
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-device while-weighted FLOPs / HBM bytes / collective bytes."""
+    raw = _split_blocks(hlo_text)
+    blocks = {n: _parse_block(n, ls) for n, ls in raw.items()}
+
+    called = set()
+    for b in blocks.values():
+        for cond, body in b.whiles:
+            called.add(cond)
+            called.add(body)
+        called.update(t for t, _ in b.calls)
+    entries = [n for n in blocks if n not in called] or list(blocks)[:1]
+
+    totals: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, mult: float, in_fusion: bool, stack: tuple):
+        blk = blocks.get(name)
+        if blk is None or name in stack:
+            return
+        totals["dot_flops"] += mult * blk.dot_flops
+        totals["dot_flops_unweighted"] += blk.dot_flops
+        if not in_fusion:
+            totals["hbm_bytes"] += mult * blk.hbm_bytes
+            totals["hbm_bytes_unweighted"] += blk.hbm_bytes
+        totals["attn_excess_bytes"] += mult * blk.attn_excess
+        for c in blk.collectives:
+            totals["collective_operand_bytes"] += mult * c.operand_bytes
+            totals["collective_wire_bytes"] += mult * _wire_bytes(c)
+            totals["collective_count"] += mult
+            totals[f"bytes[{c.op}]"] += mult * c.operand_bytes
+        for cond, body in blk.whiles:
+            trip = blocks[cond].max_const if cond in blocks else 1
+            visit(body, mult * max(trip, 1), in_fusion, stack + (name,))
+        for tgt, fused in blk.calls:
+            visit(tgt, mult, in_fusion or fused, stack + (name,))
+
+    for e in entries:
+        visit(e, 1.0, False, ())
+    return dict(totals)
+
+
+def _wire_bytes(c: _Collective) -> float:
+    g = c.group_size
+    if g <= 1:
+        return 0.0
+    ring = (g - 1) / g
+    if c.op == "all-reduce":
+        return 2.0 * ring * c.operand_bytes
+    if c.op == "all-gather":
+        return ring * c.result_bytes
+    if c.op == "reduce-scatter":
+        return ring * c.operand_bytes
+    if c.op in ("all-to-all", "ragged-all-to-all"):
+        return ring * c.operand_bytes
+    return float(c.operand_bytes)

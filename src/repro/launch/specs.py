@@ -1,0 +1,186 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+``build_lowerable(cfg, rc, mesh)`` returns (fn, args, in_shardings) such
+that ``jax.jit(fn, in_shardings=...).lower(*args).compile()`` is exactly
+the production step for that (architecture × shape × mesh) cell:
+
+  train_*    → train_step (fwd + bwd + AdamW, microbatched)
+  prefill_*  → forward (full-sequence logits)
+  decode_*   → decode_step (one token against the sharded cache)
+
+No array is ever allocated: everything is ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models.transformer import (cache_shapes, cache_specs, decode_step,
+                                      forward, param_shapes)
+from repro.sharding import (batch_spec, check_divisible, dp_axes,
+                            param_shardings)
+from repro.train.optimizer import AdamWState
+from repro.train.step import TrainState, make_train_step
+
+
+def dp_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in dp_axes(mesh)]))
+
+
+def _maybe_dp(batch: int, mesh: Mesh):
+    """DP axes for a batch dim, or None when the batch doesn't divide
+    (e.g. long_500k's global_batch=1 — the DP axes sit idle)."""
+    return dp_axes(mesh) if batch % dp_size(mesh) == 0 else None
+
+
+ACT_BUDGET_BYTES = 2e9     # saved-activation budget per device (remat'd)
+
+
+def auto_n_micro(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Gradient-accumulation factor: keep saved layer inputs under budget."""
+    dp = dp_size(mesh)
+    b_local = max(1, shape.global_batch // dp)
+    per_sample = cfg.n_layers * shape.seq_len * cfg.d_model * 2  # bf16
+    cap = max(1, int(ACT_BUDGET_BYTES // max(per_sample, 1)))
+    micro_local = 1
+    for d in range(1, b_local + 1):
+        if b_local % d == 0 and d <= cap:
+            micro_local = d
+    return b_local // micro_local
+
+
+OPT_BYTES_BUDGET = 3e9        # fp32 params+m+v per device above this →
+#                               bf16 Adam moments (qwen2-72b, llama4)
+ACT_CHAIN_BUDGET = 2e9        # saved-activation chain above this → √-remat
+
+
+def _opt_dtype(cfg: ModelConfig, mesh: Mesh):
+    """bf16 Adam moments when fp32 state cannot fit the pod comfortably."""
+    per_dev = cfg.param_count() * 12 / mesh.devices.size
+    return jnp.bfloat16 if per_dev > OPT_BYTES_BUDGET else jnp.float32
+
+
+def auto_remat_blocks(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      n_micro: int) -> int:
+    """√-remat block size when the saved layer-input chain is too long."""
+    dp = dp_size(mesh)
+    micro_local = max(1, shape.global_batch // dp // n_micro)
+    G = cfg.n_layers // cfg.scan_group
+    chain = G * micro_local * shape.seq_len * cfg.d_model * 2     # bf16
+    if chain <= ACT_CHAIN_BUDGET:
+        return 0
+    target = max(2, int(G ** 0.5))
+    for k in range(target, G + 1):          # smallest divisor ≥ √G
+        if G % k == 0:
+            return k
+    return 0
+
+
+def auto_fsdp_over_pod(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Span FSDP across pods when even bf16-moment state can't fit one."""
+    if "pod" not in mesh.axis_names:
+        return False
+    pod_devices = mesh.devices.size // mesh.devices.shape[0]
+    return cfg.param_count() * 8 / pod_devices > 10e9
+
+
+def _state_sds(cfg: ModelConfig, mesh: Mesh) -> TrainState:
+    ps = param_shapes(cfg, jnp.float32)
+    od = _opt_dtype(cfg, mesh)
+    zeros = {k: jax.ShapeDtypeStruct(v.shape, od) for k, v in ps.items()}
+    return TrainState(
+        params=ps,
+        opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=dict(zeros), v=dict(zeros)))
+
+
+def _state_shardings(cfg: ModelConfig, mesh: Mesh,
+                     fsdp_over_pod: bool = False) -> TrainState:
+    ps = param_shardings(param_shapes(cfg, jnp.float32), mesh,
+                         cfg.expert_parallel, fsdp_over_pod)
+    repl = NamedSharding(mesh, P())
+    return TrainState(
+        params=ps,
+        opt=AdamWState(step=repl, m=dict(ps), v=dict(ps)))
+
+
+def build_lowerable(cfg: ModelConfig, rc: RunConfig, mesh: Mesh
+                    ) -> Tuple[Callable, tuple, Any]:
+    """(fn, args_sds, in_shardings) for this cell's production step."""
+    import dataclasses
+
+    shape = rc.shape
+    B, T = shape.global_batch, shape.seq_len
+    dp = _maybe_dp(B, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        n_micro = rc.microbatch or auto_n_micro(cfg, shape, mesh)
+        if rc.remat_blocks == 0:
+            rc = dataclasses.replace(
+                rc, remat_blocks=auto_remat_blocks(cfg, shape, mesh, n_micro))
+        if not rc.fsdp_over_pod and auto_fsdp_over_pod(cfg, mesh):
+            rc = dataclasses.replace(rc, fsdp_over_pod=True)
+        step_fn = make_train_step(cfg, rc, mesh, n_micro=n_micro)
+        state = _state_sds(cfg, mesh)
+        state_sh = _state_shardings(cfg, mesh, rc.fsdp_over_pod)
+        batch: Dict[str, Any] = {
+            "labels": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+        batch_sh: Dict[str, Any] = {
+            "labels": NamedSharding(mesh, P(dp, None))}
+        if cfg.embed_inputs:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+            batch_sh["tokens"] = NamedSharding(mesh, P(dp, None))
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                   jnp.float32)
+            batch_sh["embeds"] = NamedSharding(mesh, P(dp, None, None))
+        return step_fn, (state, batch), (state_sh, batch_sh)
+
+    if not rc.fsdp_over_pod and auto_fsdp_over_pod(cfg, mesh):
+        rc = dataclasses.replace(rc, fsdp_over_pod=True)
+    params = param_shapes(cfg, jnp.bfloat16)          # serving dtype
+    params_sh = param_shardings(params, mesh, cfg.expert_parallel,
+                                rc.fsdp_over_pod)
+
+    if shape.kind == "prefill":
+        # decoder prefill emits only last-token logits (sampling feeds on
+        # them); encoders return the full frame-level output
+        last_only = cfg.causal
+
+        def prefill_fn(p, inputs):
+            return forward(p, inputs, cfg, rc, mesh, last_only=last_only)
+        if cfg.embed_inputs:
+            inp = jax.ShapeDtypeStruct((B, T), jnp.int32)
+            inp_sh = NamedSharding(mesh, P(dp, None))
+        else:
+            inp = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.float32)
+            inp_sh = NamedSharding(mesh, P(dp, None, None))
+        return prefill_fn, (params, inp), (params_sh, inp_sh)
+
+    # decode: one new token against a seq_len-deep cache
+    cache = cache_shapes(cfg, B, T, jnp.bfloat16)
+    cspecs = cache_specs(cfg, mesh)
+    cache_sh = {}
+    for k, sds in cache.items():
+        spec = cspecs[k]
+        if dp is None:     # batch can't shard: drop DP axes from the spec
+            spec = P(*[None if a == dp_axes(mesh) else a for a in spec])
+        spec = check_divisible(k, sds.shape, spec, mesh)
+        cache_sh[k] = NamedSharding(mesh, spec)
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    toks_sh = NamedSharding(mesh, P(dp, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(p, c, t, s):
+        return decode_step(p, c, t, s, cfg, rc, mesh)
+
+    return (decode_fn, (params, cache, toks, pos),
+            (params_sh, cache_sh, toks_sh, repl))

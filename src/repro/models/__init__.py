@@ -1,0 +1,5 @@
+from repro.models.transformer import (init_params, param_shapes, forward,
+                                      decode_step, init_cache, cache_specs)
+
+__all__ = ["init_params", "param_shapes", "forward", "decode_step",
+           "init_cache", "cache_specs"]

@@ -1,0 +1,184 @@
+"""Shared neural layers: RMSNorm, RoPE, attention flavors, gated MLP.
+
+Attention comes in four execution paths, all mathematically the same
+softmax attention but with different memory behavior:
+
+  * ``full``     — plain masked einsum; used for T ≤ full_attn_max_seq.
+  * ``chunked``  — lax.scan over query chunks against the full K/V; the
+                   (B,H,qc,S) logits block is the only O(S) temp. Exact,
+                   inference-only path for 32k prefill (no O(T²) buffer).
+  * ``swa``      — sliding-window mask (window w); chunked variant slices
+                   a (w + qc) K/V band per chunk → O(T·w) total.
+  * ``decode``   — single-token query against a (possibly ring-buffer)
+                   cache; with the cache sequence-sharded on "model", XLA
+                   SPMD turns the softmax/v-contraction reductions into
+                   the flash-decode partial-softmax + psum pattern.
+
+On real TPU hardware the swa/chunked paths are replaced by the Pallas
+flash kernels (kernels/flash_swa.py); the XLA paths here are the portable
+oracle and what the CPU dry-run lowers (mosaic cannot target CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, hd) → (B, S, H, hd) by repeating KV groups."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _softmax_f32(logits: jax.Array, axis: int = -1) -> jax.Array:
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=axis, keepdims=True))
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: int = 0) -> jax.Array:
+    """(B,T,H,hd) × (B,S,KV,hd)² → (B,T,H,hd); full (T,S) logits."""
+    B, T, H, hd = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    S = k.shape[1]
+    ti = jnp.arange(T)[:, None] + (S - T)      # queries are the last T slots
+    si = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= si <= ti
+    if window > 0:
+        mask &= si > ti - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = _softmax_f32(logits)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      chunk: int, causal: bool, window: int = 0) -> jax.Array:
+    """Query-chunked exact attention for long-sequence prefill.
+
+    With a window, only the (window + chunk) K/V band of each chunk is
+    touched — O(T·w) flops/memory; otherwise each chunk sees the full
+    prefix (O(T²) flops but O(T·chunk) memory).
+    """
+    B, T, H, hd = q.shape
+    assert T % chunk == 0, (T, chunk)
+    assert causal or window == 0, \
+        "windowed non-causal attention is not supported (no arch uses it)"
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = hd ** -0.5
+    nchunks = T // chunk
+
+    if window > 0:
+        pad = window  # front-pad so every chunk slices a full band
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def body(_, ci):
+        qs = jax.lax.dynamic_slice_in_dim(q, ci * chunk, chunk, axis=1)
+        if window > 0:
+            band = window + chunk
+            ks = jax.lax.dynamic_slice_in_dim(kp, ci * chunk, band, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, ci * chunk, band, axis=1)
+            ti = jnp.arange(chunk)[:, None] + window          # abs pos in band
+            si = jnp.arange(band)[None, :]
+            valid = si + ci * chunk >= window                  # not front pad
+            mask = valid & (si <= ti) & (si > ti - window) if causal else \
+                valid & (jnp.abs(si - ti) < window)
+        else:
+            ks, vs = k, v
+            ti = ci * chunk + jnp.arange(chunk)[:, None]
+            si = jnp.arange(T)[None, :]
+            mask = (si <= ti) if causal else jnp.ones((chunk, T), bool)
+        logits = jnp.einsum("bthd,bshd->bhts", qs.astype(jnp.float32),
+                            ks.astype(jnp.float32)) * scale
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = _softmax_f32(logits)
+        out = jnp.einsum("bhts,bshd->bthd", probs, vs.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nchunks))
+    # (nchunks, B, chunk, H, hd) → (B, T, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, H, hd)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0,
+                     mesh=None, seq_spec=None) -> jax.Array:
+    """One-token attention against the cache (flash-decode pattern).
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); pos: () next-token index.
+    For SWA the cache is a ring buffer of size window and every slot that
+    has ever been written is valid.
+
+    The cache stays sharded on its SEQUENCE axis ("model"): the logits are
+    explicitly constrained seq-sharded so each device scores only its own
+    cache chunk, and the softmax max/sum + value contraction lower to the
+    flash-decode partial-reduce + psum. (Without the constraint GSPMD
+    reshards the whole cache to head-sharding every step — a full-cache
+    collective per layer per token.)
+    """
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bohd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale          # (B, H, S)
+    if mesh is not None and seq_spec is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.NamedSharding(mesh, seq_spec))
+    si = jnp.arange(S)[None, None, :]
+    if window > 0:
+        valid = si < jnp.minimum(pos + 1, window)               # ring buffer
+    else:
+        valid = si <= pos
+    logits = jnp.where(valid, logits, -1e30)
+    probs = _softmax_f32(logits)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
+def gated_mlp(x: jax.Array, w_gate_up: jax.Array, w_down: jax.Array,
+              glu: bool = True) -> jax.Array:
+    """SwiGLU (glu=True) or 2-matrix GELU FFN (glu=False, e.g. HuBERT)."""
+    h = x @ w_gate_up
+    if glu:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(h)
+    return h @ w_down

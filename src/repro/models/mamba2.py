@@ -1,0 +1,169 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked scan + decode step.
+
+Implements the SSD algorithm of arXiv:2405.21060: within chunks of Q
+tokens the recurrence is computed as masked matmuls (MXU work), across
+chunks a small (B, H, P, S) state is carried by a sequential scan — the
+structure that makes SSM training MXU-bound instead of scan-bound, and
+decode O(1) in sequence length (which is why mamba2/hymba are the two
+long_500k-capable architectures, DESIGN.md §3).
+
+Shapes: B batch, T time, H ssm heads, P headdim, S ssm state, G groups
+(B/C shared across H/G heads), Q chunk.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+class SSMParams(NamedTuple):
+    ssm_in: jax.Array      # (d, 2*din + 2*G*S + H)
+    ssm_conv: jax.Array    # (K, din + 2*G*S) depthwise causal conv
+    ssm_alog: jax.Array    # (H,) log of -A
+    ssm_dtbias: jax.Array  # (H,)
+    ssm_d: jax.Array       # (H,) skip coefficient
+    ssm_gnorm: jax.Array   # (din,) gated-RMSNorm weight
+    ssm_out: jax.Array     # (din, d)
+
+
+CONV_K = 4
+
+
+def _split_in(h: jax.Array, cfg: ModelConfig):
+    din = cfg.ssm_dinner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    z, xbc, dt = jnp.split(h, [din, 2 * din + 2 * gs], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, T, CH) with kernel (K, CH)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for k in range(K):
+        out = out + pad[:, k:k + xbc.shape[1]] * w[k]
+    return jax.nn.silu(out)
+
+
+def ssd_forward(x_in: jax.Array, p: SSMParams, cfg: ModelConfig) -> jax.Array:
+    """(B, T, d) → (B, T, d) through the SSD mixer (training/prefill)."""
+    Bsz, T, _ = x_in.shape
+    H, P, S, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    Q = min(cfg.ssm_chunk, T)
+    assert T % Q == 0, (T, Q)
+    NC = T // Q
+
+    h = x_in @ p.ssm_in
+    z, xbc, dt = _split_in(h, cfg)
+    xbc = _causal_conv(xbc, p.ssm_conv)
+    din = cfg.ssm_dinner
+    x, Bm, Cm = jnp.split(xbc, [din, din + G * S], axis=-1)
+    x = x.reshape(Bsz, T, H, P)
+    Bm = Bm.reshape(Bsz, T, G, S)
+    Cm = Cm.reshape(Bsz, T, G, S)
+
+    A = -jnp.exp(p.ssm_alog.astype(jnp.float32))                  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.ssm_dtbias)   # (B,T,H)
+    dA = dt * A                                                   # (B,T,H) ≤ 0
+
+    # chunk views
+    xc = x.reshape(Bsz, NC, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, NC, Q, G, S).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, NC, Q, G, S).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, NC, Q, H)
+    dAc = dA.reshape(Bsz, NC, Q, H)
+    cs = jnp.cumsum(dAc, axis=2)                                  # (B,NC,Q,H)
+
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                              # (B,NC,Q,H,S)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk: masked (Q × Q) attention-like matmuls ----
+    # L[i,j] = exp(cs_i - cs_j) for i ≥ j. The mask must be applied to
+    # the EXPONENT: for i < j the difference is positive and can overflow
+    # to inf, and where(mask, inf, 0) poisons the backward pass with NaNs.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # (B,NC,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    CB = jnp.einsum("bnihs,bnjhs->bnijh", Ch, Bh)                 # (B,NC,i,j,H)
+    W = CB * Ldec * dtc[:, :, None, :, :]                         # weight j→i
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", W, xc)
+
+    # ---- chunk summary states ----
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                          # (B,NC,Q,H)
+    Sc = jnp.einsum("bnjh,bnjhs,bnjhp->bnhps",
+                    seg * dtc, Bh, xc)                            # (B,NC,H,P,S)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                        # (B,NC,H)
+
+    # ---- inter-chunk recurrence (sequential over NC) ----
+    def step(state, inp):
+        sc, dec = inp                                              # per chunk
+        new = state * dec[:, :, None, None] + sc
+        return new, state                                          # emit prev
+
+    init = jnp.zeros((Bsz, H, P, S), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,NC,H,P,S)
+
+    y_inter = jnp.einsum("bnihs,bnhps->bnihp",
+                         Ch * jnp.exp(cs)[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    y = y + p.ssm_d[None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, T, din)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p.ssm_gnorm, cfg.norm_eps)
+    return (y @ p.ssm_out).astype(x_in.dtype)
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, S) float32
+    conv: jax.Array        # (B, K-1, CH) last conv inputs
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SSMCache:
+    H, P, S = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    ch = cfg.ssm_dinner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(state=jnp.zeros((batch, H, P, S), jnp.float32),
+                    conv=jnp.zeros((batch, CONV_K - 1, ch), dtype))
+
+
+def ssd_decode(x_in: jax.Array, cache: SSMCache, p: SSMParams,
+               cfg: ModelConfig) -> Tuple[jax.Array, SSMCache]:
+    """One-token SSD step. x_in: (B, 1, d) → ((B, 1, d), new cache)."""
+    Bsz = x_in.shape[0]
+    H, P, S, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    din = cfg.ssm_dinner
+
+    h = x_in[:, 0] @ p.ssm_in                                     # (B, Z)
+    z, xbc, dt = _split_in(h, cfg)
+    # conv ring buffer: K-1 previous inputs + current
+    buf = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, K, CH)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", buf, p.ssm_conv))
+    new_conv = buf[:, 1:]
+
+    x, Bm, Cm = jnp.split(conv, [din, din + G * S], axis=-1)
+    x = x.reshape(Bsz, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, G, S).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, G, S).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                              # (B,H,S)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    A = -jnp.exp(p.ssm_alog.astype(jnp.float32))
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p.ssm_dtbias)  # (B,H)
+    decay = jnp.exp(dt1 * A)                                      # (B,H)
+
+    state = (cache.state * decay[:, :, None, None]
+             + jnp.einsum("bh,bhp,bhs->bhps", dt1, x, Bh))
+    y = jnp.einsum("bhps,bhs->bhp", state, Ch) + p.ssm_d[None, :, None] * x
+    y = y.reshape(Bsz, din)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p.ssm_gnorm, cfg.norm_eps)
+    out = (y @ p.ssm_out).astype(x_in.dtype)[:, None]
+    return out, SSMCache(state=state, conv=new_conv)

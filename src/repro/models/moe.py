@@ -1,0 +1,206 @@
+"""Routed mixture-of-experts with sort-based fixed-capacity dispatch.
+
+Design (DESIGN.md §4): tokens are routed top-k, flattened to (T·k)
+assignments, stably sorted by expert id, and truncated at a fixed
+per-expert capacity C = ⌈k·T·cf/E⌉. The gathered (E, C, d) expert batches
+run through a batched SwiGLU einsum and are scatter-added back with their
+gate weights. Dropped tokens (beyond capacity) fall through to the
+residual path, standard practice for fixed-capacity MoE.
+
+Parallelism: under EP the expert axis E is sharded on "model" (llama4:
+128/16 = 8 experts per device; the gather/scatter over data-sharded tokens
+lowers to the expected all-to-all/all-gather pattern). qwen2-moe's 60
+experts don't divide the axis, so it uses expert-TP: E replicated, expert
+hidden dims sharded on "model" (60 × 1408/16 = 88 per device) — the
+framework's answer to "the paper's technique must not dictate awkward
+shardings" (configs pick per-arch).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array            # (d, E)
+    experts_gate_up: jax.Array   # (E, d, 2*ff)
+    experts_down: jax.Array      # (E, ff, d)
+    # merged shared experts (qwen2-moe), zero-size arrays when unused
+    shared_gate_up: jax.Array    # (d, 2*sff) or (d, 0)
+    shared_down: jax.Array       # (sff, d)  or (0, d)
+    shared_gate: jax.Array       # (d,) sigmoid gate (or (0,))
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(cfg.top_k * tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(x: jax.Array, p: MoEParams, cfg: ModelConfig) -> jax.Array:
+    """(Tl, d) local tokens → (Tl, d). Routing is per data shard."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(T, cfg)
+
+    logits = (x.astype(jnp.float32) @ p.router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, exp_ids = jax.lax.top_k(probs, k)                        # (T, k)
+
+    flat_exp = exp_ids.reshape(-1)                                   # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    flat_w = gate_w.reshape(-1)
+
+    order = jnp.argsort(flat_exp, stable=True)
+    s_exp = flat_exp[order]
+    s_tok = flat_tok[order]
+    s_w = flat_w[order]
+
+    # rank of each assignment within its expert
+    counts = jnp.bincount(s_exp, length=E)                           # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - starts[s_exp]
+    keep = rank < C
+
+    # dispatch indices (E, C): token id per slot, T (=OOB) for empty slots
+    slot = s_exp * C + rank
+    disp = jnp.full((E * C,), T, jnp.int32)
+    disp = disp.at[jnp.where(keep, slot, E * C - 1)].set(
+        jnp.where(keep, s_tok, T).astype(jnp.int32), mode="drop")
+    disp = disp.reshape(E, C)
+
+    xe = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)[disp]
+    h = jnp.einsum("ecd,edf->ecf", xe, p.experts_gate_up)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p.experts_down)               # (E,C,d)
+
+    # combine: scatter-add gated expert outputs back to token slots
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    flat_ye = ye.reshape(E * C, d).astype(jnp.float32)
+    w_slot = jnp.zeros((E * C,), jnp.float32).at[
+        jnp.where(keep, slot, E * C - 1)].set(
+        jnp.where(keep, s_w, 0.0), mode="drop")
+    out = out.at[disp.reshape(-1)].add(flat_ye * w_slot[:, None],
+                                       mode="drop")
+    out = out[:T]
+
+    if p.shared_gate_up.shape[-1] > 0:
+        hs = x @ p.shared_gate_up
+        g, u = jnp.split(hs, 2, axis=-1)
+        ys = (jax.nn.silu(g) * u) @ p.shared_down
+        sgate = jax.nn.sigmoid(x.astype(jnp.float32) @ p.shared_gate[:, None])
+        out = out + ys.astype(jnp.float32) * sgate
+
+    return out.astype(x.dtype)
+
+
+def moe_ffn_batched(x: jax.Array, p: MoEParams, cfg: ModelConfig,
+                    mesh=None, dp=None) -> jax.Array:
+    """(B, T, d) → (B, T, d), routing per sequence, batch-dim native.
+
+    Equivalent to vmap(moe_ffn) but with every large intermediate carrying
+    an explicit sharding constraint — under a multi-pod mesh, GSPMD left
+    to its own devices replicates the (B, E, C, d) dispatch tensors across
+    the pod axis (observed: 3.6× temp memory on the 2x16x16 mesh).
+    """
+    import jax.sharding as js
+
+    def cst(a, *spec):
+        if mesh is None:
+            return a
+        return jax.lax.with_sharding_constraint(
+            a, js.NamedSharding(mesh, js.PartitionSpec(*spec)))
+
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(T, cfg)
+    e_ax = "model" if cfg.expert_parallel else None     # EP shards experts
+    f_ax = None if cfg.expert_parallel else "model"     # TP shards hidden
+
+    logits = x.astype(jnp.float32) @ p.router.astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, exp_ids = jax.lax.top_k(probs, k)                      # (B,T,k)
+
+    flat_exp = exp_ids.reshape(B, T * k)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(T), k)[None],
+                                (B, T * k))
+    flat_w = gate_w.reshape(B, T * k)
+
+    order = jnp.argsort(flat_exp, axis=-1, stable=True)
+    s_exp = jnp.take_along_axis(flat_exp, order, axis=-1)
+    s_tok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    s_w = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # rank within each expert run (batched: cummax of run-start positions)
+    pos = jnp.broadcast_to(jnp.arange(T * k)[None], (B, T * k))
+    is_new = jnp.concatenate(
+        [jnp.ones((B, 1), bool), s_exp[:, 1:] != s_exp[:, :-1]], axis=1)
+    start_pos = jax.lax.cummax(jnp.where(is_new, pos, 0), axis=1)
+    rank = pos - start_pos
+    keep = rank < C
+    slot = jnp.where(keep, s_exp * C + rank, E * C - 1)
+
+    bidx = jnp.arange(B)[:, None]
+    disp = jnp.full((B, E * C), T, jnp.int32)
+    disp = disp.at[bidx, slot].set(jnp.where(keep, s_tok, T).astype(jnp.int32),
+                                   mode="drop")
+
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = xpad[bidx, disp].reshape(B, E, C, d)
+    # xe stays batch-sharded: the gather is then dp-local; the expert
+    # einsum below moves it to expert-sharding (a small all-to-all)
+    xe = cst(xe, dp, None, None, None)
+    h = jnp.einsum("becd,edf->becf", xe, p.experts_gate_up)
+    h = cst(h, dp, e_ax, None, f_ax)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("becf,efd->becd", h, p.experts_down)
+    ye = cst(ye, dp, e_ax, None, None)
+
+    # combine by GATHER, not scatter-add: each (token, j) assignment reads
+    # its expert-output slot back through the inverse sort permutation.
+    # (A scatter-add into (B, T, d) makes GSPMD replicate the full f32
+    # output across the mesh — observed 20 GiB temps on the 32k cells.)
+    inv = jnp.argsort(order, axis=-1)
+    rank_flat = jnp.take_along_axis(rank, inv, axis=-1)        # (B, T*k)
+    keep_flat = rank_flat < C
+    slot_flat = jnp.where(keep_flat, flat_exp * C + rank_flat, E * C)
+    # re-shard expert outputs to batch-sharded (bf16) BEFORE the gather:
+    # this is the EP combine all-gather along "model"; gathering from an
+    # expert-sharded operand instead makes GSPMD replicate f32 partials
+    # of the full (B, T, d) output and all-reduce them (20 GiB temps).
+    ye_bt = cst(ye.astype(x.dtype).reshape(B, E * C, d), dp, None, None)
+    ye_pad = jnp.concatenate(
+        [ye_bt, jnp.zeros((B, 1, d), ye_bt.dtype)], axis=1)
+    y_tok = ye_pad[bidx, slot_flat]                            # (B, T*k, d)
+    y_tok = cst(y_tok, dp, None, None)
+    out = jnp.einsum("btkd,btk->btd",
+                     y_tok.reshape(B, T, k, d).astype(jnp.float32),
+                     gate_w)
+    out = cst(out, dp, None, None)
+
+    if p.shared_gate_up.shape[-1] > 0:
+        hs = x @ p.shared_gate_up
+        hs = cst(hs, dp, None, "model")
+        g, u = jnp.split(hs, 2, axis=-1)
+        ys = (jax.nn.silu(g) * u) @ p.shared_down
+        sgate = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ p.shared_gate[:, None])
+        out = out + ys.astype(jnp.float32) * sgate
+    return out.astype(x.dtype)
+
+
+def aux_load_balance_loss(x: jax.Array, router: jax.Array,
+                          cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+    logits = x.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

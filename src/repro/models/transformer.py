@@ -1,0 +1,411 @@
+"""Unified model: dense / MoE / SSD / hybrid / encoder families.
+
+One parameter layout, one forward, one decode step — the family switches
+live in the per-sublayer mixer. Layers are *scanned* in groups
+(``cfg.scan_group`` layers per group; llama4's dense/MoE interleave makes
+a 2-layer group) so HLO size is independent of depth, which keeps the
+40-cell dry-run compilable and gives remat a natural per-group boundary.
+
+Parameters are a flat {path: array} dict; ``repro.sharding.param_spec``
+maps paths to PartitionSpecs. Stacked group dims lead every layer param.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe
+from repro.sharding import act_spec, constrain, dp_axes
+
+
+def _mesh_dp(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in dp_axes(mesh)]))
+
+
+# --------------------------------------------------------------- shapes
+def _sublayer_shapes(cfg: ModelConfig, is_moe_layer: bool) -> Dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    out: Dict[str, tuple] = {"norm_attn": (d,), "norm_mlp": (d,)}
+    if cfg.has_attention:
+        out["wqkv"] = (d, (H + 2 * KV) * hd)
+        if cfg.qkv_bias:
+            out["bqkv"] = ((H + 2 * KV) * hd,)
+        out["wo"] = (H * hd, d)
+    if cfg.has_ssm:
+        gs = cfg.ssm_groups * cfg.ssm_state
+        din = cfg.ssm_dinner
+        out.update(ssm_in=(d, 2 * din + 2 * gs + cfg.ssm_heads),
+                   ssm_conv=(mamba2.CONV_K, din + 2 * gs),
+                   ssm_alog=(cfg.ssm_heads,), ssm_dtbias=(cfg.ssm_heads,),
+                   ssm_d=(cfg.ssm_heads,), ssm_gnorm=(din,),
+                   ssm_out=(din, d))
+    if is_moe_layer:
+        out.update(router=(d, cfg.n_experts),
+                   experts_gate_up=(cfg.n_experts, d, 2 * cfg.moe_dff),
+                   experts_down=(cfg.n_experts, cfg.moe_dff, d))
+        if cfg.shared_dff:
+            out.update(shared_gate_up=(d, 2 * cfg.shared_dff),
+                       shared_down=(cfg.shared_dff, d), shared_gate=(d,))
+    elif cfg.family == "ssm":
+        out.pop("norm_mlp")          # pure SSM block: no FFN sublayer
+    else:
+        ff = cfg.d_ff
+        out.update(w_gate_up=(d, 2 * ff if cfg.mlp_glu else ff),
+                   w_down=(ff, d))
+    return out
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Flat {path: ShapeDtypeStruct}. Group dim G leads layer params."""
+    G = cfg.n_layers // cfg.scan_group
+    shapes: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embed_inputs:
+        shapes["embed"] = jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model),
+                                               dtype)
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = jax.ShapeDtypeStruct(
+            (cfg.d_model, cfg.padded_vocab), dtype)
+    shapes["final_norm"] = jax.ShapeDtypeStruct((cfg.d_model,), dtype)
+    for j in range(cfg.scan_group):
+        is_moe_layer = cfg.is_moe and (j + 1) % cfg.moe_every == 0
+        for name, shp in _sublayer_shapes(cfg, is_moe_layer).items():
+            shapes[f"layers/s{j}/{name}"] = jax.ShapeDtypeStruct(
+                (G,) + shp, dtype)
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32
+                ) -> Dict[str, jax.Array]:
+    shapes = param_shapes(cfg, dtype)
+    params = {}
+    for i, (path, sds) in enumerate(sorted(shapes.items())):
+        k = jax.random.fold_in(key, i)
+        leaf = path.split("/")[-1]
+        if leaf.startswith("norm") or leaf == "ssm_gnorm":
+            params[path] = jnp.ones(sds.shape, sds.dtype)
+        elif leaf in ("ssm_dtbias",):
+            params[path] = jnp.zeros(sds.shape, sds.dtype)
+        elif leaf == "ssm_alog":
+            params[path] = jnp.log(jax.random.uniform(
+                k, sds.shape, jnp.float32, 1.0, 16.0)).astype(sds.dtype)
+        elif leaf == "ssm_d":
+            params[path] = jnp.ones(sds.shape, sds.dtype)
+        elif leaf.startswith("b"):
+            params[path] = jnp.zeros(sds.shape, sds.dtype)
+        else:
+            fan_in = sds.shape[-2] if len(sds.shape) >= 2 else sds.shape[-1]
+            std = min(0.02, fan_in ** -0.5)
+            params[path] = (jax.random.normal(k, sds.shape, jnp.float32)
+                            * std).astype(sds.dtype)
+    return params
+
+
+# --------------------------------------------------------------- blocks
+def _attn(x, pp, cfg: ModelConfig, rc: RunConfig, positions, mesh,
+          cache=None, pos=None):
+    """Attention sublayer (no residual). Returns (out, new_kv or None)."""
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, T, _ = x.shape
+    qkv = x @ pp["wqkv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        qkv = qkv + pp["bqkv"].astype(x.dtype)
+    q, k, v = jnp.split(qkv, [H * hd, (H + KV) * hd], axis=-1)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    if cfg.causal:            # encoder (hubert) uses no RoPE (conv-pos stub)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    is_decode = cache is not None
+    if mesh is not None and not is_decode:
+        hs = P(dp_axes(mesh), None, "model", None)
+        q = constrain(q, mesh, hs)
+        k = constrain(k, mesh, P(dp_axes(mesh), None, None, None))
+        v = constrain(v, mesh, P(dp_axes(mesh), None, None, None))
+
+    new_kv = None
+    if is_decode:                               # decode: T == 1
+        kc, vc = cache
+        S = kc.shape[1]
+        slot = pos % S if cfg.swa_window > 0 else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot,
+                                                 axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot,
+                                                 axis=1)
+        # flash-decode: score per cache-seq shard, psum via the softmax/V
+        # reductions — the cache never leaves its sequence sharding
+        seq_spec = None
+        if mesh is not None and cfg.swa_window == 0:
+            bdp = dp_axes(mesh) if B % _mesh_dp(mesh) == 0 else None
+            seq_spec = P(bdp, None, "model")
+        o = L.attention_decode(q, kc, vc, pos, window=cfg.swa_window,
+                               mesh=mesh, seq_spec=seq_spec)
+        new_kv = (kc, vc)
+    elif T <= rc.full_attn_max_seq:
+        o = L.attention_full(q, k, v, causal=cfg.causal,
+                             window=cfg.swa_window)
+    else:
+        o = L.attention_chunked(q, k, v, chunk=rc.attn_chunk,
+                                causal=cfg.causal, window=cfg.swa_window)
+    o = o.reshape(B, T, H * hd)
+    return o @ pp["wo"].astype(x.dtype), new_kv
+
+
+def _ssm_params(pp, x_dtype) -> mamba2.SSMParams:
+    return mamba2.SSMParams(
+        ssm_in=pp["ssm_in"].astype(x_dtype),
+        ssm_conv=pp["ssm_conv"].astype(x_dtype),
+        ssm_alog=pp["ssm_alog"], ssm_dtbias=pp["ssm_dtbias"],
+        ssm_d=pp["ssm_d"], ssm_gnorm=pp["ssm_gnorm"],
+        ssm_out=pp["ssm_out"].astype(x_dtype))
+
+
+def _moe_params(pp, x_dtype, cfg) -> moe.MoEParams:
+    if "shared_gate_up" in pp:
+        sgu = pp["shared_gate_up"].astype(x_dtype)
+        sdn = pp["shared_down"].astype(x_dtype)
+        sgt = pp["shared_gate"]
+    else:
+        sgu = jnp.zeros((cfg.d_model, 0), x_dtype)
+        sdn = jnp.zeros((0, cfg.d_model), x_dtype)
+        sgt = jnp.zeros((cfg.d_model,), jnp.float32)
+    return moe.MoEParams(
+        router=pp["router"],
+        experts_gate_up=pp["experts_gate_up"].astype(x_dtype),
+        experts_down=pp["experts_down"].astype(x_dtype),
+        shared_gate_up=sgu, shared_down=sdn, shared_gate=sgt)
+
+
+def _sublayer(x, pp, j, cfg: ModelConfig, rc: RunConfig, positions, mesh,
+              cache=None, pos=None):
+    """One layer: mixer + FFN with pre-norms. Returns (x, new_cache)."""
+    is_moe_layer = cfg.is_moe and (j + 1) % cfg.moe_every == 0
+    new_cache = {}
+    xn = L.rmsnorm(x, pp["norm_attn"].astype(x.dtype), cfg.norm_eps)
+
+    mix = jnp.zeros_like(x)
+    if cfg.has_attention:
+        kv = (cache["k"], cache["v"]) if cache is not None else None
+        a_out, new_kv = _attn(xn, pp, cfg, rc, positions, mesh, kv, pos)
+        mix = mix + a_out
+        if new_kv is not None:
+            new_cache["k"], new_cache["v"] = new_kv
+    if cfg.has_ssm:
+        sp = _ssm_params(pp, x.dtype)
+        if cache is not None:
+            sc = mamba2.SSMCache(state=cache["ssm_state"],
+                                 conv=cache["ssm_conv"])
+            s_out, sc2 = mamba2.ssd_decode(xn, sc, sp, cfg)
+            new_cache["ssm_state"], new_cache["ssm_conv"] = sc2.state, sc2.conv
+        else:
+            s_out = mamba2.ssd_forward(xn, sp, cfg)
+        mix = mix + s_out
+    if cfg.family == "hybrid":        # parallel attn + mamba heads (hymba)
+        mix = mix * 0.5
+    x = x + mix
+    if mesh is not None:
+        x = constrain(x, mesh, act_spec(mesh, seq_sharded=rc.sequence_parallel))
+
+    if "norm_mlp" in pp:              # pure-SSM blocks have no FFN
+        xn2 = L.rmsnorm(x, pp["norm_mlp"].astype(x.dtype), cfg.norm_eps)
+        if is_moe_layer:
+            mp = _moe_params(pp, x.dtype, cfg)
+            B, T, d = xn2.shape
+            if T == 1:                # decode: route the whole batch at once
+                f_out = moe.moe_ffn(xn2.reshape(B, d), mp, cfg).reshape(B, 1, d)
+            else:                     # train/prefill: route per sequence
+                dp = dp_axes(mesh) if mesh is not None else None
+                f_out = moe.moe_ffn_batched(xn2, mp, cfg, mesh, dp)
+        else:
+            f_out = L.gated_mlp(xn2, pp["w_gate_up"].astype(x.dtype),
+                                pp["w_down"].astype(x.dtype), cfg.mlp_glu)
+        x = x + f_out
+        if mesh is not None:
+            x = constrain(x, mesh,
+                          act_spec(mesh, seq_sharded=rc.sequence_parallel))
+    return x, new_cache
+
+
+def _group_params(params: Dict[str, jax.Array], cfg: ModelConfig):
+    """Split flat params into (stacked layer xs, non-layer dict)."""
+    xs: Dict[str, jax.Array] = {}
+    rest: Dict[str, jax.Array] = {}
+    for k, v in params.items():
+        (xs if k.startswith("layers/") else rest)[k] = v
+    return xs, rest
+
+
+# --------------------------------------------------------------- forward
+def forward(params: Dict[str, jax.Array], inputs: jax.Array,
+            cfg: ModelConfig, rc: RunConfig, mesh: Optional[Mesh] = None,
+            positions: Optional[jax.Array] = None,
+            last_only: bool = False) -> jax.Array:
+    """Full-sequence forward → logits (B, T, padded_vocab).
+
+    ``inputs``: int32 token ids (B, T) when cfg.embed_inputs, else float
+    frame/patch embeddings (B, T, d_model) from the modality frontend stub.
+    ``last_only``: serving prefill — slice to the final position *before*
+    the LM head so the (B, T, V) logits tensor is never materialized.
+    """
+    compute_dtype = jnp.bfloat16 if rc.dtype == "bfloat16" else jnp.float32
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(compute_dtype)
+    else:
+        x = inputs.astype(compute_dtype)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    if mesh is not None:
+        x = constrain(x, mesh, act_spec(mesh, seq_sharded=rc.sequence_parallel))
+
+    xs, rest = _group_params(params, cfg)
+
+    def group_body(x, gp):
+        for j in range(cfg.scan_group):
+            pp = {k.split("/")[-1]: v for k, v in gp.items()
+                  if k.startswith(f"layers/s{j}/")}
+            x, _ = _sublayer(x, pp, j, cfg, rc, positions, mesh)
+        return x, None
+
+    G = cfg.n_layers // cfg.scan_group
+    training = rc.remat and rc.shape.kind == "train"
+    body = group_body
+    if training:
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    K = rc.remat_blocks
+    if training and K > 1 and G % K == 0:
+        # √-remat: nested scan saving only G/K block inputs; the K inner
+        # group inputs rematerialize transiently during backward. Cuts the
+        # saved-activation chain from G to G/K + K at one extra forward.
+        xs_blocked = jax.tree.map(
+            lambda a: a.reshape((G // K, K) + a.shape[1:]), xs)
+
+        def block_body(x, block_params):
+            x, _ = jax.lax.scan(body, x, block_params)
+            return x, None
+
+        outer = jax.checkpoint(
+            block_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(outer, x, xs_blocked)
+    else:
+        x, _ = jax.lax.scan(body, x, xs)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = L.rmsnorm(x, rest["final_norm"].astype(x.dtype), cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ rest["embed"].astype(x.dtype).T
+    else:
+        logits = x @ rest["lm_head"].astype(x.dtype)
+    if mesh is not None:
+        logits = constrain(logits, mesh, P(dp_axes(mesh), None, "model"))
+    return logits
+
+
+# ----------------------------------------------------------------- cache
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                 dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Flat cache ShapeDtypeStructs, stacked over scan groups."""
+    G = cfg.n_layers // cfg.scan_group
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    S = min(max_seq, cfg.swa_window) if cfg.swa_window > 0 else max_seq
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    for j in range(cfg.scan_group):
+        pre = f"layers/s{j}/"
+        if cfg.has_attention:
+            out[pre + "k"] = jax.ShapeDtypeStruct((G, batch, S, KV, hd), dtype)
+            out[pre + "v"] = jax.ShapeDtypeStruct((G, batch, S, KV, hd), dtype)
+        if cfg.has_ssm:
+            H, Pd, St = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+            ch = cfg.ssm_dinner + 2 * cfg.ssm_groups * cfg.ssm_state
+            out[pre + "ssm_state"] = jax.ShapeDtypeStruct(
+                (G, batch, H, Pd, St), jnp.float32)
+            out[pre + "ssm_conv"] = jax.ShapeDtypeStruct(
+                (G, batch, mamba2.CONV_K - 1, ch), dtype)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, s in cache_shapes(cfg, batch, max_seq, dtype).items()}
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs per cache entry (see sharding.kvcache_spec)."""
+    dp = dp_axes(mesh)
+    out = {}
+    for j in range(cfg.scan_group):
+        pre = f"layers/s{j}/"
+        if cfg.has_attention:
+            # (G, B, S, KV, hd): batch over DP, cache seq over model —
+            # flash-decode; SWA ring buffers are small → seq unsharded
+            seq_ax = None if cfg.swa_window > 0 else "model"
+            out[pre + "k"] = P(None, dp, seq_ax, None, None)
+            out[pre + "v"] = P(None, dp, seq_ax, None, None)
+        if cfg.has_ssm:
+            out[pre + "ssm_state"] = P(None, dp, None, None, "model")
+            out[pre + "ssm_conv"] = P(None, dp, None, "model")
+    return out
+
+
+def decode_step(params: Dict[str, jax.Array], cache: Dict[str, jax.Array],
+                tokens: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                rc: RunConfig, mesh: Optional[Mesh] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: (B, 1) tokens + cache @ pos → (logits, new cache)."""
+    compute_dtype = jnp.bfloat16 if rc.dtype == "bfloat16" else jnp.float32
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    else:
+        x = tokens.astype(compute_dtype)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+
+    xs, rest = _group_params(params, cfg)
+    G = cfg.n_layers // cfg.scan_group
+
+    # The cache rides in the scan CARRY and is updated with indexed
+    # dynamic updates — a single (donated) buffer end to end. Passing it
+    # as scan xs/ys instead makes XLA double-buffer the full cache
+    # (input stack + output stack), which alone blows the HBM budget for
+    # the 32k decode cells.
+    def group_body(carry, slices):
+        x, cache_c = carry
+        gp, g = slices
+        for j in range(cfg.scan_group):
+            pp = {k.split("/")[-1]: v for k, v in gp.items()
+                  if k.startswith(f"layers/s{j}/")}
+            cc = {k.split("/")[-1]:
+                  jax.lax.dynamic_index_in_dim(v, g, 0, keepdims=False)
+                  for k, v in cache_c.items()
+                  if k.startswith(f"layers/s{j}/")}
+            x, nc = _sublayer(x, pp, j, cfg, rc, positions, mesh,
+                              cache=cc if cc else None, pos=pos)
+            for k, v in nc.items():
+                full = f"layers/s{j}/{k}"
+                cache_c = dict(cache_c)
+                cache_c[full] = jax.lax.dynamic_update_index_in_dim(
+                    cache_c[full], v.astype(cache_c[full].dtype), g, 0)
+        return (x, cache_c), None
+
+    (x, new_cache), _ = jax.lax.scan(group_body, (x, cache),
+                                     (xs, jnp.arange(G)))
+    x = L.rmsnorm(x, rest["final_norm"].astype(x.dtype), cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ rest["embed"].astype(x.dtype).T
+    else:
+        logits = x @ rest["lm_head"].astype(x.dtype)
+    return logits, new_cache

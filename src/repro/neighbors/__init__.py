@@ -1,0 +1,4 @@
+from repro.neighbors.engine import NeighborEngine
+from repro.neighbors.bitset import pack_sets
+
+__all__ = ["NeighborEngine", "pack_sets"]

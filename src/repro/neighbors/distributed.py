@@ -1,0 +1,139 @@
+"""Multi-pod sharded neighborhood computation (DESIGN.md §2).
+
+The (n × n) distance plane is the paper's entire runtime cost at scale;
+here it fans out over the production mesh with shard_map:
+
+  * query rows   sharded over the DP axes ("pod", "data"),
+  * corpus cols  sharded over "model",
+  * each device sweeps its (rowblock × colblock) tile-by-tile (row chunks
+    of ``row_chunk`` so the local distance tile stays ~0.5–1 GB),
+  * per-row weighted counts and distance histograms are psum-ed along
+    "model" — the only collective; traffic is O(n), never O(n²).
+
+The host FINEX build (Algorithm 2/3) streams these statistics; the same
+sweep with a CSR-emit step feeds the ordering at fleet scale. This
+function is the ``--arch finex`` dry-run cell: it must lower + compile on
+the 256-chip and 512-chip meshes like every LM cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ref
+from repro.sharding import dp_axes
+
+
+def sharded_neighbor_stats(x: jax.Array, y: jax.Array, w: jax.Array,
+                           eps: jax.Array, edges: jax.Array, mesh: Mesh,
+                           row_chunk: int = 2048
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted |N_ε| counts + distance histograms for all query rows.
+
+    x: (nq, d) queries, rows sharded over DP axes.
+    y: (nc, d) corpus, rows sharded over "model".
+    w: (nc,) duplicate weights, sharded with y.
+    Returns (counts (nq,), hist (nq, B)) sharded like x's rows.
+    """
+    dp = dp_axes(mesh)
+    nbins = edges.shape[0] - 1
+
+    def local(xb, yb, wb, eps_s, edges_s):
+        nq_l = xb.shape[0]
+        n_chunks = max(1, nq_l // row_chunk)
+        xc = xb.reshape(n_chunks, -1, xb.shape[-1])
+
+        def chunk_stats(xrow):
+            d = ref.pairwise_euclidean(xrow, yb)
+            cnt = jnp.where(d <= eps_s, wb[None, :], 0.0).sum(-1)
+            hist = ref.tile_histogram(d, edges_s).astype(jnp.float32)
+            return cnt, hist
+
+        cnt, hist = jax.lax.map(chunk_stats, xc)
+        cnt = cnt.reshape(nq_l)
+        hist = hist.reshape(nq_l, nbins)
+        # one psum pair along the corpus axis — O(nq) traffic
+        cnt = jax.lax.psum(cnt, "model")
+        hist = jax.lax.psum(hist, "model")
+        return cnt, hist
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None), P("model", None), P("model"), P(), P()),
+        out_specs=(P(dp), P(dp, None)))
+    return fn(x, y, w, eps, edges)
+
+
+def finex_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20, d: int = 64,
+                           nbins: int = 32, row_chunk: int = 2048):
+    """(fn, args_sds, in_shardings) for the paper-workload dry-run cell."""
+    dp = dp_axes(mesh)
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    y = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((n,), jnp.float32)
+    eps = jax.ShapeDtypeStruct((), jnp.float32)
+    edges = jax.ShapeDtypeStruct((nbins + 1,), jnp.float32)
+    shardings = (NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P("model", None)),
+                 NamedSharding(mesh, P("model")),
+                 NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+
+    def fn(x, y, w, eps, edges):
+        return sharded_neighbor_stats(x, y, w, eps, edges, mesh,
+                                      row_chunk=row_chunk)
+
+    return fn, (x, y, w, eps, edges), shardings
+
+
+def sharded_jaccard_counts(bits_q, sizes_q, bits_c, sizes_c, w, eps,
+                           mesh: Mesh, row_chunk: int = 2048) -> jax.Array:
+    """Weighted |N_ε| counts under Jaccard over the production mesh —
+    the set-data (process mining) variant of the neighborhood plane."""
+    dp = dp_axes(mesh)
+
+    def local(bq, sq, bc, sc, wb, eps_s):
+        n_chunks = max(1, bq.shape[0] // row_chunk)
+        bqc = bq.reshape(n_chunks, -1, bq.shape[-1])
+        sqc = sq.reshape(n_chunks, -1)
+
+        def chunk(args):
+            b, s = args
+            d = ref.jaccard_distance(b, s, bc, sc)
+            return jnp.where(d <= eps_s, wb[None, :], 0.0).sum(-1)
+
+        cnt = jax.lax.map(chunk, (bqc, sqc)).reshape(bq.shape[0])
+        return jax.lax.psum(cnt, "model")
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None), P(dp), P("model", None), P("model"),
+                  P("model"), P()),
+        out_specs=P(dp))
+    return fn(bits_q, sizes_q, bits_c, sizes_c, w, eps)
+
+
+def finex_jaccard_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20,
+                                   words: int = 64, row_chunk: int = 2048):
+    """Set-data FINEX plane: 1M packed 2048-token-universe bitmaps."""
+    dp = dp_axes(mesh)
+    bits = jax.ShapeDtypeStruct((n, words), jnp.uint32)
+    sizes = jax.ShapeDtypeStruct((n,), jnp.int32)
+    w = jax.ShapeDtypeStruct((n,), jnp.float32)
+    eps = jax.ShapeDtypeStruct((), jnp.float32)
+    shardings = (NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P(dp)),
+                 NamedSharding(mesh, P("model", None)),
+                 NamedSharding(mesh, P("model")),
+                 NamedSharding(mesh, P("model")),
+                 NamedSharding(mesh, P()))
+
+    def fn(bq, sq, bc, sc, w, eps):
+        return sharded_jaccard_counts(bq, sq, bc, sc, w, eps, mesh,
+                                      row_chunk=row_chunk)
+
+    return fn, (bits, sizes, bits, sizes, w, eps), shardings

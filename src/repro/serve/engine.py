@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + greedy/sampled decode.
+
+The production serve_step (the thing the decode_* dry-run cells lower) is
+``make_decode_fn`` — one jit'd token step against a sharded KV cache.
+``ServeEngine`` wraps it into a batched request loop for the examples:
+continuous batching at smoke scale (fixed batch slots, requests join as
+slots free up), greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.transformer import decode_step, init_cache
+
+
+def make_decode_fn(cfg: ModelConfig, rc: RunConfig,
+                   mesh: Optional[Mesh] = None) -> Callable:
+    """jit'd serve_step(params, cache, tokens (B,1), pos ()) per RunConfig."""
+    @functools.partial(jax.jit, static_argnames=())
+    def step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg, rc, mesh)
+    return step
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (P,) int32
+    max_new: int = 32
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot batched engine (example-scale continuous batching)."""
+
+    def __init__(self, params, cfg: ModelConfig, rc: RunConfig,
+                 batch_slots: int = 4, max_seq: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.rc = rc
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.step_fn = make_decode_fn(cfg, rc)
+        self.decode_steps = 0
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        logits = logits[:, 0, :self.cfg.vocab]
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature), np.int32)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests to completion (batch = slot-parallel)."""
+        queue = list(requests)
+        while queue:
+            active = queue[:self.slots]
+            queue = queue[len(active):]
+            B = self.slots
+            cache = init_cache(self.cfg, B, self.max_seq, jnp.float32)
+            # left-align: feed prompts token by token (prefill-as-decode at
+            # example scale; production prefill lowers forward() instead)
+            plen = max(len(r.prompt) for r in active)
+            toks = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(active):
+                toks[i, :len(r.prompt)] = r.prompt
+            last = None
+            for t in range(plen):
+                last, cache = self.step_fn(self.params, cache,
+                                           jnp.asarray(toks[:, t:t + 1]),
+                                           jnp.int32(t))
+                self.decode_steps += 1
+            nxt = self._sample(last)
+            max_new = max(r.max_new for r in active)
+            for s in range(max_new):
+                for i, r in enumerate(active):
+                    if len(r.out) < r.max_new and not r.done:
+                        r.out.append(int(nxt[i]))
+                last, cache = self.step_fn(self.params, cache,
+                                           jnp.asarray(nxt[:, None]),
+                                           jnp.int32(plen + s))
+                self.decode_steps += 1
+                nxt = self._sample(last)
+            for r in active:
+                r.done = True
+        return requests

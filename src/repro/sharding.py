@@ -1,0 +1,143 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Mesh axes (launch/mesh.py):
+  single-pod:  ("data", "model")           = (16, 16)
+  multi-pod:   ("pod", "data", "model")    = (2, 16, 16)
+
+Scheme (MaxText-style 2-level):
+  * batch/DP  over ("pod", "data") — pure replication of params across pods
+    (cross-pod traffic = one gradient all-reduce per step),
+  * FSDP      over "data" only — parameter/optimizer shards gathered
+    per-layer inside the scan, keeping gather traffic on in-pod links,
+  * TP        over "model" — fused projection output dims, vocab, expert
+    hidden dims (or the expert axis itself under EP).
+
+Rules key off parameter *path names*, not tensor ranks, so every model
+family shares one table. All sharded parameter dims are divisible by their
+mesh axes by construction (vocab padding, fused head dims) — jit
+in_shardings require exact divisibility.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel (batch) axes of this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axis(mesh: Mesh, over_pod: bool = False):
+    """FSDP shard axes: in-pod by default; spanning pods for 400B-class
+    models whose optimizer state cannot fit a single pod's HBM."""
+    if over_pod and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+# parameter-path suffix -> spec builder. 'F' = fsdp axis, 'M' = model axis.
+_PARAM_RULES: Dict[str, tuple] = {
+    "embed":        ("M", None),          # vocab-parallel embedding (V, d)
+    "pos_embed":    (None, None),
+    "lm_head":      ("F", "M"),           # (d, V)
+    "wqkv":         (None, "F", "M"),     # (L, d, fused)
+    "bqkv":         (None, "M"),          # (L, fused)
+    "wo":           (None, "M", "F"),     # (L, H*hd, d)
+    "w_gate_up":    (None, "F", "M"),     # (L, d, 2*ff)
+    "w_down":       (None, "M", "F"),     # (L, ff, d)
+    "router":       (None, "F", None),    # (L, d, E)
+    "shared_gate_up": (None, "F", "M"),   # (L, d, 2*sff) merged shared experts
+    "shared_down":  (None, "M", "F"),     # (L, sff, d)
+    "shared_gate":  (None, "F"),          # (L, d)
+    # routed experts: EP shards the expert axis, expert-TP the hidden dim
+    "experts_gate_up@ep": (None, "M", "F", None),   # (L, E, d, 2*ff)
+    "experts_down@ep":    (None, "M", None, "F"),   # (L, E, ff, d)
+    "experts_gate_up@tp": (None, None, "F", "M"),
+    "experts_down@tp":    (None, None, "M", "F"),
+    # mamba2 SSD
+    "ssm_in":       (None, "F", "M"),     # (L, d, 2*din+2*G*S+H)
+    "ssm_out":      (None, "M", "F"),     # (L, din, d)
+    "ssm_conv":     (None, None, "M"),    # (L, K, din+2*G*S)
+    "ssm_anorm":    (None, None),         # (L, H) A / dt_bias / D / norm
+    "norm":         (None, None),         # (L, d) and final (d,)
+    "scale":        (None,),
+}
+
+
+def param_spec(path: str, mesh: Mesh, expert_parallel: bool = True,
+               fsdp_over_pod: bool = False) -> P:
+    """PartitionSpec for a parameter identified by its path suffix."""
+    leaf = path.split("/")[-1]
+    key = leaf
+    if leaf.startswith("experts_"):
+        key = f"{leaf}@{'ep' if expert_parallel else 'tp'}"
+    if key not in _PARAM_RULES:
+        for k in _PARAM_RULES:       # prefix fallback (norm_1, norm_f, ...)
+            if key.startswith(k.split("@")[0]):
+                key = k if "@" not in k else key
+                break
+        else:
+            key = "norm"
+    rule = _PARAM_RULES.get(key) or _PARAM_RULES["norm"]
+    fs = fsdp_axis(mesh, fsdp_over_pod)
+    axes = tuple(fs if a == "F" else ("model" if a == "M" else None)
+                 for a in rule)
+    return P(*axes)
+
+
+def check_divisible(path: str, shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh does not divide (defensive)."""
+    fixed = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axsz = int(np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+        fixed.append(ax if dim % axsz == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(param_shapes: Dict[str, Any], mesh: Mesh,
+                    expert_parallel: bool = True,
+                    fsdp_over_pod: bool = False
+                    ) -> Dict[str, NamedSharding]:
+    """Map a flat {path: ShapeDtypeStruct} dict to NamedShardings."""
+    out = {}
+    for path, sds in param_shapes.items():
+        spec = param_spec(path, mesh, expert_parallel, fsdp_over_pod)
+        spec = check_divisible(path, sds.shape, spec, mesh)
+        out[path] = NamedSharding(mesh, spec)
+    return out
+
+
+def batch_spec(mesh: Mesh, extra=()) -> P:
+    return P(dp_axes(mesh), *extra)
+
+
+def act_spec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    """(B, T, D) activation spec; optionally sequence-parallel on 'model'."""
+    return P(dp_axes(mesh), "model" if seq_sharded else None, None)
+
+
+def kvcache_spec(mesh: Mesh, *, batch_first_dims: int = 2) -> P:
+    """(L, B, S, KV, hd): batch over DP, cache sequence over 'model'.
+
+    Sequence-sharding the cache is what makes decode_32k fit: attention
+    becomes flash-decode (partial softmax + psum over 'model'), which XLA
+    SPMD derives automatically from the reduce over the sharded S axis.
+    """
+    return P(None, dp_axes(mesh), "model", None, None)
+
+
+def ssm_state_spec(mesh: Mesh) -> P:
+    """(L, B, H, hd, S): SSD decode state — shard the state dim on 'model'."""
+    return P(None, dp_axes(mesh), None, None, "model")
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,7 @@
+from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   wsd_schedule, cosine_schedule)
+from repro.train.step import TrainState, make_train_step, cross_entropy
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "wsd_schedule",
+           "cosine_schedule", "TrainState", "make_train_step",
+           "cross_entropy"]

@@ -1,0 +1,117 @@
+"""train_step: loss + grad accumulation + AdamW, one jit-able function.
+
+Microbatching: the global batch is reshaped to (n_micro, micro, T) and
+grads are accumulated by a lax.scan — activation memory scales with the
+microbatch, gradient/optimizer memory stays fully sharded (FSDP), and the
+DP gradient reduction happens once per step on the accumulated grads
+(XLA turns it into reduce-scatter against the FSDP shards).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.transformer import forward
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.compression import compress_grads_int8
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+    @property
+    def step(self):
+        return self.opt.step
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  true_vocab: int) -> jax.Array:
+    """Mean CE over tokens; padded-vocab columns are masked out."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if true_vocab < V:
+        pad_mask = jnp.arange(V) >= true_vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(cfg: ModelConfig, rc: RunConfig,
+                    mesh: Optional[Mesh] = None,
+                    lr_fn: Optional[Callable] = None,
+                    n_micro: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, T) int32, "labels": (B, T) int32} — or
+    {"embeds": (B, T, d), "labels": (B, T)} for frontend-stub models.
+    """
+    if lr_fn is None:
+        lr_fn = lambda step: jnp.float32(3e-4)
+
+    input_key = "tokens" if cfg.embed_inputs else "embeds"
+
+    def loss_fn(params, micro):
+        logits = forward(params, micro[input_key], cfg, rc, mesh)
+        return cross_entropy(logits, micro["labels"], cfg.vocab)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        B = batch["labels"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        micros = jax.tree.map(
+            lambda x: x.reshape((n_micro, B // n_micro) + x.shape[1:]), batch)
+
+        if rc.accum_mode == "loss":
+            # grad-of-scanned-loss: autodiff accumulates parameter grads
+            # across the micro scan, so the DP gradient reduction happens
+            # ONCE per step and there is a single gradient buffer (§Perf).
+            # The body must itself be checkpointed: otherwise the scan
+            # saves every microbatch's residuals and activation memory
+            # grows n_micro-fold.
+            ckpt_loss = jax.checkpoint(
+                loss_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+            def total_loss(params):
+                def body(acc, micro):
+                    return acc + ckpt_loss(params, micro), None
+                tot, _ = jax.lax.scan(body, jnp.float32(0.0), micros)
+                return tot / n_micro
+            loss, grads = jax.value_and_grad(total_loss)(state.params)
+            loss_sum = loss * n_micro
+        else:
+            # baseline: per-micro grads accumulated in a sharded buffer
+            def micro_body(acc, micro):
+                g_acc, l_acc = acc
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss_sum), _ = jax.lax.scan(micro_body, (zeros, 0.0),
+                                                micros)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if rc.grad_compression and mesh is not None:
+            grads = compress_grads_int8(grads, mesh)
+        loss = loss_sum / n_micro
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, lr)
+        metrics = {"loss": loss, "lr": lr,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_state(key: jax.Array, cfg: ModelConfig) -> TrainState:
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params))

@@ -1,0 +1,36 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — the main test session must
+see exactly 1 device; multi-device tests spawn subprocesses with their own
+flags (tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
+from repro.neighbors.bitset import pack_sets
+from repro.neighbors.engine import NeighborEngine
+
+
+@pytest.fixture(scope="session")
+def vec_engine():
+    x = gaussian_mixture(600, d=4, k=5, seed=7)
+    return NeighborEngine(x, metric="euclidean")
+
+
+@pytest.fixture(scope="session")
+def vec_index(vec_engine):
+    from repro.core import finex_build
+    idx, csr = finex_build(vec_engine, eps=0.35, minpts=8)
+    return idx, csr
+
+
+@pytest.fixture(scope="session")
+def set_engine():
+    sets, w = heavy_tail_sets(900, seed=11)
+    bits, sizes = pack_sets(sets)
+    return NeighborEngine((bits, sizes), metric="jaccard", weights=w)
+
+
+@pytest.fixture(scope="session")
+def set_index(set_engine):
+    from repro.core import finex_build
+    idx, csr = finex_build(set_engine, eps=0.4, minpts=16)
+    return idx, csr

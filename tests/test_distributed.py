@@ -1,0 +1,156 @@
+"""Multi-device tests, each in a subprocess with its own XLA_FLAGS
+(the main session must keep exactly 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=900)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr[-4000:]}"
+    return p.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """FSDP+TP train step on a 2x4 mesh must reproduce the single-device
+    step bit-for-bit (up to float tolerance)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import RunConfig, ShapeConfig, get_arch
+        from repro.data.tokens import TokenStream
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding import param_shardings, batch_spec
+        from repro.models.transformer import param_shapes
+        from repro.train.step import init_state, make_train_step
+        from repro.train.optimizer import AdamWState
+
+        cfg = get_arch('stablelm-1.6b').reduced(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+            vocab=256, head_dim=16)
+        shape = ShapeConfig('t', 32, 4, 'train')
+        batch = {k: jnp.asarray(v)
+                 for k, v in TokenStream(cfg, 32, 4).batch_at(0).items()}
+
+        # single device reference
+        rc0 = RunConfig(model=cfg, shape=shape, remat=False, dtype='float32')
+        ref_fn = jax.jit(make_train_step(cfg, rc0, lr_fn=lambda s: 1e-3,
+                                         n_micro=2))
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        ref_state, ref_m = ref_fn(state, batch)
+
+        # sharded on a (2 data, 4 model) mesh
+        mesh = make_host_mesh(2, 4)
+        rc = RunConfig(model=cfg, shape=shape, remat=False, dtype='float32')
+        ps = param_shardings(param_shapes(cfg, jnp.float32), mesh)
+        state_sh = type(state)(params=ps, opt=AdamWState(
+            step=NamedSharding(mesh, P()), m=dict(ps), v=dict(ps)))
+        batch_sh = {k: NamedSharding(mesh, P(('data',), None))
+                    for k in batch}
+        with mesh:
+            fn = jax.jit(make_train_step(cfg, rc, mesh, lr_fn=lambda s: 1e-3,
+                                         n_micro=2),
+                         in_shardings=(state_sh, batch_sh))
+            sh_state, sh_m = fn(state, batch)
+        assert abs(float(ref_m['loss']) - float(sh_m['loss'])) < 1e-4, \
+            (float(ref_m['loss']), float(sh_m['loss']))
+        for a, b in zip(jax.tree.leaves(ref_state.params),
+                        jax.tree.leaves(sh_state.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-5)
+        print('SHARDED_OK', float(sh_m['loss']))
+    """)
+    assert "SHARDED_OK" in out
+
+
+def test_distributed_neighbor_stats_match_local():
+    """shard_map neighborhood sweep == local engine counts/histograms."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ref
+        from repro.neighbors.distributed import sharded_neighbor_stats
+        from repro.launch.mesh import make_host_mesh
+
+        rng = np.random.default_rng(0)
+        n, d = 512, 8
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        w = jnp.asarray(rng.integers(1, 4, size=n), jnp.float32)
+        eps = jnp.float32(1.5)
+        edges = jnp.linspace(0.0, 8.0, 17)
+
+        mesh = make_host_mesh(2, 4)
+        cnt, hist = sharded_neighbor_stats(x, x, w, eps, edges, mesh,
+                                           row_chunk=64)
+        d_full = np.asarray(ref.pairwise_euclidean(x, x))
+        cnt_ref = np.where(d_full <= 1.5, np.asarray(w)[None, :], 0).sum(-1)
+        hist_ref = np.asarray(ref.tile_histogram(jnp.asarray(d_full), edges))
+        np.testing.assert_allclose(np.asarray(cnt), cnt_ref, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(hist), hist_ref)
+        print('DIST_NEIGHBORS_OK')
+    """)
+    assert "DIST_NEIGHBORS_OK" in out
+
+
+def test_sharded_decode_matches_single_device():
+    """Flash-decode (seq-sharded cache) == single-device decode."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import RunConfig, ShapeConfig, get_arch
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding import param_shardings
+        from repro.models.transformer import (param_shapes, init_params,
+                                              init_cache, decode_step,
+                                              cache_specs)
+
+        cfg = get_arch('qwen2-72b').reduced(n_layers=2, d_model=64,
+                                            n_heads=8, n_kv_heads=4,
+                                            d_ff=128, vocab=256, head_dim=16)
+        rc = RunConfig(model=cfg, shape=ShapeConfig('d', 32, 4, 'decode'),
+                       remat=False, dtype='float32')
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 1), 0, 256)
+        cache = init_cache(cfg, 4, 32, jnp.float32)
+
+        ref_logits, _ = decode_step(params, cache, toks, jnp.int32(0),
+                                    cfg, rc)
+
+        mesh = make_host_mesh(2, 4)
+        ps = param_shardings(param_shapes(cfg, jnp.float32), mesh)
+        cs = {k: NamedSharding(mesh, spec)
+              for k, spec in cache_specs(cfg, mesh).items()}
+        with mesh:
+            fn = jax.jit(lambda p, c, t, s: decode_step(p, c, t, s, cfg, rc,
+                                                        mesh),
+                         in_shardings=(ps, cs,
+                                       NamedSharding(mesh, P(('data',), None)),
+                                       NamedSharding(mesh, P())))
+            sh_logits, _ = fn(params, cache, toks, jnp.int32(0))
+        np.testing.assert_allclose(np.asarray(ref_logits),
+                                   np.asarray(sh_logits),
+                                   rtol=2e-4, atol=2e-4)
+        print('DECODE_SHARDED_OK')
+    """)
+    assert "DECODE_SHARDED_OK" in out
+
+
+def test_dryrun_entrypoint_single_cell():
+    """The dry-run driver itself (512 host devices) on the smallest cell."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+         "--shape", "decode_32k", "--mesh", "single", "--force",
+         "--out", "/tmp/test_dryrun.json"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "[ok" in p.stdout

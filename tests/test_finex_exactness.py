@@ -1,0 +1,129 @@
+"""FINEX queries must be EXACT (Definition 3.5) against the DBSCAN oracle,
+for both metrics, both query types, across parameter ranges — the core
+claim of the paper (Thm 5.6, §5.4, Cor 5.5)."""
+import numpy as np
+import pytest
+
+from repro.core import (assert_equivalent_exact, dbscan_from_csr,
+                        eps_star_query, finex_build, minpts_star_query,
+                        query_clustering, QueryStats)
+
+
+EPS_V, MINPTS_V = 0.35, 8
+EPS_S, MINPTS_S = 0.4, 16
+
+
+@pytest.mark.parametrize("eps_star", [0.35, 0.3, 0.25, 0.2, 0.12, 0.05])
+def test_eps_star_exact_vectors(vec_engine, vec_index, eps_star):
+    idx, csr = vec_index
+    lab = eps_star_query(idx, vec_engine, eps_star)
+    oracle = dbscan_from_csr(csr, vec_engine.weights, eps_star, MINPTS_V)
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, eps_star,
+                            MINPTS_V, f"eps*={eps_star}")
+
+
+@pytest.mark.parametrize("minpts_star", [8, 9, 16, 31, 64, 200])
+def test_minpts_star_exact_vectors(vec_engine, vec_index, minpts_star):
+    idx, csr = vec_index
+    lab = minpts_star_query(idx, csr, minpts_star)
+    oracle = dbscan_from_csr(csr, vec_engine.weights, EPS_V, minpts_star)
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, EPS_V,
+                            minpts_star, f"minpts*={minpts_star}")
+
+
+@pytest.mark.parametrize("eps_star", [0.4, 0.33, 0.25, 0.18, 0.1])
+def test_eps_star_exact_sets(set_engine, set_index, eps_star):
+    idx, csr = set_index
+    lab = eps_star_query(idx, set_engine, eps_star)
+    oracle = dbscan_from_csr(csr, set_engine.weights, eps_star, MINPTS_S)
+    assert_equivalent_exact(lab, oracle, csr, set_engine.weights, eps_star,
+                            MINPTS_S, f"jaccard eps*={eps_star}")
+
+
+@pytest.mark.parametrize("minpts_star", [16, 17, 40, 128, 500])
+def test_minpts_star_exact_sets(set_engine, set_index, minpts_star):
+    idx, csr = set_index
+    lab = minpts_star_query(idx, csr, minpts_star)
+    oracle = dbscan_from_csr(csr, set_engine.weights, EPS_S, minpts_star)
+    assert_equivalent_exact(lab, oracle, csr, set_engine.weights, EPS_S,
+                            minpts_star, f"jaccard minpts*={minpts_star}")
+
+
+def test_linear_scan_exact_at_generating_pair(vec_engine, vec_index):
+    """Corollary 5.5: Algorithm 1 alone is exact at ε* = ε."""
+    idx, csr = vec_index
+    lab = query_clustering(idx, EPS_V)
+    oracle = dbscan_from_csr(csr, vec_engine.weights, EPS_V, MINPTS_V)
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, EPS_V,
+                            MINPTS_V, "Cor 5.5")
+
+
+def test_eps_star_query_does_less_work_than_dbscan(vec_engine, vec_index):
+    """§5.3: an ε*-query performs *fewer* distance computations than
+    DBSCAN from scratch (candidate×core verification only)."""
+    idx, csr = vec_index
+    stats = QueryStats()
+    eps_star_query(idx, vec_engine, 0.25, stats=stats)
+    n = vec_engine.n
+    assert stats.verification_pairs < n * n / 10, (
+        f"{stats.verification_pairs} pairs vs {n * n} for DBSCAN")
+
+
+def test_minpts_star_fast_path(vec_engine, vec_index):
+    """§5.4 optimization: if no core loses status, components come from
+    the sparse clustering with no Algorithm-4 BFS at all."""
+    idx, csr = vec_index
+    counts = idx.N
+    cores = counts[counts >= MINPTS_V]
+    if cores.size == 0:
+        pytest.skip("no cores")
+    # choose MinPts* ≤ every core's N: nobody is demoted
+    mstar = int(cores.min())
+    if mstar < MINPTS_V:
+        pytest.skip("cannot exercise fast path")
+    stats = QueryStats()
+    lab = minpts_star_query(idx, csr, max(MINPTS_V, mstar), stats=stats)
+    assert stats.fast_path
+    oracle = dbscan_from_csr(csr, vec_engine.weights, EPS_V,
+                             max(MINPTS_V, mstar))
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, EPS_V,
+                            max(MINPTS_V, mstar), "fast path")
+
+
+def test_index_attrs_validate(vec_index, set_index):
+    for idx, _ in (vec_index, set_index):
+        idx.validate()
+
+
+def test_save_load_roundtrip(tmp_path, vec_index, vec_engine):
+    idx, csr = vec_index
+    p = str(tmp_path / "index.npz")
+    idx.save(p)
+    from repro.core.ordering import FinexOrdering
+    idx2 = FinexOrdering.load(p)
+    lab1 = eps_star_query(idx, vec_engine, 0.2)
+    lab2 = eps_star_query(idx2, vec_engine, 0.2)
+    assert np.array_equal(lab1, lab2)
+
+
+@pytest.mark.parametrize("minpts_star", [8, 20, 64, 256])
+def test_anyfinex_minpts_star_exact(vec_engine, vec_index, minpts_star):
+    """AnyFINEX (§6.3): FINEX noise filter + AnyDBC-style connector."""
+    from repro.core.anydbc import anyfinex_minpts_star
+    idx, csr = vec_index
+    lab, stats = anyfinex_minpts_star(idx, csr, vec_engine, minpts_star)
+    oracle = dbscan_from_csr(csr, vec_engine.weights, EPS_V, minpts_star)
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, EPS_V,
+                            minpts_star, f"anyfinex minpts*={minpts_star}")
+    # queries only over preserved cores — never the whole dataset
+    assert stats["queries"] <= stats["cores"]
+
+
+def test_anydbc_baseline_exact(vec_engine, vec_index):
+    from repro.core.anydbc import anydbc
+    idx, csr = vec_index
+    lab, stats = anydbc(vec_engine, EPS_V, MINPTS_V, seed=7)
+    oracle = dbscan_from_csr(csr, vec_engine.weights, EPS_V, MINPTS_V)
+    assert_equivalent_exact(lab, oracle, csr, vec_engine.weights, EPS_V,
+                            MINPTS_V, "anydbc")
+    assert stats["queries"] <= vec_engine.n

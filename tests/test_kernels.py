@@ -1,0 +1,125 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes as the kernel contract requires."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.jaccard import (jaccard_distance_pallas,
+                                   jaccard_eps_count_pallas)
+from repro.kernels.kthdist import dist_histogram_pallas, kth_smallest_bisect
+from repro.kernels.pairwise import eps_count_pallas, pairwise_euclidean_pallas
+from repro.neighbors.bitset import pack_sets, unpack_set
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("m,n,d", [(8, 8, 4), (70, 150, 5), (128, 128, 32),
+                                   (129, 257, 7), (1, 300, 16), (300, 1, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_euclidean_matches_ref(m, n, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(m, d)), dtype)
+    y = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    got = pairwise_euclidean_pallas(x, y, interpret=True)
+    want = ref.pairwise_euclidean(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,d,eps", [(64, 200, 8, 1.0), (130, 70, 3, 2.5),
+                                       (5, 500, 16, 0.5)])
+def test_eps_count_fused_matches_ref(m, n, d, eps):
+    x = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(RNG.integers(1, 5, size=n), jnp.float32)
+    got = eps_count_pallas(x, y, eps, w, interpret=True)
+    d_ref = np.asarray(ref.pairwise_euclidean(x, y))
+    want = np.where(d_ref <= eps, np.asarray(w)[None, :], 0).sum(-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,n,universe", [(40, 90, 200), (128, 128, 64),
+                                          (13, 260, 1000)])
+def test_jaccard_pallas_matches_ref_and_python(m, n, universe):
+    sets_a = [RNG.choice(universe, size=RNG.integers(1, 20), replace=False)
+              for _ in range(m)]
+    sets_b = [RNG.choice(universe, size=RNG.integers(1, 20), replace=False)
+              for _ in range(n)]
+    ba, sa = pack_sets(sets_a, universe)
+    bb, sb = pack_sets(sets_b, universe)
+    got = np.asarray(jaccard_distance_pallas(
+        jnp.asarray(ba), jnp.asarray(sa), jnp.asarray(bb), jnp.asarray(sb),
+        interpret=True))
+    want = np.asarray(ref.jaccard_distance(
+        jnp.asarray(ba), jnp.asarray(sa), jnp.asarray(bb), jnp.asarray(sb)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # spot-check against pure-python set arithmetic
+    for i, j in [(0, 0), (m // 2, n // 2), (m - 1, n - 1)]:
+        A, B = set(map(int, sets_a[i])), set(map(int, sets_b[j]))
+        exact = 1.0 - len(A & B) / len(A | B)
+        assert abs(got[i, j] - exact) < 1e-6
+
+
+def test_jaccard_count_fused():
+    sets, w = [set(RNG.choice(100, size=8, replace=False)) for _ in range(60)], \
+        RNG.integers(1, 4, size=60)
+    bits, sizes = pack_sets(sets, 100)
+    got = np.asarray(jaccard_eps_count_pallas(
+        jnp.asarray(bits), jnp.asarray(sizes), jnp.asarray(bits),
+        jnp.asarray(sizes), 0.7, jnp.asarray(w, jnp.float32), interpret=True))
+    dm = np.asarray(ref.jaccard_distance(
+        jnp.asarray(bits), jnp.asarray(sizes), jnp.asarray(bits),
+        jnp.asarray(sizes)))
+    want = np.where(dm <= np.float32(0.7), w[None, :], 0).sum(-1)
+    np.testing.assert_allclose(got, want)
+
+
+def test_dist_histogram_rows_sum_to_n():
+    x = jnp.asarray(RNG.normal(size=(50, 6)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(170, 6)), jnp.float32)
+    dmax = float(np.asarray(ref.pairwise_euclidean(x, y)).max())
+    edges = jnp.linspace(0.0, dmax + 1e-3, 17)
+    got = np.asarray(dist_histogram_pallas(x, y, edges, interpret=True))
+    want = np.asarray(ref.tile_histogram(ref.pairwise_euclidean(x, y), edges))
+    np.testing.assert_allclose(got, want)
+    assert (got.sum(1) == 170).all()
+
+
+def test_kth_smallest_bisect_close_to_sort():
+    x = RNG.normal(size=(40, 5)).astype(np.float32)
+    y = RNG.normal(size=(300, 5)).astype(np.float32)
+    k = 10
+    got = kth_smallest_bisect(x, y, k, interpret=True)
+    d = np.asarray(ref.pairwise_euclidean(jnp.asarray(x), jnp.asarray(y)))
+    want = np.sort(d, axis=1)[:, k - 1]
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_sliding_window_attention_ref_vs_full_mask():
+    q = jnp.asarray(RNG.normal(size=(2, 32, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 32, 4, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 32, 4, 16)), jnp.float32)
+    from repro.models.layers import attention_full
+    got = ref.sliding_window_attention(q, k, v, window=8)
+    want = attention_full(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("T,H,KV,hd,win,bq,bk",
+                         [(64, 4, 2, 16, 16, 16, 16),
+                          (128, 2, 2, 32, 32, 32, 16),
+                          (64, 4, 4, 16, 0, 16, 16),
+                          (96, 2, 1, 16, 24, 16, 8)])
+def test_flash_swa_kernel_matches_oracle(T, H, KV, hd, win, bq, bk):
+    from repro.kernels.flash_swa import flash_swa_attention
+    from repro.models.layers import attention_full
+    q = jnp.asarray(RNG.normal(size=(2, T, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, T, KV, hd)), jnp.float32)
+    got = flash_swa_attention(q, k, v, window=win, causal=True,
+                              bq=bq, bk=bk, interpret=True)
+    want = attention_full(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

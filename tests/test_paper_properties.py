@@ -1,0 +1,154 @@
+"""Property-based tests of the paper's theorems (hypothesis-driven).
+
+Each theorem/proposition becomes an executable invariant over randomized
+datasets and parameters:
+  * Prop 3.9  — ε-nested clusters
+  * Prop 5.7  — MinPts-nested clusters
+  * Thm 4.3   — OPTICS approximate clusters: S ⊆ K, all ε*-cores in S
+  * Thm 5.2/5.3 — FINEX never mislabels non-core borders
+  * Thm 5.4   — former-cores classified identically by FINEX and OPTICS
+  * recall(FINEX) ≥ recall(OPTICS) (§5.2, Table 3's ordering)
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (border_recall, dbscan_from_csr, filtered_counts,
+                        finex_build, optics_build, query_clustering)
+from repro.data.synthetic import gaussian_mixture
+from repro.neighbors.engine import NeighborEngine
+
+SETTINGS = dict(deadline=None, max_examples=12,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def _setup(seed: int, eps: float, minpts: int):
+    x = gaussian_mixture(320, d=3, k=4, seed=seed)
+    eng = NeighborEngine(x, metric="euclidean")
+    idx, csr = finex_build(eng, eps, minpts)
+    return eng, idx, csr
+
+
+def _assert_nested(dense, sparse, dense_core):
+    """Prop 3.9/5.7 on EXACT clusterings: Def-3.4 clusters may overlap on
+    ambiguous borders, and exact partitions assign those to one host
+    arbitrarily — so the single-host requirement applies to the dense
+    cluster's CORES (which are sparse cores, hence unambiguous); every
+    member must still be inside *some* sparse cluster (never noise)."""
+    for k in range(dense.max() + 1):
+        members = np.nonzero(dense == k)[0]
+        assert -1 not in set(sparse[members].tolist()), \
+            f"dense cluster {k} has members that are sparse noise"
+        core_hosts = set(sparse[members[dense_core[members]]].tolist())
+        assert len(core_hosts) <= 1, \
+            f"dense cluster {k} cores span sparse clusters {core_hosts}"
+
+
+@given(seed=st.integers(0, 50), frac=st.floats(0.3, 1.0))
+@settings(**SETTINGS)
+def test_prop_3_9_eps_nested_clusters(seed, frac):
+    """Every (ε*, MinPts)-cluster is inside some (ε, MinPts)-cluster."""
+    eng, idx, csr = _setup(seed, 0.4, 6)
+    eps_star = float(np.float32(0.4 * frac))
+    dense = dbscan_from_csr(csr, eng.weights, eps_star, 6)
+    sparse = dbscan_from_csr(csr, eng.weights, 0.4, 6)
+    dense_core = filtered_counts(csr, eng.weights, eps_star) >= 6
+    _assert_nested(dense, sparse, dense_core)
+
+
+@given(seed=st.integers(0, 50), mult=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_prop_5_7_minpts_nested_clusters(seed, mult):
+    eng, idx, csr = _setup(seed, 0.4, 6)
+    dense = dbscan_from_csr(csr, eng.weights, 0.4, 6 * mult)
+    sparse = dbscan_from_csr(csr, eng.weights, 0.4, 6)
+    dense_core = filtered_counts(csr, eng.weights, 0.4) >= 6 * mult
+    _assert_nested(dense, sparse, dense_core)
+
+
+@given(seed=st.integers(0, 30), frac=st.floats(0.4, 1.0))
+@settings(**SETTINGS)
+def test_thm_4_3_optics_approx_subset_and_cores(seed, frac):
+    """OPTICS approximate clusters: (a) S ⊆ K; (c) every ε*-core ∈ S."""
+    x = gaussian_mixture(320, d=3, k=4, seed=seed)
+    eng = NeighborEngine(x, metric="euclidean")
+    ordering, csr = optics_build(eng, 0.4, 6)
+    eps_star = float(np.float32(0.4 * frac))
+    approx = query_clustering(ordering, eps_star)
+    oracle = dbscan_from_csr(csr, eng.weights, eps_star, 6)
+    counts = filtered_counts(csr, eng.weights, eps_star)
+    core = counts >= 6
+    # S ⊆ K up to ambiguous borders (the exact oracle assigns those to one
+    # of their clusters arbitrarily): check via core members, and require
+    # no member of S to be oracle-noise
+    _assert_nested(approx, oracle, core)
+    # all cores clustered (Thm 4.3c)
+    assert np.all(approx[core] >= 0), "OPTICS mislabeled an eps*-core"
+
+
+@given(seed=st.integers(0, 30), frac=st.floats(0.3, 1.0))
+@settings(**SETTINGS)
+def test_thm_5_3_noncore_borders_never_missed(seed, frac):
+    """FINEX linear scan: non-core (at ε) borders are never labeled noise."""
+    eng, idx, csr = _setup(seed, 0.4, 6)
+    eps_star = float(np.float32(0.4 * frac))
+    lab = query_clustering(idx, eps_star)
+    oracle = dbscan_from_csr(csr, eng.weights, eps_star, 6)
+    counts_gen = filtered_counts(csr, eng.weights, 0.4)
+    counts_star = filtered_counts(csr, eng.weights, eps_star)
+    noncore_gen = counts_gen < 6
+    border_star = (oracle >= 0) & (counts_star < 6)
+    mislabeled = noncore_gen & border_star & (lab < 0)
+    assert not mislabeled.any(), \
+        f"non-core borders labeled noise: {np.nonzero(mislabeled)[0][:5]}"
+    # noise at eps* must also be noise in the scan
+    assert not ((oracle < 0) & (lab >= 0)).any()
+
+
+@given(seed=st.integers(0, 30), frac=st.floats(0.3, 1.0))
+@settings(**SETTINGS)
+def test_thm_5_4_former_cores_parity_with_optics(seed, frac):
+    """Former-cores are clustered by FINEX iff OPTICS clusters them."""
+    x = gaussian_mixture(320, d=3, k=4, seed=seed)
+    eng = NeighborEngine(x, metric="euclidean")
+    fidx, csr = finex_build(eng, 0.4, 6)
+    oidx, _ = optics_build(eng, 0.4, 6, csr=csr)
+    eps_star = float(np.float32(0.4 * frac))
+    lf = query_clustering(fidx, eps_star)
+    lo = query_clustering(oidx, eps_star)
+    former = (fidx.C > eps_star) & (fidx.C <= 0.4)
+    diff = (lf[former] >= 0) != (lo[former] >= 0)
+    assert not diff.any(), \
+        f"former-core parity broken for {np.nonzero(former)[0][diff][:5]}"
+
+
+@given(seed=st.integers(0, 30), frac=st.floats(0.3, 1.0))
+@settings(**SETTINGS)
+def test_finex_recall_at_least_optics(seed, frac):
+    x = gaussian_mixture(320, d=3, k=4, seed=seed)
+    eng = NeighborEngine(x, metric="euclidean")
+    fidx, csr = finex_build(eng, 0.4, 6)
+    oidx, _ = optics_build(eng, 0.4, 6, csr=csr)
+    eps_star = float(np.float32(0.4 * frac))
+    oracle = dbscan_from_csr(csr, eng.weights, eps_star, 6)
+    core = filtered_counts(csr, eng.weights, eps_star) >= 6
+    rf = border_recall(query_clustering(fidx, eps_star), oracle, core)
+    ro = border_recall(query_clustering(oidx, eps_star), oracle, core)
+    assert rf >= ro - 1e-12, (rf, ro)
+
+
+@given(seed=st.integers(0, 40))
+@settings(**SETTINGS)
+def test_core_distance_definition(seed):
+    """Def 3.7: C(p) is the k-th smallest distance for cores, inf else."""
+    x = gaussian_mixture(200, d=3, k=3, seed=seed)
+    eng = NeighborEngine(x, metric="euclidean")
+    idx, csr = finex_build(eng, 0.5, 5)
+    d = eng.distances_from(np.arange(eng.n))
+    kth = np.sort(d, axis=1)[:, 4]
+    counts = (d <= np.float32(0.5)).sum(1)
+    for p in range(eng.n):
+        if counts[p] >= 5:
+            assert abs(idx.C[p] - kth[p]) < 1e-5
+        else:
+            assert np.isinf(idx.C[p])

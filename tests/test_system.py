@@ -1,0 +1,60 @@
+"""End-to-end system behaviour: the paper's full interactive workflow and
+its integration into the training stack."""
+import numpy as np
+import pytest
+
+from repro.core import (assert_equivalent_exact, dbscan_from_csr,
+                        eps_star_query, finex_build, minpts_star_query)
+from repro.core.anydbc import anydbc
+from repro.data.synthetic import two_scale_blobs
+from repro.neighbors.engine import NeighborEngine
+
+
+def test_interactive_exploration_end_to_end():
+    """The Figure-1 scenario: one permissive build answers clusterings at
+    multiple densities, all exact; MinPts tuning splits/keeps clusters."""
+    x = two_scale_blobs(900, seed=3)
+    engine = NeighborEngine(x, metric="euclidean")
+    eps, minpts = 0.5, 10
+    index, csr = finex_build(engine, eps, minpts)
+
+    # sparse setting: the two dense blobs may merge into one cluster
+    sparse = eps_star_query(index, engine, 0.5)
+    # dense setting: they must split and the sparse blob dissolves
+    dense = eps_star_query(index, engine, 0.12)
+    assert dense.max() >= sparse.max(), "tighter eps* cannot merge clusters"
+
+    for eps_star in (0.5, 0.3, 0.12):
+        lab = eps_star_query(index, engine, eps_star)
+        oracle = dbscan_from_csr(csr, engine.weights, eps_star, minpts)
+        assert_equivalent_exact(lab, oracle, csr, engine.weights, eps_star,
+                                minpts, f"e2e eps*={eps_star}")
+    for ms in (10, 30, 90):
+        lab = minpts_star_query(index, csr, ms)
+        oracle = dbscan_from_csr(csr, engine.weights, eps, ms)
+        assert_equivalent_exact(lab, oracle, csr, engine.weights, eps, ms,
+                                f"e2e minpts*={ms}")
+
+
+def test_anydbc_baseline_exact_and_prunes_vectors():
+    x = two_scale_blobs(700, seed=5)
+    engine = NeighborEngine(x, metric="euclidean")
+    _, csr = engine.materialize(0.4)
+    labels, stats = anydbc(engine, 0.4, 8, seed=2)
+    oracle = dbscan_from_csr(csr, engine.weights, 0.4, 8)
+    assert_equivalent_exact(labels, oracle, csr, engine.weights, 0.4, 8,
+                            "anydbc e2e")
+    assert stats["pruned"] >= 0
+
+
+def test_quickstart_example_runs():
+    import subprocess
+    import sys
+    import os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    p = subprocess.run([sys.executable, "examples/quickstart.py"],
+                       env=dict(os.environ,
+                                PYTHONPATH=os.path.join(repo, "src")),
+                       capture_output=True, text=True, cwd=repo, timeout=600)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "exact" in p.stdout.lower()
