@@ -20,10 +20,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (border_recall, dbscan_from_csr, eps_star_query,
-                        filtered_counts, finex_build, minpts_star_query,
-                        optics_build, query_clustering, QueryStats,
-                        assert_equivalent_exact)
+from repro.core import (border_recall, dbscan_from_csr, filtered_counts,
+                        FinexIndex, optics_build, query_clustering,
+                        QueryStats, assert_equivalent_exact)
 from repro.core.anydbc import anydbc
 from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
 from repro.neighbors.bitset import pack_sets
@@ -54,12 +53,14 @@ def fig6_7_eps_star(engines, rows: List[str], check: bool = True) -> None:
         eps, minpts = (0.25, 16) if kind == "vector" else (0.6, 16)
         grid = [eps * f for f in
                 (1.0, 0.92, 0.84, 0.76, 0.68, 0.6, 0.52, 0.44, 0.36, 0.28)]
-        (idx, csr), t_build = _timed(lambda: finex_build(eng, eps, minpts))
+        index, t_build = _timed(lambda: FinexIndex.from_engine(eng, eps,
+                                                               minpts))
+        csr = index.csr
         for eps_star in grid:
             eng.distance_rows_computed = 0
             stats = QueryStats()
             lab_f, t_f = _timed(
-                lambda: eps_star_query(idx, eng, eps_star, stats=stats))
+                lambda: index.eps_star(eps_star, stats=stats))
             q_f = eng.distance_rows_computed
 
             # DBSCAN from scratch: charged the full re-materialization of
@@ -93,12 +94,12 @@ def fig6_7_eps_star(engines, rows: List[str], check: bool = True) -> None:
 def fig8_9_minpts_star(engines, rows: List[str], check: bool = True) -> None:
     for kind, eng in engines.items():
         eps, minpts = (0.25, 8) if kind == "vector" else (0.5, 8)
-        idx, csr = finex_build(eng, eps, minpts)
+        index = FinexIndex.from_engine(eng, eps, minpts)
+        idx, csr = index.ordering, index.csr
         for ms in MINPTS_GRID:
             stats = QueryStats()
             eng.distance_rows_computed = 0
-            lab_f, t_f = _timed(lambda: minpts_star_query(idx, csr, ms,
-                                                          stats=stats))
+            lab_f, t_f = _timed(lambda: index.minpts_star(ms, stats=stats))
 
             def _dbscan_scratch():
                 _, csr_g = eng.materialize(eps)
@@ -131,7 +132,8 @@ def table3_recall(engines, rows: List[str]) -> None:
     recalls_f, recalls_o = {}, {}
     for kind, eng in engines.items():
         eps, minpts = (0.25, 16) if kind == "vector" else (0.6, 16)
-        fidx, csr = finex_build(eng, eps, minpts)
+        index = FinexIndex.from_engine(eng, eps, minpts)
+        fidx, csr = index.ordering, index.csr
         oidx, _ = optics_build(eng, eps, minpts, csr=csr)
         for frac in (1.0, 0.92, 0.84, 0.76, 0.68, 0.6):
             eps_star = float(np.float32(eps * frac))
@@ -158,7 +160,8 @@ def table4_build_times(engines, rows: List[str]) -> None:
         (_, _), t_bfs = _timed(
             lambda: (dbscan_from_csr(csr, eng.weights, eps, minpts), None))
         t_dbscan = t_mat + t_bfs
-        (_, _), t_f = _timed(lambda: finex_build(eng, eps, minpts, csr=csr))
+        _, t_f = _timed(lambda: FinexIndex.from_engine(eng, eps, minpts,
+                                                       csr=csr))
         t_finex = t_mat + t_f
         (_, _), t_o = _timed(lambda: optics_build(eng, eps, minpts, csr=csr))
         t_optics = t_mat + t_o

@@ -2,16 +2,15 @@
 
 Reproduces the paper's core workflow (Fig. 1): a dataset with clusters at
 two different densities has no single good (ε, MinPts) — FINEX answers
-every tighter setting exactly from one build.
+every tighter setting exactly from one build, all through the
+``FinexIndex`` facade (one build / many queries).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (dbscan_from_csr, eps_star_query, finex_build,
-                        minpts_star_query, query_clustering)
+from repro.core import FinexIndex, dbscan_from_csr
 from repro.data.synthetic import two_scale_blobs
-from repro.neighbors.engine import NeighborEngine
 
 
 def describe(name, labels):
@@ -24,30 +23,36 @@ def describe(name, labels):
 
 def main():
     x = two_scale_blobs(1200, seed=0)
-    engine = NeighborEngine(x, metric="euclidean")
 
     # one build at a permissive generating pair ...
     eps, minpts = 0.5, 10
-    index, csr = finex_build(engine, eps, minpts)
-    print(f"built FINEX index: n={engine.n}, generating "
-          f"(eps={eps}, MinPts={minpts})")
+    index = FinexIndex.build(x, eps=eps, minpts=minpts)
+    st = index.stats()
+    print(f"built FINEX index: n={st['n']}, generating "
+          f"(eps={eps}, MinPts={minpts}), cores={st['cores']}, "
+          f"csr_nnz={st['csr_nnz']}")
 
     # ... then every clustering below it is an exact query
     print("\nε*-queries (exact, no re-clustering):")
     for eps_star in (0.5, 0.3, 0.2, 0.12):
-        labels = eps_star_query(index, engine, eps_star)
-        describe(f"eps*={eps_star}", labels)
+        describe(f"eps*={eps_star}", index.eps_star(eps_star))
 
     print("\nMinPts*-queries (exact, OPTICS cannot do this at all):")
     for minpts_star in (10, 25, 60):
-        labels = minpts_star_query(index, csr, minpts_star)
-        describe(f"MinPts*={minpts_star}", labels)
+        describe(f"MinPts*={minpts_star}", index.minpts_star(minpts_star))
+
+    # the index round-trips through one npz file; MinPts*-queries need no
+    # raw data at all, ε*-queries re-attach the engine via data=
+    index.save("/tmp/finex_quickstart.npz")
+    reloaded = FinexIndex.load("/tmp/finex_quickstart.npz", data=x)
+    assert np.array_equal(reloaded.minpts_star(25), index.minpts_star(25))
+    print("\nsave/load roundtrip: ok")
 
     # sanity: linear-time scan at the generating pair == DBSCAN
-    lab = query_clustering(index, eps)
-    oracle = dbscan_from_csr(csr, engine.weights, eps, minpts)
+    lab = index.clustering()
+    oracle = dbscan_from_csr(index.csr, index.engine.weights, eps, minpts)
     same_noise = ((lab < 0) == (oracle < 0)).all()
-    print(f"\nlinear scan at eps*=eps exact vs DBSCAN (noise match): "
+    print(f"linear scan at eps*=eps exact vs DBSCAN (noise match): "
           f"{bool(same_noise)}")
 
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify — reproducible from a clean checkout:
+#   scripts/test.sh             (fail-fast, quiet: the ROADMAP tier-1 line)
+#   scripts/test.sh tests/test_finex_exactness.py -k eps_star
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$#" -gt 0 ]; then
+    exec python -m pytest -q "$@"
+fi
+exec python -m pytest -x -q

@@ -86,7 +86,10 @@ class CheckpointManager:
         self._gc()
 
     def _gc(self):
-        steps = self.all_steps()
+        # keep-N applies to the training-state stream only: FINEX index
+        # snapshots are explicit artifacts, exempt from rotation
+        steps = [s for s in self.all_steps()
+                 if self._step_kind(s) != "finex_index"]
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
@@ -107,7 +110,11 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
+        """Latest *training-state* step — the auto-resume anchor. Index
+        snapshots share the step namespace but are not resumable train
+        state, so they are skipped here (as in _gc)."""
+        steps = [s for s in self.all_steps()
+                 if self._step_kind(s) != "finex_index"]
         return steps[-1] if steps else None
 
     def load_flat(self, step: int) -> Dict[str, np.ndarray]:
@@ -118,6 +125,67 @@ class CheckpointManager:
         """Restore into the structure of ``like`` (a state pytree)."""
         flat = self.load_flat(step)
         return _unflatten_like(like, flat)
+
+    # ------------------------------------------------- FINEX index state
+    # A built FinexIndex is expensive, host-resident state just like an
+    # optimizer pytree — it gets the same atomic tmp-rename + manifest
+    # treatment so a killed writer can never publish a torn index.
+    def save_index(self, step: int, index, extra: Optional[dict] = None,
+                   async_: bool = False) -> None:
+        """Durably save a ``repro.core.FinexIndex`` as step artifacts.
+
+        Index snapshots are exempt from the keep-N rotation (they are
+        explicit artifacts, not part of the training-state stream).
+        """
+        self.wait()          # an in-flight async save of this step would
+        # otherwise slip past the kind check below and silently win
+        if step in self.all_steps():
+            # save() would silently skip an existing step — fine when it
+            # already holds this very index, data loss otherwise
+            prev = self._step_meta(step)
+            if prev.get("kind") != "finex_index":
+                raise ValueError(
+                    f"step {step} already holds a non-index checkpoint; "
+                    "use a distinct step for FINEX index snapshots")
+            if (float(prev["eps"]) != float(index.eps)
+                    or int(prev["minpts"]) != int(index.minpts)
+                    or prev.get("metric") != index.metric
+                    or int(prev.get("n", -1)) != index.n
+                    or int(prev.get("nnz", -1)) != index.csr.nnz):
+                raise ValueError(
+                    f"step {step} already holds a different FINEX index "
+                    f"(eps={prev['eps']}, minpts={prev['minpts']}, "
+                    f"n={prev.get('n')}); delete it or use another step")
+            return                       # idempotent: index already durable
+        meta = {"kind": "finex_index", "eps": float(index.eps),
+                "minpts": int(index.minpts), "metric": index.metric,
+                "n": int(index.n), "nnz": int(index.csr.nnz)}
+        meta.update(extra or {})
+        self.save(step, index.to_arrays(), extra=meta, async_=async_)
+
+    def _step_meta(self, step: int) -> dict:
+        try:
+            with open(os.path.join(self.dir, f"step_{step}",
+                                   "MANIFEST.json")) as f:
+                return json.load(f).get("extra", {})
+        except FileNotFoundError:
+            # a concurrent writer's _gc can rotate the step away between
+            # all_steps() and this read — treat as kind-less, not fatal
+            return {}
+
+    def _step_kind(self, step: int) -> Optional[str]:
+        return self._step_meta(step).get("kind")
+
+    def restore_index(self, step: int, data: Any = None):
+        """Rebuild a ``FinexIndex`` saved by :meth:`save_index`.
+
+        Pass ``data`` (the raw dataset) to re-attach a distance engine —
+        required for ε*-queries; MinPts*-queries work without it.
+        """
+        if self._step_kind(step) != "finex_index":
+            raise ValueError(f"step {step} does not hold a FINEX index")
+        from repro.core.index import FinexIndex
+        return FinexIndex.from_arrays(self.load_flat(step), data=data)
 
 
 def _unflatten_like(like: Any, flat: Dict[str, np.ndarray],

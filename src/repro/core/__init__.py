@@ -1,15 +1,21 @@
 """FINEX — the paper's contribution: exact, flexible density-based
-clustering behind a linear-space index (Thiel et al., SIGMOD 2023)."""
+clustering behind a linear-space index (Thiel et al., SIGMOD 2023).
+
+``FinexIndex`` is the facade most callers want: build once, query many
+times. The functional layer underneath (finex_build, eps_star_query, …)
+stays exported for benchmarks and tests that need the pieces."""
 from repro.core.ordering import ClusterOrdering, FinexOrdering
 from repro.core.build import finex_build, optics_build
 from repro.core.extract import query_clustering
 from repro.core.queries import eps_star_query, minpts_star_query, QueryStats
+from repro.core.index import FinexIndex
 from repro.core.dbscan import dbscan, dbscan_from_csr, filtered_counts
 from repro.core.equivalence import (assert_equivalent_exact, border_recall,
                                     canonical_core_partition)
 
 __all__ = [
-    "ClusterOrdering", "FinexOrdering", "finex_build", "optics_build",
+    "ClusterOrdering", "FinexOrdering", "FinexIndex",
+    "finex_build", "optics_build",
     "query_clustering", "eps_star_query", "minpts_star_query", "QueryStats",
     "dbscan", "dbscan_from_csr", "filtered_counts",
     "assert_equivalent_exact", "border_recall", "canonical_core_partition",

@@ -63,13 +63,7 @@ def cluster_spans(o: ClusterOrdering, labels: np.ndarray
     m = int(labels.max()) + 1 if labels.size and labels.max() >= 0 else 0
     first = np.full(m, np.iinfo(np.int64).max, dtype=np.int64)
     last = np.full(m, -1, dtype=np.int64)
-    pos = o.pos
-    for obj in range(o.n):
-        l = labels[obj]
-        if l >= 0:
-            p = pos[obj]
-            if p < first[l]:
-                first[l] = p
-            if p > last[l]:
-                last[l] = p
+    member = labels >= 0
+    np.minimum.at(first, labels[member], o.pos[member])
+    np.maximum.at(last, labels[member], o.pos[member])
     return first, last

@@ -1,0 +1,182 @@
+"""``FinexIndex`` — the one-build / many-queries facade.
+
+Everything the paper promises behind a single object: construct once at a
+permissive generating (ε, MinPts) — the expensive device tile sweep plus
+the host ordering sweep — then answer any (ε* ≤ ε, MinPts) or
+(ε, MinPts* ≥ MinPts) clustering *exactly* (Definition 3.5) without
+touching the raw data again (ε*-queries still batch a small verification
+sub-matrix through the engine; MinPts*-queries need zero distances).
+
+    from repro.core import FinexIndex
+
+    index = FinexIndex.build(x, eps=0.5, minpts=10)      # once
+    a = index.clustering()                               # (ε, MinPts)
+    b = index.eps_star(0.2)                              # (0.2, MinPts)
+    c = index.minpts_star(60)                            # (ε, 60)
+    index.save("index.npz"); FinexIndex.load("index.npz", data=x)
+
+The facade is the integration surface for the rest of the repo: the
+quickstart example, the paper-table benchmarks, the data-curation
+pipeline and the checkpoint manager all go through it, so later scaling
+PRs (sharded materialize, serving, caching) only have one seam to cut.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.build import finex_build
+from repro.core.extract import query_clustering
+from repro.core.ordering import FinexOrdering
+from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
+from repro.neighbors.engine import CSRNeighborhoods, Metric, NeighborEngine
+
+
+class FinexIndex:
+    """A built FINEX-ordering bundled with its CSR and distance engine."""
+
+    def __init__(self, ordering: FinexOrdering, csr: CSRNeighborhoods,
+                 engine: Optional[NeighborEngine] = None,
+                 metric: Metric = "euclidean",
+                 weights: Optional[np.ndarray] = None):
+        self.ordering = ordering
+        self.csr = csr
+        self.engine = engine
+        self.metric: Metric = (engine.metric if engine is not None
+                               else metric)
+        # duplicate weights live on the index itself so an engine-less
+        # (lean-loaded) index round-trips them instead of dropping to ones
+        if engine is not None:
+            self.weights = engine.weights
+        elif weights is not None:
+            self.weights = np.asarray(weights, dtype=np.int64)
+        else:
+            self.weights = np.ones(ordering.n, dtype=np.int64)
+        self.query_stats = QueryStats()     # cumulative, resettable
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def build(cls, data, eps: float, minpts: int, *,
+              metric: Metric = "euclidean",
+              weights: Optional[np.ndarray] = None,
+              batch_rows: int = 1024, use_pallas: bool = False
+              ) -> "FinexIndex":
+        """Materialize neighborhoods on device and run the ordering sweep.
+
+        ``data``: (n, d) float array for euclidean, or the
+        (bits, sizes) pair from ``bitset.pack_sets`` for jaccard.
+        """
+        engine = NeighborEngine(data, metric=metric, weights=weights,
+                                batch_rows=batch_rows, use_pallas=use_pallas)
+        return cls.from_engine(engine, eps, minpts)
+
+    @classmethod
+    def from_engine(cls, engine: NeighborEngine, eps: float, minpts: int,
+                    csr: Optional[CSRNeighborhoods] = None) -> "FinexIndex":
+        ordering, csr = finex_build(engine, eps, minpts, csr=csr)
+        return cls(ordering, csr, engine)
+
+    # ----------------------------------------------------------- queries
+    @property
+    def eps(self) -> float:
+        return self.ordering.eps
+
+    @property
+    def minpts(self) -> int:
+        return self.ordering.minpts
+
+    @property
+    def n(self) -> int:
+        return self.ordering.n
+
+    def clustering(self) -> np.ndarray:
+        """Exact labels at the generating (ε, MinPts) — Corollary 5.5."""
+        return query_clustering(self.ordering, self.ordering.eps)
+
+    def eps_star(self, eps_star: float,
+                 stats: Optional[QueryStats] = None) -> np.ndarray:
+        """Exact labels at (ε* ≤ ε, MinPts) — Theorem 5.6."""
+        if self.engine is None:
+            raise RuntimeError(
+                "ε*-queries need the distance engine for verification; "
+                "load the index with its raw data (FinexIndex.load(..., "
+                "data=...)) or use minpts_star/clustering")
+        return eps_star_query(self.ordering, self.engine, eps_star,
+                              stats=stats if stats is not None
+                              else self.query_stats)
+
+    def minpts_star(self, minpts_star: int,
+                    stats: Optional[QueryStats] = None) -> np.ndarray:
+        """Exact labels at (ε, MinPts* ≥ MinPts) — §5.4, zero distances."""
+        return minpts_star_query(self.ordering, self.csr, minpts_star,
+                                 stats=stats if stats is not None
+                                 else self.query_stats)
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        cores = int(np.isfinite(self.ordering.C).sum())
+        return {
+            "n": self.n,
+            "eps": self.eps,
+            "minpts": self.minpts,
+            "metric": self.metric,
+            "cores": cores,
+            "csr_nnz": self.csr.nnz,
+            "max_neighborhood": int(self.ordering.N.max()) if self.n else 0,
+            "distance_rows_computed":
+                self.engine.distance_rows_computed
+                if self.engine is not None else None,
+            "query_candidates": self.query_stats.candidates,
+            "query_verification_pairs": self.query_stats.verification_pairs,
+        }
+
+    # ----------------------------------------------------------- persist
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Flat array dict — the npz/checkpoint serialization format."""
+        o = self.ordering
+        return {
+            "eps": np.float64(o.eps), "minpts": np.int64(o.minpts),
+            "order": o.order, "pos": o.pos, "C": o.C, "R": o.R,
+            "N": o.N, "F": o.F,
+            "csr_indptr": self.csr.indptr, "csr_indices": self.csr.indices,
+            "csr_dists": self.csr.dists,
+            "weights": self.weights,
+            "metric": np.str_(self.metric),
+        }
+
+    @classmethod
+    def from_arrays(cls, z, data=None, *, batch_rows: int = 1024,
+                    use_pallas: bool = False) -> "FinexIndex":
+        eps = float(z["eps"])
+        ordering = FinexOrdering(
+            eps=eps, minpts=int(z["minpts"]), order=np.asarray(z["order"]),
+            pos=np.asarray(z["pos"]), C=np.asarray(z["C"]),
+            R=np.asarray(z["R"]), N=np.asarray(z["N"]), F=np.asarray(z["F"]))
+        csr = CSRNeighborhoods(indptr=np.asarray(z["csr_indptr"]),
+                               indices=np.asarray(z["csr_indices"]),
+                               dists=np.asarray(z["csr_dists"]), eps=eps)
+        metric = str(z["metric"])
+        weights = np.asarray(z["weights"])
+        engine = None
+        if data is not None:
+            engine = NeighborEngine(data, metric=metric, weights=weights,
+                                    batch_rows=batch_rows,
+                                    use_pallas=use_pallas)
+            if engine.n != ordering.n:
+                raise ValueError(
+                    f"dataset has {engine.n} objects but the stored index "
+                    f"was built over {ordering.n} — re-attach the exact "
+                    "dataset the index was built on")
+        return cls(ordering, csr, engine, metric=metric, weights=weights)
+
+    def save(self, path: str) -> None:
+        """Serialize ordering + CSR + weights as one compressed npz."""
+        np.savez_compressed(path, **self.to_arrays())
+
+    @classmethod
+    def load(cls, path: str, data=None, **kw) -> "FinexIndex":
+        """Load an index; pass ``data`` to re-attach a distance engine
+        (required for ε*-queries — MinPts*-queries work without it)."""
+        with np.load(path) as z:
+            return cls.from_arrays(dict(z.items()), data=data, **kw)

@@ -7,21 +7,29 @@ These are the paper's headline feature: after one build at the generating
 ε*-query (Theorem 5.6):   Alg. 1 scan → candidate former-cores
   (noise-labeled, ε* < C ≤ ε, processed before S_i's first object, same
   sparse cluster) → verified by a *batched device* distance computation
-  against only the ε*-cores of the candidate's sparse cluster, with
-  first-hit semantics. This inherits both of the paper's §5.3 savings:
-  (i) distances only against cluster cores, not D; (ii) early termination.
+  against only the ε*-cores of the candidate's sparse cluster; the
+  first-hit selection over each verification sub-matrix is a single
+  masked argmax, not a per-candidate scan. This inherits both of the
+  paper's §5.3 savings: (i) distances only against cluster cores, not D;
+  (ii) early termination (block-level).
 
 MinPts*-query (§5.4):      exact sparse clustering filters noise →
-  Alg. 4 BFS over preserved cores (with the paper's fast path when no core
-  loses status) → border objects placed through their finder reference
-  F[o] with *zero* neighborhood computations.
+  Alg. 4 as *one* union-find/connected-components pass over the
+  core-restricted CSR (with the paper's fast path when no core loses
+  status) → border objects placed through their finder reference F[o]
+  with *zero* neighborhood computations.
+
+The loop-based originals live in ``repro.core.reference``;
+``tests/test_vectorized_equivalence.py`` pins byte-identical labels.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import connected_components
 
 from repro.core.extract import cluster_spans, query_clustering
 from repro.core.ordering import FinexOrdering
@@ -52,7 +60,7 @@ def eps_star_query(index: FinexOrdering, engine: NeighborEngine,
     # -- candidates: former-cores labeled noise (cond. 1) ----------------
     cand_mask = (labels < 0) & (index.C > eps_star) & (index.C <= eps_gen)
     candidates = np.nonzero(cand_mask)[0]
-    stats.candidates = len(candidates)
+    stats.candidates += len(candidates)   # cumulative, like the pair count
     if len(candidates) == 0:
         return labels
 
@@ -62,21 +70,23 @@ def eps_star_query(index: FinexOrdering, engine: NeighborEngine,
     first, _ = cluster_spans(index, labels)
     m = first.shape[0]
 
-    # ε*-cores per approximate cluster (these are already in S: Thm 5.2c)
-    core_star = index.C <= eps_star
-    cores_by_S: dict[int, list[int]] = {}
-    for obj in np.nonzero(core_star)[0]:
-        l = labels[obj]
-        if l >= 0:
-            cores_by_S.setdefault(int(l), []).append(int(obj))
+    # ε*-cores per approximate cluster (these are already in S: Thm 5.2c),
+    # ordered by (cluster, object id) so per-cluster core blocks are the
+    # ascending-id lists the first-hit semantics below rely on
+    core_star_ids = np.nonzero((index.C <= eps_star) & (labels >= 0))[0]
+    core_lab = labels[core_star_ids]
+    by_lab = np.argsort(core_lab, kind="stable")
+    sorted_cores = core_star_ids[by_lab]
+    sorted_lab = core_lab[by_lab]
 
     # sparse cluster of each S_i (Prop. 3.9: unique). Read it off an
     # ε*-core: cores are unambiguous in the exact sparse partition, while
     # a border member of S_i may be *assigned* to a different sparse
-    # cluster it also touches.
+    # cluster it also touches. Reverse assignment keeps the first
+    # (smallest-id) core per cluster.
     sparse_of_S = np.full(m, -1, dtype=np.int64)
-    for i, cores in cores_by_S.items():
-        sparse_of_S[i] = sparse[cores[0]]
+    sparse_of_S[sorted_lab[::-1]] = sparse[sorted_cores[::-1]]
+    core_group = sparse_of_S[sorted_lab]          # sparse cluster per core
 
     # Batched verification, grouped by sparse cluster: one device call per
     # (candidate-group × core-set) computes the whole sub-matrix. The
@@ -85,33 +95,26 @@ def eps_star_query(index: FinexOrdering, engine: NeighborEngine,
     # early-exit probes — same exactness, counted pairs are higher but
     # wall time is far lower (benchmarked in Fig 6/7 harness).
     order_pos = index.pos
-    by_sparse: dict[int, list[int]] = {}
-    for o in candidates:
-        k = int(sparse[o])
-        if k >= 0:
-            by_sparse.setdefault(k, []).append(int(o))
-
-    for k, cands in by_sparse.items():
-        sids = [i for i in range(m)
-                if sparse_of_S[i] == k and i in cores_by_S]
-        if not sids:
+    cand_sparse = sparse[candidates]
+    for k in np.unique(cand_sparse[cand_sparse >= 0]):
+        sel = core_group == k
+        if not sel.any():
             continue
-        core_ids = np.concatenate([np.asarray(cores_by_S[i], np.int64)
-                                   for i in sids])
-        core_cluster = np.concatenate([np.full(len(cores_by_S[i]), i,
-                                               np.int64) for i in sids])
-        cand_arr = np.asarray(cands, np.int64)
+        core_ids = sorted_cores[sel]
+        core_cluster = sorted_lab[sel]
+        cand_arr = candidates[cand_sparse == k]
         unassigned = np.ones(len(cand_arr), bool)
         for s in range(0, len(core_ids), verify_batch):
             blk = slice(s, s + verify_batch)
-            d = engine.pair_distances(cand_arr[unassigned], core_ids[blk])
+            sub = cand_arr[unassigned]
+            d = engine.pair_distances(sub, core_ids[blk])
             stats.verification_pairs += d.size
-            hit = d <= eps_star
-            for ci, o in enumerate(cand_arr[unassigned]):
-                ok = hit[ci] & (first[core_cluster[blk]] > order_pos[o])
-                js = np.nonzero(ok)[0]
-                if js.size:
-                    labels[o] = core_cluster[blk][js[0]]
+            # first hit per candidate row: masked argmax over the block
+            ok = (d <= eps_star) & \
+                (first[core_cluster[blk]][None, :] > order_pos[sub][:, None])
+            got = ok.any(axis=1)
+            hit = np.argmax(ok, axis=1)
+            labels[sub[got]] = core_cluster[blk][hit[got]]
             unassigned = labels[cand_arr] < 0
             if not unassigned.any():       # cond. 4: everyone placed
                 break
@@ -119,36 +122,50 @@ def eps_star_query(index: FinexOrdering, engine: NeighborEngine,
 
 
 def _compute_core_clustering(cores: np.ndarray, csr: CSRNeighborhoods,
-                             eps: float, labels_out: np.ndarray,
-                             next_label: int, stats: QueryStats) -> int:
-    """Algorithm 4: connected components of cores under the ε-graph.
+                             sparse: np.ndarray, labels_out: np.ndarray,
+                             stats: QueryStats) -> int:
+    """Algorithm 4, vectorized: components of cores under the ε-graph.
 
-    ``cores`` must be sorted; neighborhoods come from the generating-ε CSR
-    restricted to the core set (the paper's ``N_ε(x) ∩ Cores``).
+    ``cores`` must be sorted; adjacency is the generating-ε CSR restricted
+    to the core set (the paper's ``N_ε(x) ∩ Cores``), evaluated as one
+    union-find (connected-components) pass over the induced subgraph.
+    Component labels replicate the sequential per-sparse-cluster BFS
+    numbering: clusters in sparse-id order, components within a cluster in
+    smallest-core-id order. (Components never straddle sparse clusters —
+    two ε-reachable generating cores are density-connected.)
+    Returns the number of labels assigned.
     """
-    in_cores = np.zeros(labels_out.shape[0], dtype=bool)
+    n = labels_out.shape[0]
+    if cores.size == 0:
+        return 0
+    in_cores = np.zeros(n, dtype=bool)
     in_cores[cores] = True
-    remaining = set(int(c) for c in cores)
-    for seed in cores:
-        seed = int(seed)
-        if seed not in remaining:
-            continue
-        # new component
-        stack = [seed]
-        remaining.discard(seed)
-        labels_out[seed] = next_label
-        while stack:
-            x = stack.pop()
-            s, e = csr.indptr[x], csr.indptr[x + 1]
-            stats.neighborhoods_computed += 1
-            for q in csr.indices[s:e]:
-                q = int(q)
-                if q in remaining:
-                    remaining.discard(q)
-                    labels_out[q] = next_label
-                    stack.append(q)
-        next_label += 1
-    return next_label
+    seg = csr.row_ids()
+    keep = in_cores[seg] & in_cores[csr.indices]
+    # assemble the induced subgraph directly in CSR form (rows of `keep`
+    # are already sorted), skipping scipy's COO→CSR conversion pass;
+    # int32 indices while they fit (scipy's native dtype), int64 beyond
+    sub_rows64 = seg[keep]
+    idx_dtype = (np.int32 if sub_rows64.size <= np.iinfo(np.int32).max
+                 else np.int64)
+    remap = np.full(n, -1, dtype=idx_dtype)
+    remap[cores] = np.arange(cores.size, dtype=idx_dtype)
+    sub_rows = remap[sub_rows64]
+    sub_indptr = np.zeros(cores.size + 1, dtype=idx_dtype)
+    np.cumsum(np.bincount(sub_rows, minlength=cores.size),
+              out=sub_indptr[1:], dtype=idx_dtype)
+    g = csr_matrix((np.ones(sub_rows.size, dtype=np.int8),
+                    remap[csr.indices[keep]], sub_indptr),
+                   shape=(cores.size, cores.size))
+    ncomp, comp = connected_components(g, directed=False)
+    stats.neighborhoods_computed += int(cores.size)
+    # representative of each component = its first (smallest-id) core
+    _, first_pos = np.unique(comp, return_index=True)
+    rank = np.lexsort((cores[first_pos], sparse[cores[first_pos]]))
+    label_of = np.empty(ncomp, dtype=np.int64)
+    label_of[rank] = np.arange(ncomp)
+    labels_out[cores] = label_of[comp]
+    return ncomp
 
 
 def minpts_star_query(index: FinexOrdering, csr: CSRNeighborhoods,
@@ -176,15 +193,10 @@ def minpts_star_query(index: FinexOrdering, csr: CSRNeighborhoods,
         labels[:] = np.where(sparse >= 0, sparse, -1)
         return labels
 
-    # step 2: Algorithm 4 within each sparse cluster
-    next_label = 0
-    nsparse = int(sparse.max()) + 1 if np.any(sparse >= 0) else 0
-    for k in range(nsparse):
-        members = np.nonzero(sparse == k)[0]
-        kcores = members[cores_star[members]]
-        if kcores.size:
-            next_label = _compute_core_clustering(
-                kcores, csr, index.eps, labels, next_label, stats)
+    # step 2: Algorithm 4 over all preserved cores at once (a core is
+    # never sparse noise, so the sparse filter is implicit)
+    kcores = np.nonzero(cores_star & (sparse >= 0))[0]
+    _compute_core_clustering(kcores, csr, sparse, labels, stats)
 
     # step 3: borders via finder references — F[o] is the densest core
     # reaching o, so o is a border iff N[F[o]] ≥ MinPts* (no distances!)

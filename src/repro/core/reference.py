@@ -1,0 +1,364 @@
+"""Loop-based reference implementations of the neighborhood/build/query
+hot paths (the pre-vectorization code paths, verbatim).
+
+The production paths in ``repro.neighbors.engine``, ``repro.core.build``
+and ``repro.core.queries`` are fully vectorized (tile-level 2-D nonzero,
+segmented lexsort core distances, bulk queue updates, union-find core
+components, masked-argmax verification). These reference versions keep
+the original per-object / per-neighbor Python loops so that
+
+  * ``tests/test_vectorized_equivalence.py`` can assert the vectorized
+    paths produce *byte-identical* arrays (labels, orderings, C/R/N/F,
+    CSR contents) on randomized datasets, and
+  * ``benchmarks/index_bench.py`` can report the end-to-end speedup of
+    the vectorized pipeline against the loop baseline.
+
+They are correctness oracles, not production code — do not call them
+from library modules.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.ordering import ClusterOrdering, FinexOrdering
+from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
+
+
+# --------------------------------------------------------------- engine
+def reference_materialize(engine: NeighborEngine, eps: float
+                          ) -> Tuple[np.ndarray, CSRNeighborhoods]:
+    """Per-row CSR assembly (original ``NeighborEngine.materialize``)."""
+    import jax.numpy as jnp
+    n = engine.n
+    counts = np.zeros(n, dtype=np.int64)
+    ind_chunks, dist_chunks, lens = [], [], np.zeros(n, dtype=np.int64)
+    for s in range(0, n, engine.batch_rows):
+        rows = np.arange(s, min(s + engine.batch_rows, n), dtype=np.int32)
+        engine.distance_rows_computed += len(rows)
+        d = np.asarray(engine._dist_block(jnp.asarray(rows)))
+        mask = d <= eps
+        counts[rows] = mask @ engine.weights
+        for bi, r in enumerate(rows):
+            nb = np.nonzero(mask[bi])[0]
+            ind_chunks.append(nb.astype(np.int32))
+            dist_chunks.append(d[bi, nb])
+            lens[r] = nb.size
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    csr = CSRNeighborhoods(indptr=indptr,
+                           indices=np.concatenate(ind_chunks),
+                           dists=np.concatenate(dist_chunks),
+                           eps=float(eps))
+    return counts, csr
+
+
+def reference_core_distances(csr: CSRNeighborhoods, counts: np.ndarray,
+                             weights: np.ndarray, minpts: int) -> np.ndarray:
+    """Per-object argsort loop (original ``core_distances``)."""
+    n = counts.shape[0]
+    C = np.full(n, np.inf, dtype=np.float32)
+    for p in range(n):
+        if counts[p] < minpts:
+            continue
+        idx, d = csr.indices[csr.indptr[p]:csr.indptr[p + 1]], \
+            csr.dists[csr.indptr[p]:csr.indptr[p + 1]]
+        order = np.argsort(d, kind="stable")
+        cw = np.cumsum(weights[idx[order]])
+        C[p] = d[order][np.searchsorted(cw, minpts)]
+    return C
+
+
+# ---------------------------------------------------------------- build
+class _SeedStablePQ:
+    """Min-heap keyed by (priority, insertion-seq) with lazy deletion."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._best: dict = {}
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+    def __contains__(self, obj: int) -> bool:
+        return obj in self._best
+
+    def insert(self, obj: int, priority: float) -> None:
+        self._best[obj] = priority
+        heapq.heappush(self._heap, (priority, next(self._seq), obj))
+
+    decrease = insert
+
+    def pop(self) -> Tuple[int, float]:
+        while True:
+            priority, _, obj = heapq.heappop(self._heap)
+            if self._best.get(obj) == priority:
+                del self._best[obj]
+                return obj, priority
+
+
+def _reference_prepare(engine: NeighborEngine, eps: float, minpts: int,
+                       csr: Optional[CSRNeighborhoods] = None):
+    if csr is None:
+        counts, csr = reference_materialize(engine, eps)
+    else:
+        counts = np.zeros(engine.n, dtype=np.int64)
+        for p in range(engine.n):
+            idx = csr.indices[csr.indptr[p]:csr.indptr[p + 1]]
+            counts[p] = engine.weights[idx].sum()
+    C = reference_core_distances(csr, counts, engine.weights, minpts)
+    return counts, csr, C
+
+
+def reference_finex_build(engine: NeighborEngine, eps: float, minpts: int,
+                          csr: Optional[CSRNeighborhoods] = None
+                          ) -> Tuple[FinexOrdering, CSRNeighborhoods]:
+    """Per-neighbor zip-loop queue updates (original ``finex_build``)."""
+    n = engine.n
+    counts, csr, C = _reference_prepare(engine, eps, minpts, csr)
+
+    R = np.full(n, np.inf, dtype=np.float64)
+    N = counts.astype(np.int64)
+    F = np.arange(n, dtype=np.int64)
+    visible_N = np.zeros(n, dtype=np.int64)
+    processed = np.zeros(n, dtype=bool)
+    slot = np.full(n, -1, dtype=np.int64)
+    order_list: list = []
+    is_core = np.isfinite(C)
+
+    pq = _SeedStablePQ()
+
+    def q_update(c: int) -> None:
+        s, e = csr.indptr[c], csr.indptr[c + 1]
+        nbrs = csr.indices[s:e]
+        dists = csr.dists[s:e]
+        Cc = C[c]
+        for q, d in zip(nbrs, dists):
+            rdist = Cc if Cc >= d else float(d)
+            if not processed[q] and q not in pq:
+                R[q] = rdist
+                pq.insert(int(q), rdist)
+            elif q in pq:
+                if rdist < R[q]:
+                    R[q] = rdist
+                    pq.decrease(int(q), rdist)
+            else:
+                if not is_core[q] and rdist < R[q]:
+                    processed[q] = False
+                    order_list[slot[q]] = -1
+                    slot[q] = -1
+                    R[q] = rdist
+                    pq.insert(int(q), rdist)
+            if visible_N[c] > visible_N[F[q]]:
+                F[q] = c
+
+    def append(o: int) -> None:
+        processed[o] = True
+        slot[o] = len(order_list)
+        order_list.append(o)
+        visible_N[o] = N[o]
+
+    for o in range(n):
+        if processed[o]:
+            continue
+        append(o)
+        if is_core[o]:
+            q_update(o)
+            while len(pq):
+                p, _ = pq.pop()
+                append(p)
+                if is_core[p]:
+                    q_update(p)
+
+    order = np.asarray([x for x in order_list if x >= 0], dtype=np.int64)
+    assert order.shape[0] == n
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    idx = FinexOrdering(eps=float(eps), minpts=int(minpts), order=order,
+                        pos=pos, C=C.astype(np.float64), R=R, N=N, F=F)
+    return idx, csr
+
+
+def reference_optics_build(engine: NeighborEngine, eps: float, minpts: int,
+                           csr: Optional[CSRNeighborhoods] = None
+                           ) -> Tuple[ClusterOrdering, CSRNeighborhoods]:
+    """Original OPTICS sweep with per-neighbor loops."""
+    n = engine.n
+    counts, csr, C = _reference_prepare(engine, eps, minpts, csr)
+
+    R = np.full(n, np.inf, dtype=np.float64)
+    processed = np.zeros(n, dtype=bool)
+    order_list: list = []
+    is_core = np.isfinite(C)
+    pq = _SeedStablePQ()
+
+    def q_update(c: int) -> None:
+        s, e = csr.indptr[c], csr.indptr[c + 1]
+        Cc = C[c]
+        for q, d in zip(csr.indices[s:e], csr.dists[s:e]):
+            rdist = Cc if Cc >= d else float(d)
+            if not processed[q] and q not in pq:
+                R[q] = rdist
+                pq.insert(int(q), rdist)
+            elif q in pq and rdist < R[q]:
+                R[q] = rdist
+                pq.decrease(int(q), rdist)
+
+    for o in range(n):
+        if processed[o]:
+            continue
+        processed[o] = True
+        order_list.append(o)
+        if is_core[o]:
+            q_update(o)
+            while len(pq):
+                p, _ = pq.pop()
+                processed[p] = True
+                order_list.append(p)
+                if is_core[p]:
+                    q_update(p)
+
+    order = np.asarray(order_list, dtype=np.int64)
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    return ClusterOrdering(eps=float(eps), minpts=int(minpts), order=order,
+                           pos=pos, C=C.astype(np.float64), R=R), csr
+
+
+# -------------------------------------------------------------- queries
+def _reference_core_clustering(cores: np.ndarray, csr: CSRNeighborhoods,
+                               labels_out: np.ndarray, next_label: int) -> int:
+    """Python-set BFS (original ``_compute_core_clustering``)."""
+    remaining = set(int(c) for c in cores)
+    for seed in cores:
+        seed = int(seed)
+        if seed not in remaining:
+            continue
+        stack = [seed]
+        remaining.discard(seed)
+        labels_out[seed] = next_label
+        while stack:
+            x = stack.pop()
+            s, e = csr.indptr[x], csr.indptr[x + 1]
+            for q in csr.indices[s:e]:
+                q = int(q)
+                if q in remaining:
+                    remaining.discard(q)
+                    labels_out[q] = next_label
+                    stack.append(q)
+        next_label += 1
+    return next_label
+
+
+def reference_minpts_star_query(index: FinexOrdering, csr: CSRNeighborhoods,
+                                minpts_star: int) -> np.ndarray:
+    """Original MinPts*-query with the per-sparse-cluster BFS loop."""
+    from repro.core.extract import query_clustering
+    if minpts_star < index.minpts:
+        raise ValueError("MinPts* must be >= generating MinPts")
+    n = index.n
+    sparse = query_clustering(index, index.eps)
+    labels = np.full(n, -1, dtype=np.int64)
+    cores_star = (index.N >= minpts_star)
+    demoted = (index.N >= index.minpts) & (index.N < minpts_star)
+    if not np.any(demoted):
+        labels[:] = np.where(sparse >= 0, sparse, -1)
+        return labels
+    next_label = 0
+    nsparse = int(sparse.max()) + 1 if np.any(sparse >= 0) else 0
+    for k in range(nsparse):
+        members = np.nonzero(sparse == k)[0]
+        kcores = members[cores_star[members]]
+        if kcores.size:
+            next_label = _reference_core_clustering(kcores, csr, labels,
+                                                    next_label)
+    border = (sparse >= 0) & (~cores_star)
+    fin = index.F[border]
+    ok = cores_star[fin]
+    border_ids = np.nonzero(border)[0]
+    labels[border_ids[ok]] = labels[fin[ok]]
+    return labels
+
+
+def reference_eps_star_query(index: FinexOrdering, engine: NeighborEngine,
+                             eps_star: float,
+                             verify_batch: int = 4096) -> np.ndarray:
+    """Original ε*-query with the per-candidate first-hit loop."""
+    from repro.core.extract import query_clustering
+
+    def cluster_spans_loop(o, labels):
+        m = int(labels.max()) + 1 if labels.size and labels.max() >= 0 else 0
+        first = np.full(m, np.iinfo(np.int64).max, dtype=np.int64)
+        last = np.full(m, -1, dtype=np.int64)
+        pos = o.pos
+        for obj in range(o.n):
+            l = labels[obj]
+            if l >= 0:
+                p = pos[obj]
+                if p < first[l]:
+                    first[l] = p
+                if p > last[l]:
+                    last[l] = p
+        return first, last
+
+    eps_star = float(np.float32(eps_star))
+    eps_gen = float(np.float32(index.eps))
+    labels = query_clustering(index, eps_star)
+    if eps_star >= eps_gen:
+        return labels
+
+    cand_mask = (labels < 0) & (index.C > eps_star) & (index.C <= eps_gen)
+    candidates = np.nonzero(cand_mask)[0]
+    if len(candidates) == 0:
+        return labels
+
+    sparse = query_clustering(index, index.eps)
+    first, _ = cluster_spans_loop(index, labels)
+    m = first.shape[0]
+
+    core_star = index.C <= eps_star
+    cores_by_S: dict = {}
+    for obj in np.nonzero(core_star)[0]:
+        l = labels[obj]
+        if l >= 0:
+            cores_by_S.setdefault(int(l), []).append(int(obj))
+
+    sparse_of_S = np.full(m, -1, dtype=np.int64)
+    for i, cores in cores_by_S.items():
+        sparse_of_S[i] = sparse[cores[0]]
+
+    order_pos = index.pos
+    by_sparse: dict = {}
+    for o in candidates:
+        k = int(sparse[o])
+        if k >= 0:
+            by_sparse.setdefault(k, []).append(int(o))
+
+    for k, cands in by_sparse.items():
+        sids = [i for i in range(m)
+                if sparse_of_S[i] == k and i in cores_by_S]
+        if not sids:
+            continue
+        core_ids = np.concatenate([np.asarray(cores_by_S[i], np.int64)
+                                   for i in sids])
+        core_cluster = np.concatenate([np.full(len(cores_by_S[i]), i,
+                                               np.int64) for i in sids])
+        cand_arr = np.asarray(cands, np.int64)
+        unassigned = np.ones(len(cand_arr), bool)
+        for s in range(0, len(core_ids), verify_batch):
+            blk = slice(s, s + verify_batch)
+            d = engine.pair_distances(cand_arr[unassigned], core_ids[blk])
+            hit = d <= eps_star
+            for ci, o in enumerate(cand_arr[unassigned]):
+                ok = hit[ci] & (first[core_cluster[blk]] > order_pos[o])
+                js = np.nonzero(ok)[0]
+                if js.size:
+                    labels[o] = core_cluster[blk][js[0]]
+            unassigned = labels[cand_arr] < 0
+            if not unassigned.any():
+                break
+    return labels

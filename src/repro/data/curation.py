@@ -20,11 +20,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import eps_star_query, minpts_star_query, query_clustering
-from repro.core.build import finex_build
-from repro.core.ordering import FinexOrdering
+from repro.core import FinexIndex
 from repro.neighbors.bitset import pack_sets
-from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
 
 
 def docs_to_ngram_sets(docs: Sequence[Sequence[int]], ngram: int = 2,
@@ -45,9 +42,7 @@ def docs_to_ngram_sets(docs: Sequence[Sequence[int]], ngram: int = 2,
 
 @dataclass
 class CurationReport:
-    index: FinexOrdering
-    csr: CSRNeighborhoods
-    engine: NeighborEngine
+    index: FinexIndex
     labels: np.ndarray
     kept_indices: np.ndarray
     keep_per_cluster: int
@@ -66,11 +61,11 @@ class CurationReport:
         if eps_star is not None and minpts_star is not None:
             raise ValueError("tune one parameter per query (paper §5)")
         if eps_star is not None:
-            labels = eps_star_query(self.index, self.engine, eps_star)
+            labels = self.index.eps_star(eps_star)
         elif minpts_star is not None:
-            labels = minpts_star_query(self.index, self.csr, minpts_star)
+            labels = self.index.minpts_star(minpts_star)
         else:
-            labels = query_clustering(self.index, self.index.eps)
+            labels = self.index.clustering()
         kept = _select_survivors(labels, self.keep_per_cluster)
         return replace(self, labels=labels, kept_indices=kept)
 
@@ -93,9 +88,9 @@ def curate_corpus(docs: Sequence[Sequence[int]], eps: float = 0.3,
     """Build the FINEX index over the corpus and apply dedup once."""
     sets = docs_to_ngram_sets(docs, ngram=ngram)
     bits, sizes = pack_sets(sets)
-    engine = NeighborEngine((bits, sizes), metric="jaccard")
-    index, csr = finex_build(engine, eps, minpts)
-    labels = query_clustering(index, eps)     # exact (Cor. 5.5)
+    index = FinexIndex.build((bits, sizes), eps=eps, minpts=minpts,
+                             metric="jaccard")
+    labels = index.clustering()               # exact (Cor. 5.5)
     kept = _select_survivors(labels, keep_per_cluster)
-    return CurationReport(index=index, csr=csr, engine=engine, labels=labels,
-                          kept_indices=kept, keep_per_cluster=keep_per_cluster)
+    return CurationReport(index=index, labels=labels, kept_indices=kept,
+                          keep_per_cluster=keep_per_cluster)

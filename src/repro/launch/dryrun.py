@@ -121,6 +121,8 @@ def _fill_analysis(rec: Dict, compiled, t0: float,
     chips = rec["chips"]
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     hlo = analyze_hlo(compiled.as_text())
 
     # cost_analysis counts while bodies once; scale its numbers by the

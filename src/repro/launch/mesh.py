@@ -14,17 +14,27 @@ Topology: TPU v5e-class pods of 256 chips arranged (16, 16):
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types; 0.4.x has neither the enum nor the kwarg
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many (host) devices exist — tests/smoke."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

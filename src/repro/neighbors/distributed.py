@@ -24,6 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 top-level API; 0.4.x keeps it in experimental
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.kernels import ref
 from repro.sharding import dp_axes
 
@@ -61,7 +66,7 @@ def sharded_neighbor_stats(x: jax.Array, y: jax.Array, w: jax.Array,
         hist = jax.lax.psum(hist, "model")
         return cnt, hist
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None), P("model", None), P("model"), P(), P()),
         out_specs=(P(dp), P(dp, None)))
@@ -109,7 +114,7 @@ def sharded_jaccard_counts(bits_q, sizes_q, bits_c, sizes_c, w, eps,
         cnt = jax.lax.map(chunk, (bqc, sqc)).reshape(bq.shape[0])
         return jax.lax.psum(cnt, "model")
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None), P(dp), P("model", None), P("model"),
                   P("model"), P()),

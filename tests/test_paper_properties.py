@@ -11,6 +11,9 @@ datasets and parameters:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (border_recall, dbscan_from_csr, filtered_counts,
