@@ -1,0 +1,157 @@
+"""Serving-subsystem benchmark: index cache + batched parameter sweeps.
+
+Measures the three serving-side claims on the 20k-point benchmark dataset
+(the same dataset/settings family as ``index_bench.py``) and writes
+``BENCH_service.json``:
+
+  * ``sweep_vs_sequential``  — a K=16 mixed ε*/MinPts* sweep through
+    ``SweepPlanner`` (shared scan / sparse clustering / verification
+    distances / incremental core components) against the same 16 settings
+    as sequential ``FinexIndex`` facade calls; labels asserted
+    byte-identical. Target: ≥ 3×.
+  * ``cache_hit_speedup``    — warm ``IndexStore`` hit vs cold build for
+    the same (data, ε, MinPts); ``hit_zero_distance_rows`` certifies the
+    warm hit answered a cluster request without a single distance row.
+  * ``settings_per_s``       — throughput of a mixed request stream
+    through the slot-batched ``ClusterService``.
+
+    PYTHONPATH=src python benchmarks/service_bench.py            # 20k
+    PYTHONPATH=src python benchmarks/service_bench.py --smoke    # 2k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def mixed_settings(eps: float, minpts: int, k: int = 16):
+    """K mixed settings: half ε*-queries, half MinPts*-queries."""
+    ke = k // 2
+    eps_fracs = np.linspace(0.35, 0.95, ke)
+    mp_mults = np.linspace(1.5, 16.0, k - ke)
+    return ([("eps", float(eps * f)) for f in eps_fracs]
+            + [("minpts", int(round(minpts * m))) for m in mp_mults])
+
+
+def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
+        k: int = 16, seed: int = 0, requests: int = 24, sweep_k: int = 6,
+        out_path: str | None = None) -> dict:
+    from repro.data.synthetic import gaussian_mixture
+    from repro.service import (ClusterRequest, ClusterService, IndexStore,
+                               SweepPlanner, SweepRequest)
+
+    x = gaussian_mixture(n, d=d, k=12, noise_frac=0.1, seed=seed)
+    settings = mixed_settings(eps, minpts, k)
+    report: dict = {"n": n, "d": d, "eps": eps, "minpts": minpts,
+                    "k": k, "seed": seed,
+                    "settings": [[kind, v] for kind, v in settings]}
+
+    # ------------------------------------------------- cold build vs hit
+    store = IndexStore(capacity=2)
+    (index, outcome), t_build = _timed(
+        lambda: store.get_or_build(x, eps, minpts))
+    assert outcome == "build"
+    (index, outcome), t_hit = _timed(
+        lambda: store.get_or_build(x, eps, minpts))
+    assert outcome == "hit"
+    # a warm hit must answer a cluster request with zero distance rows
+    rows_before = index.engine.distance_rows_computed
+    hit_labels = index.clustering()
+    zero_dist = index.engine.distance_rows_computed == rows_before
+    report["build_s"] = round(t_build, 4)
+    report["hit_s"] = round(t_hit, 6)
+    report["cache_hit_speedup"] = round(t_build / max(t_hit, 1e-9), 1)
+    report["hit_zero_distance_rows"] = bool(zero_dist)
+    report["hit_cluster_count"] = int(hit_labels.max() + 1)
+
+    # ------------------------------------- K-setting sweep vs sequential
+    planner = SweepPlanner(index)
+    # warm up every jit shape both paths hit (bucketed verification tiles)
+    planner.sweep(settings)
+    for kind, v in settings:
+        _ = index.eps_star(v) if kind == "eps" else index.minpts_star(v)
+
+    sweep_labels, t_sweep = _timed(lambda: planner.sweep(settings))
+
+    def _sequential():
+        return np.stack([index.eps_star(v) if kind == "eps"
+                         else index.minpts_star(v)
+                         for kind, v in settings])
+    seq_labels, t_seq = _timed(_sequential)
+    assert np.array_equal(sweep_labels, seq_labels), \
+        "sweep diverged from sequential facade calls"
+    report["sweep_s"] = round(t_sweep, 4)
+    report["sequential_s"] = round(t_seq, 4)
+    report["sweep_vs_sequential"] = round(t_seq / max(t_sweep, 1e-9), 2)
+    report["sweep_identical_to_sequential"] = True
+
+    # ------------------------------------------------ service throughput
+    svc = ClusterService(store=store, slots=8)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(requests):
+        if rng.random() < 0.33:
+            reqs.append(ClusterRequest(
+                data=x, eps=eps, minpts=minpts,
+                setting=settings[rng.integers(len(settings))]))
+        else:
+            picks = rng.integers(len(settings), size=sweep_k)
+            reqs.append(SweepRequest(
+                data=x, eps=eps, minpts=minpts,
+                settings=[settings[i] for i in picks]))
+    _, t_svc = _timed(lambda: svc.run(reqs))
+    st = svc.stats()
+    report["service"] = {
+        "requests": requests,
+        "seconds": round(t_svc, 4),
+        "settings_answered": st["settings_answered"],
+        "settings_per_s": round(st["settings_answered"] / max(t_svc, 1e-9),
+                                1),
+        "batched_sweeps": st["batched_sweeps"],
+        "coalesced_settings": st["coalesced_settings"],
+        "store": st["store"],
+    }
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--eps", type=float, default=1.0)
+    ap.add_argument("--minpts", type=int, default=16)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--sweep-k", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2k points — schema identical, numbers small")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_service.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.n, args.requests = 2000, 8
+    report = run(n=args.n, d=args.d, eps=args.eps, minpts=args.minpts,
+                 k=args.k, seed=args.seed, requests=args.requests,
+                 sweep_k=args.sweep_k, out_path=args.out)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core import FinexIndex, dbscan_from_csr
 from repro.data.synthetic import two_scale_blobs
+from repro.service import SweepPlanner
 
 
 def describe(name, labels):
@@ -40,6 +41,14 @@ def main():
     print("\nMinPts*-queries (exact, OPTICS cannot do this at all):")
     for minpts_star in (10, 25, 60):
         describe(f"MinPts*={minpts_star}", index.minpts_star(minpts_star))
+
+    # ...or answer a whole mixed grid in ONE batched pass — the serving
+    # hot path (repro.service): scan, sparse clustering, verification
+    # distances and core components are shared across the K settings
+    print("\nbatched sweep (one pass, byte-identical to the loops above):")
+    grid = [("eps", 0.3), ("eps", 0.2), ("minpts", 25), ("minpts", 60)]
+    for (kind, v), row in zip(grid, SweepPlanner(index).sweep(grid)):
+        describe(f"sweep {kind}*={v}", row)
 
     # the index round-trips through one npz file; MinPts*-queries need no
     # raw data at all, ε*-queries re-attach the engine via data=

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Benchmark smoke runner + schema guard — keeps the perf artifacts honest.
+#   scripts/bench.sh            smoke: small-n runs into a temp dir, then
+#                               sanity-check the emitted BENCH_*.json
+#                               schemas (keys present, ratios finite)
+#   scripts/bench.sh --full     full 20k runs, refresh the committed
+#                               BENCH_index.json / BENCH_service.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "--full" ]; then
+    OUT_DIR="."
+    python benchmarks/index_bench.py --out "$OUT_DIR/BENCH_index.json"
+    python benchmarks/service_bench.py --out "$OUT_DIR/BENCH_service.json"
+else
+    OUT_DIR="$(mktemp -d)"
+    trap 'rm -rf "$OUT_DIR"' EXIT
+    python benchmarks/index_bench.py --n 2000 \
+        --out "$OUT_DIR/BENCH_index.json" >/dev/null
+    python benchmarks/service_bench.py --smoke \
+        --out "$OUT_DIR/BENCH_service.json" >/dev/null
+fi
+
+python - "$OUT_DIR" <<'EOF'
+import json, math, sys
+
+out_dir = sys.argv[1]
+failures = []
+
+
+def check(path, required, ratio_keys):
+    with open(f"{out_dir}/{path}") as f:
+        r = json.load(f)
+    flat = {}
+
+    def walk(d, prefix=""):
+        for k, v in d.items():
+            flat[f"{prefix}{k}"] = v
+            if isinstance(v, dict):
+                walk(v, f"{prefix}{k}.")
+    walk(r)
+    for k in required:
+        if k not in flat:
+            failures.append(f"{path}: missing key {k!r}")
+    for k in ratio_keys:
+        v = flat.get(k)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            failures.append(f"{path}: ratio {k!r} not a finite positive "
+                            f"number (got {v!r})")
+
+
+check("BENCH_index.json",
+      required=["n", "eps", "minpts", "device_sweep_s",
+                "vectorized.materialize_s", "vectorized.finex_build_s",
+                "vectorized.end_to_end_build_s", "vectorized.csr_nnz",
+                "identical_outputs",
+                "build.speedup_end_to_end", "build.speedup_host_pipeline",
+                "build.speedup_finex_build"],
+      ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
+                  "build.speedup_finex_build", "build.speedup_eps_star",
+                  "build.speedup_minpts_star"])
+check("BENCH_service.json",
+      required=["n", "eps", "minpts", "k", "build_s", "hit_s",
+                "hit_zero_distance_rows", "sweep_s", "sequential_s",
+                "sweep_identical_to_sequential",
+                "service.settings_per_s", "service.batched_sweeps",
+                "service.store"],
+      ratio_keys=["cache_hit_speedup", "sweep_vs_sequential",
+                  "service.settings_per_s"])
+
+if failures:
+    print("BENCH schema check FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print(f"BENCH schema check OK ({out_dir}/BENCH_index.json, "
+      f"{out_dir}/BENCH_service.json)")
+EOF

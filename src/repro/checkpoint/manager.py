@@ -151,7 +151,10 @@ class CheckpointManager:
                     or int(prev["minpts"]) != int(index.minpts)
                     or prev.get("metric") != index.metric
                     or int(prev.get("n", -1)) != index.n
-                    or int(prev.get("nnz", -1)) != index.csr.nnz):
+                    or int(prev.get("nnz", -1)) != index.csr.nnz
+                    or (bool(prev.get("fingerprint"))
+                        and bool(index.fingerprint())
+                        and prev["fingerprint"] != index.fingerprint())):
                 raise ValueError(
                     f"step {step} already holds a different FINEX index "
                     f"(eps={prev['eps']}, minpts={prev['minpts']}, "
@@ -159,7 +162,8 @@ class CheckpointManager:
             return                       # idempotent: index already durable
         meta = {"kind": "finex_index", "eps": float(index.eps),
                 "minpts": int(index.minpts), "metric": index.metric,
-                "n": int(index.n), "nnz": int(index.csr.nnz)}
+                "n": int(index.n), "nnz": int(index.csr.nnz),
+                "fingerprint": index.fingerprint() or ""}
         meta.update(extra or {})
         self.save(step, index.to_arrays(), extra=meta, async_=async_)
 

@@ -6,8 +6,10 @@ times. The functional layer underneath (finex_build, eps_star_query, …)
 stays exported for benchmarks and tests that need the pieces."""
 from repro.core.ordering import ClusterOrdering, FinexOrdering
 from repro.core.build import finex_build, optics_build
-from repro.core.extract import query_clustering
-from repro.core.queries import eps_star_query, minpts_star_query, QueryStats
+from repro.core.extract import query_clustering, query_clustering_batch
+from repro.core.queries import (eps_star_batch, eps_star_query,
+                                minpts_star_batch, minpts_star_query,
+                                QueryStats)
 from repro.core.index import FinexIndex
 from repro.core.dbscan import dbscan, dbscan_from_csr, filtered_counts
 from repro.core.equivalence import (assert_equivalent_exact, border_recall,
@@ -16,7 +18,9 @@ from repro.core.equivalence import (assert_equivalent_exact, border_recall,
 __all__ = [
     "ClusterOrdering", "FinexOrdering", "FinexIndex",
     "finex_build", "optics_build",
-    "query_clustering", "eps_star_query", "minpts_star_query", "QueryStats",
+    "query_clustering", "query_clustering_batch",
+    "eps_star_query", "minpts_star_query",
+    "eps_star_batch", "minpts_star_batch", "QueryStats",
     "dbscan", "dbscan_from_csr", "filtered_counts",
     "assert_equivalent_exact", "border_recall", "canonical_core_partition",
 ]

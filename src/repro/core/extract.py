@@ -30,25 +30,42 @@ def query_clustering(o: ClusterOrdering, eps_star: float) -> np.ndarray:
     device tile sweep — so that d ≤ ε* means the same thing here as it does
     in the CSR filter and the fused count kernels (ties at the threshold
     are common for discrete metrics like Jaccard).
+
+    The K=1 slice of :func:`query_clustering_batch` — one implementation
+    of the scan, so the "row k is byte-identical" contract holds by
+    construction.
     """
-    eps_star = float(np.float32(eps_star))
-    if eps_star > float(np.float32(o.eps)) + 1e-12:
-        raise ValueError(f"eps*={eps_star} exceeds generating eps={o.eps}")
-    Rq = o.R[o.order]
-    Cq = o.C[o.order]
-    breaks = Rq > eps_star
-    starts = breaks & (Cq <= eps_star)
+    return query_clustering_batch(o, [eps_star])[0]
+
+
+def query_clustering_batch(o: ClusterOrdering, eps_stars) -> np.ndarray:
+    """Algorithm 1 over K thresholds at once: (K, n) label matrix.
+
+    One segmented extraction instead of K sequential scans: the per-object
+    (R, C) rows are read once and broadcast against the threshold column,
+    so the cumsum/labeling pass is a single 2-D kernel. Row k is
+    byte-identical to ``query_clustering(o, eps_stars[k])``.
+    """
+    es = np.asarray([float(np.float32(e)) for e in np.atleast_1d(eps_stars)],
+                    dtype=np.float64)
+    if es.size == 0:
+        return np.empty((0, o.n), dtype=np.int64)
+    eps_gen = float(np.float32(o.eps))
+    if es.max() > eps_gen + 1e-12:
+        raise ValueError(
+            f"eps*={es.max()} exceeds generating eps={o.eps}")
+    Rq = o.R[o.order][None, :]
+    Cq = o.C[o.order][None, :]
+    e = es[:, None]
+    breaks = Rq > e
+    starts = breaks & (Cq <= e)
     member = ~breaks | starts
-    labels_in_order = np.cumsum(starts) - 1
-    labels_in_order = np.where(member & (labels_in_order >= 0),
-                               labels_in_order, -1)
-    # R ≤ ε* before any cluster start would join an empty cluster; the
-    # orderings produced by Algorithms 2/3 cannot do this (the minimizing
-    # core precedes — see Thm 5.3 proof), so flag it loudly if it happens.
-    assert not np.any((~breaks) & (np.cumsum(starts) == 0)), \
+    cum = np.cumsum(starts, axis=1)
+    labels_in_order = np.where(member & (cum > 0), cum - 1, -1)
+    assert not np.any((~breaks) & (cum == 0)), \
         "object reachable at eps* before any cluster start: corrupt ordering"
-    labels = np.empty(o.n, dtype=np.int64)
-    labels[o.order] = labels_in_order
+    labels = np.empty((es.size, o.n), dtype=np.int64)
+    labels[:, o.order] = labels_in_order
     return labels
 
 

@@ -22,6 +22,7 @@ PRs (sharded materialize, serving, caching) only have one seam to cut.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -32,6 +33,14 @@ from repro.core.ordering import FinexOrdering
 from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
 from repro.neighbors.engine import CSRNeighborhoods, Metric, NeighborEngine
 
+# the flat-array serialization contract of to_arrays()/from_arrays():
+# every key must be present for reconstruction, so a truncated or
+# foreign npz fails loudly up front instead of KeyError-ing mid-rebuild
+REQUIRED_ARRAY_KEYS = (
+    "eps", "minpts", "order", "pos", "C", "R", "N", "F",
+    "csr_indptr", "csr_indices", "csr_dists", "weights", "metric",
+)
+
 
 class FinexIndex:
     """A built FINEX-ordering bundled with its CSR and distance engine."""
@@ -39,7 +48,8 @@ class FinexIndex:
     def __init__(self, ordering: FinexOrdering, csr: CSRNeighborhoods,
                  engine: Optional[NeighborEngine] = None,
                  metric: Metric = "euclidean",
-                 weights: Optional[np.ndarray] = None):
+                 weights: Optional[np.ndarray] = None,
+                 fingerprint: Optional[str] = None):
         self.ordering = ordering
         self.csr = csr
         self.engine = engine
@@ -53,6 +63,11 @@ class FinexIndex:
             self.weights = np.asarray(weights, dtype=np.int64)
         else:
             self.weights = np.ones(ordering.n, dtype=np.int64)
+        # dataset identity travels with the index (and through npz
+        # round-trips) so load(data=...) can refuse the wrong dataset;
+        # with an engine attached it is derived lazily (hashing the whole
+        # dataset is not free) and the engine's identity always wins
+        self._data_fingerprint = fingerprint
         self.query_stats = QueryStats()     # cumulative, resettable
 
     # ------------------------------------------------------ construction
@@ -113,6 +128,15 @@ class FinexIndex:
                                  stats=stats if stats is not None
                                  else self.query_stats)
 
+    def fingerprint(self) -> Optional[str]:
+        """Dataset identity (metric + shape + dtype + content hash) of the
+        data this index was built over; ``None`` only for engine-less
+        indexes loaded from archives written before fingerprints were
+        recorded. Computed on first use (and cached on the engine)."""
+        if self.engine is not None:
+            return self.engine.fingerprint()
+        return self._data_fingerprint
+
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
         cores = int(np.isfinite(self.ordering.C).sum())
@@ -143,11 +167,23 @@ class FinexIndex:
             "csr_dists": self.csr.dists,
             "weights": self.weights,
             "metric": np.str_(self.metric),
+            "fingerprint": np.str_(self.fingerprint() or ""),
         }
 
     @classmethod
     def from_arrays(cls, z, data=None, *, batch_rows: int = 1024,
-                    use_pallas: bool = False) -> "FinexIndex":
+                    use_pallas: bool = False,
+                    fingerprint_mismatch: str = "error") -> "FinexIndex":
+        if fingerprint_mismatch not in ("error", "warn"):
+            raise ValueError(
+                "fingerprint_mismatch must be 'error' or 'warn', got "
+                f"{fingerprint_mismatch!r}")
+        missing = sorted(k for k in REQUIRED_ARRAY_KEYS if k not in z)
+        if missing:
+            raise ValueError(
+                f"FINEX index archive is missing required arrays {missing} "
+                f"(expected {sorted(REQUIRED_ARRAY_KEYS)}); was this npz "
+                "written by FinexIndex.save / CheckpointManager.save_index?")
         eps = float(z["eps"])
         ordering = FinexOrdering(
             eps=eps, minpts=int(z["minpts"]), order=np.asarray(z["order"]),
@@ -158,6 +194,7 @@ class FinexIndex:
                                dists=np.asarray(z["csr_dists"]), eps=eps)
         metric = str(z["metric"])
         weights = np.asarray(z["weights"])
+        stored_fp = str(z["fingerprint"]) if "fingerprint" in z else ""
         engine = None
         if data is not None:
             engine = NeighborEngine(data, metric=metric, weights=weights,
@@ -168,7 +205,19 @@ class FinexIndex:
                     f"dataset has {engine.n} objects but the stored index "
                     f"was built over {ordering.n} — re-attach the exact "
                     "dataset the index was built on")
-        return cls(ordering, csr, engine, metric=metric, weights=weights)
+            if stored_fp and engine.fingerprint() != stored_fp:
+                msg = (
+                    "dataset fingerprint mismatch: the stored index was "
+                    f"built over {stored_fp} but the supplied data is "
+                    f"{engine.fingerprint()} — queries against the wrong "
+                    "engine return wrong clusterings")
+                if fingerprint_mismatch == "error":
+                    raise ValueError(
+                        msg + " (pass fingerprint_mismatch='warn' to "
+                              "attach anyway)")
+                warnings.warn(msg)
+        return cls(ordering, csr, engine, metric=metric, weights=weights,
+                   fingerprint=stored_fp or None)
 
     def save(self, path: str) -> None:
         """Serialize ordering + CSR + weights as one compressed npz."""

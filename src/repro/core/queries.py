@@ -25,13 +25,14 @@ The loop-based originals live in ``repro.core.reference``;
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 from scipy.sparse import csr_matrix
 from scipy.sparse.csgraph import connected_components
 
-from repro.core.extract import cluster_spans, query_clustering
+from repro.core.extract import (cluster_spans, query_clustering,
+                                query_clustering_batch)
 from repro.core.ordering import FinexOrdering
 from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
 
@@ -206,3 +207,227 @@ def minpts_star_query(index: FinexOrdering, csr: CSRNeighborhoods,
     border_ids = np.nonzero(border)[0]
     labels[border_ids[ok]] = labels[fin[ok]]
     return labels
+
+
+# ----------------------------------------------------- batched sweep kernels
+# The serving hot path (repro.service.SweepPlanner) answers K parameter
+# settings against one index. Answering them one scalar query at a time
+# repeats work that is setting-independent: the Algorithm-1 scan inputs,
+# the exact sparse clustering, the verification distance sub-matrices
+# (ε*-queries) and the core-graph traversal (MinPts*-queries). The two
+# kernels below share all four. Row k of each result is byte-identical to
+# the corresponding scalar query (pinned by tests/test_service.py against
+# ``reference_sweep_labels`` and the facade).
+
+
+def _gather_csr_rows(csr: CSRNeighborhoods, rows: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenated (source, neighbor) pairs of the given CSR rows.
+    Neighbor ids keep the CSR's native dtype (they only index arrays)."""
+    starts = csr.indptr[rows]
+    lens = csr.indptr[rows + 1] - starts
+    total = int(lens.sum())
+    if total == 0:
+        return (np.empty(0, dtype=np.int64),
+                np.empty(0, dtype=csr.indices.dtype))
+    # flat CSR positions: row-start offset + within-row rank
+    seg_base = np.cumsum(lens) - lens
+    pos = np.repeat(starts - seg_base, lens) + np.arange(total)
+    return np.repeat(rows, lens), csr.indices[pos]
+
+
+def eps_star_batch(index: FinexOrdering, engine: NeighborEngine,
+                   eps_stars, stats: Optional[QueryStats] = None,
+                   verify_batch: int = 4096) -> np.ndarray:
+    """K exact ε*-queries as one batched pass: (K, n) labels.
+
+    Shared across settings: the (K, n) Algorithm-1 scan, the exact sparse
+    clustering, and — the expensive part — the verification distances.
+    Candidates and ε*-cores live in setting-independent sparse clusters
+    (an ε*-core's sparse cluster is its own sparse label, Prop. 3.9), so
+    one (union-candidates × union-cores) distance sub-matrix per sparse
+    cluster serves every setting; each setting then reduces its slice with
+    the same masked-argmax first-hit as the scalar query.
+    ``stats.candidates`` accumulates per-setting (mirroring K scalar
+    calls); ``stats.verification_pairs`` counts pairs actually computed,
+    i.e. after cross-setting sharing.
+    """
+    if stats is None:
+        stats = QueryStats()
+    es = np.asarray([float(np.float32(e)) for e in np.atleast_1d(eps_stars)],
+                    dtype=np.float64)
+    eps_gen = float(np.float32(index.eps))
+    labels = query_clustering_batch(index, es)
+    if es.size == 0:
+        return labels
+    C = index.C
+    cand_masks = ((labels < 0) & (C[None, :] > es[:, None])
+                  & (C[None, :] <= eps_gen))
+    cand_masks[es >= eps_gen] = False     # Corollary 5.5: scan already exact
+    stats.candidates += int(cand_masks.sum())
+    live = np.nonzero(cand_masks.any(axis=1))[0]
+    if live.size == 0:
+        return labels
+
+    sparse = query_clustering(index, index.eps)           # shared, once
+    firsts = {k: cluster_spans(index, labels[k])[0] for k in live}
+    # union ε*-core set over the live settings (cores of S_i are already
+    # in S_i: Thm 5.2c, so membership is labels[k] >= 0)
+    core_union = ((C[None, :] <= es[live, None])
+                  & (labels[live] >= 0)).any(axis=0)
+    order_pos = index.pos
+    # per-candidate column budget: a candidate of setting k only ever
+    # needs distances to that setting's cores, i.e. C ≤ es[k]; the
+    # largest ε* listing the object as a candidate bounds all of them
+    max_es = np.where(cand_masks[live], es[live, None], -np.inf).max(axis=0)
+
+    cand_ids_all = np.nonzero(cand_masks[live].any(axis=0))[0]
+    cand_groups = sparse[cand_ids_all]
+    for g in np.unique(cand_groups[cand_groups >= 0]):
+        cand_g = cand_ids_all[cand_groups == g]           # ascending ids
+        core_g = np.nonzero(core_union & (sparse == g))[0]
+        if core_g.size == 0:
+            continue
+        # shared sub-matrix per sparse cluster, computed as a staircase:
+        # columns ordered by (C, id) make every setting's core set a
+        # prefix (an ε*-core is exactly C ≤ ε*), so each candidate row is
+        # computed once, against exactly the columns its settings can use
+        col_order = np.lexsort((core_g, C[core_g]))
+        core_gc = core_g[col_order]
+        Cgc = C[core_gc]
+        budgets = max_es[cand_g]
+        D = np.full((cand_g.size, core_gc.size), np.inf, dtype=np.float32)
+        for b in np.unique(budgets):
+            rows_b = np.nonzero(budgets == b)[0]
+            ncols = int(np.searchsorted(Cgc, b, side="right"))
+            if ncols == 0:
+                continue
+            stats.verification_pairs += rows_b.size * ncols
+            for s in range(0, ncols, verify_batch):
+                e = min(s + verify_batch, ncols)
+                D[rows_b, s:e] = engine.pair_distances(
+                    cand_g[rows_b], core_gc[s:e])
+        for k in live:
+            ck = cand_g[cand_masks[k][cand_g]]
+            if ck.size == 0:
+                continue
+            csel = (Cgc <= es[k]) & (labels[k][core_gc] >= 0)
+            if not csel.any():
+                continue
+            cpos = np.nonzero(csel)[0]
+            ids = core_gc[cpos]
+            clab = labels[k][ids]
+            by_lab = np.lexsort((ids, clab))           # (cluster, id) order
+            cpos, clab = cpos[by_lab], clab[by_lab]
+            sub = D[np.searchsorted(cand_g, ck)[:, None], cpos[None, :]]
+            ok = (sub <= es[k]) & \
+                (firsts[k][clab][None, :] > order_pos[ck][:, None])
+            got = ok.any(axis=1)
+            hit = np.argmax(ok, axis=1)
+            labels[k, ck[got]] = clab[hit[got]]
+    return labels
+
+
+def minpts_star_batch(index: FinexOrdering, csr: CSRNeighborhoods,
+                      minpts_stars, stats: Optional[QueryStats] = None
+                      ) -> np.ndarray:
+    """K exact MinPts*-queries as one incremental pass: (K, n) labels.
+
+    Core sets are nested — lowering MinPts* only ever *adds* cores — and
+    connected components are incremental under node additions. Settings
+    are processed once each (unique values, descending): each step
+    activates the newly-cored objects, scans only *their* CSR rows against
+    the active set, and merges into the running component structure via a
+    condensed graph (previous components contracted to super-nodes). Every
+    CSR entry is therefore touched at most once across the whole sweep,
+    instead of once per setting as K scalar queries would.
+
+    Component numbering replicates the scalar query exactly: clusters in
+    (sparse id, smallest-core-id) rank order. ``stats.fast_path`` is set
+    only when every setting hits the no-demotion fast path;
+    ``stats.neighborhoods_computed`` counts unique activations.
+    """
+    if stats is None:
+        stats = QueryStats()
+    ms = [int(m) for m in np.atleast_1d(minpts_stars)]
+    if any(m < index.minpts for m in ms):
+        raise ValueError("MinPts* must be >= generating MinPts")
+    n = index.n
+    out = np.empty((len(ms), n), dtype=np.int64)
+    if not ms:
+        return out
+    sparse = query_clustering(index, index.eps)           # shared, once
+    N, F = index.N, index.F
+
+    # fast path per setting: nothing straddles [MinPts, MinPts*) ⇒ the
+    # components are the sparse clusters themselves (§5.4)
+    straddles = {m: bool(np.any((N >= index.minpts) & (N < m)))
+                 for m in set(ms)}
+    slow = sorted((m for m in set(ms) if straddles[m]), reverse=True)
+
+    snapshots = {}
+    if slow:
+        # int32 component/slot ids throughout: scipy's native index dtype,
+        # so the per-step graph assembly never round-trips through int64
+        comp_of = np.full(n, -1, dtype=np.int32)   # node -> component id
+        comp_min = np.empty(0, dtype=np.int64)     # comp -> smallest core
+        comp_sparse = np.empty(0, dtype=np.int64)  # comp -> sparse cluster
+        active = np.zeros(n, dtype=bool)
+        active_ids = np.empty(0, dtype=np.int64)
+        for m in slow:                      # descending: core sets grow
+            cores_m = np.nonzero((N >= m) & (sparse >= 0))[0]
+            fresh = cores_m[~active[cores_m]]
+            ncomp_prev = comp_min.size
+            if fresh.size:
+                active[fresh] = True
+                src, nb = _gather_csr_rows(csr, fresh)
+                keep = active[nb]
+                src, nb = src[keep], nb[keep]
+                slot = np.full(n, -1, dtype=np.int32)
+                slot[fresh] = np.arange(fresh.size, dtype=np.int32)
+                u = np.int32(ncomp_prev) + slot[src]
+                v = np.where(comp_of[nb] >= 0, comp_of[nb],
+                             np.int32(ncomp_prev) + slot[nb])
+                m_nodes = ncomp_prev + fresh.size
+                g = csr_matrix((np.ones(u.size, dtype=np.int8), (u, v)),
+                               shape=(m_nodes, m_nodes))
+                ncomp, cc = connected_components(g, directed=False)
+                nm = np.full(ncomp, n, dtype=np.int64)
+                np.minimum.at(nm, cc[:ncomp_prev], comp_min)
+                np.minimum.at(nm, cc[ncomp_prev:], fresh)
+                nsp = np.empty(ncomp, dtype=np.int64)
+                nsp[cc[ncomp_prev:]] = sparse[fresh]
+                nsp[cc[:ncomp_prev]] = comp_sparse
+                cc = cc.astype(np.int32, copy=False)
+                comp_of[active_ids] = cc[comp_of[active_ids]]
+                comp_of[fresh] = cc[ncomp_prev + np.arange(fresh.size)]
+                active_ids = np.concatenate([active_ids, fresh])
+                comp_min, comp_sparse = nm, nsp
+                stats.neighborhoods_computed += int(fresh.size)
+            row = np.full(n, -1, dtype=np.int64)
+            ncomp = comp_min.size
+            if ncomp:
+                rank = np.lexsort((comp_min, comp_sparse))
+                label_of = np.empty(ncomp, dtype=np.int64)
+                label_of[rank] = np.arange(ncomp)
+                row[active_ids] = label_of[comp_of[active_ids]]
+            # borders via finder references, zero distances (§5.4)
+            cores_star = N >= m
+            border = (sparse >= 0) & (~cores_star)
+            fin = F[border]
+            okb = cores_star[fin]
+            border_ids = np.nonzero(border)[0]
+            row[border_ids[okb]] = row[fin[okb]]
+            snapshots[m] = row
+    else:
+        stats.fast_path = True
+
+    fast_row = None
+    for i, m in enumerate(ms):
+        if straddles[m]:
+            out[i] = snapshots[m]
+        else:
+            if fast_row is None:
+                fast_row = np.where(sparse >= 0, sparse, -1)
+            out[i] = fast_row
+    return out

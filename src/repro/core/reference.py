@@ -362,3 +362,23 @@ def reference_eps_star_query(index: FinexOrdering, engine: NeighborEngine,
             if not unassigned.any():
                 break
     return labels
+
+
+def reference_sweep_labels(index: FinexOrdering, engine: NeighborEngine,
+                           csr: CSRNeighborhoods, settings) -> np.ndarray:
+    """Loop reference for the batched parameter sweep: one scalar
+    reference query per setting, stacked into the (K, n) label matrix the
+    batched kernels (``eps_star_batch``/``minpts_star_batch``) produce in
+    shared passes. ``settings`` is a sequence of ("eps", v) / ("minpts", v)
+    pairs."""
+    rows = []
+    for kind, value in settings:
+        if kind == "eps":
+            rows.append(reference_eps_star_query(index, engine, value))
+        elif kind == "minpts":
+            rows.append(reference_minpts_star_query(index, csr, int(value)))
+        else:
+            raise ValueError(f"unknown sweep setting kind {kind!r}")
+    if not rows:
+        return np.empty((0, index.n), dtype=np.int64)
+    return np.stack(rows)

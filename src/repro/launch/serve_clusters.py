@@ -1,0 +1,102 @@
+"""Clustering-service driver: batched parameter exploration as a server.
+
+Example-scale stand-in for the production serving loop: synthesizes a few
+datasets, then drains a mixed request stream (builds, single clusterings,
+parameter sweeps, stats probes) through ``ClusterService`` — same-index
+requests coalesce into shared batched sweeps, and the ``IndexStore``
+keeps indexes warm across requests (spilling LRU victims to disk when
+``--store-dir`` is set).
+
+    PYTHONPATH=src python -m repro.launch.serve_clusters --smoke
+    PYTHONPATH=src python -m repro.launch.serve_clusters \
+        --n 20000 --requests 64 --sweep-k 8 --capacity 2 --datasets 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.data.synthetic import gaussian_mixture
+from repro.service import (BuildRequest, ClusterRequest, ClusterService,
+                           IndexStore, StatsRequest, SweepRequest)
+
+
+def _request_stream(datasets, eps, minpts, n_requests, sweep_k, rng):
+    """Mixed request stream: ~1/3 single clusterings, ~2/3 sweeps."""
+    reqs = [BuildRequest(data=x, eps=eps, minpts=minpts) for x in datasets]
+    for _ in range(n_requests):
+        x = datasets[rng.integers(len(datasets))]
+        if rng.random() < 0.33:
+            if rng.random() < 0.5:
+                setting = ("eps", float(eps * rng.uniform(0.2, 1.0)))
+            else:
+                setting = ("minpts", int(minpts * rng.integers(1, 9)))
+            reqs.append(ClusterRequest(data=x, eps=eps, minpts=minpts,
+                                       setting=setting))
+        else:
+            settings = []
+            for _ in range(sweep_k):
+                if rng.random() < 0.5:
+                    settings.append(("eps",
+                                     float(eps * rng.uniform(0.2, 1.0))))
+                else:
+                    settings.append(("minpts",
+                                     int(minpts * rng.integers(1, 9))))
+            reqs.append(SweepRequest(data=x, eps=eps, minpts=minpts,
+                                     settings=settings))
+    reqs.append(StatsRequest())
+    return reqs
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--eps", type=float, default=1.0)
+    ap.add_argument("--minpts", type=int, default=16)
+    ap.add_argument("--datasets", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--sweep-k", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--store-dir", default=None,
+                    help="spill evicted indexes here (default: drop them)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny datasets / few requests")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.n, args.requests, args.datasets = 800, 8, 2
+
+    rng = np.random.default_rng(args.seed)
+    datasets = [gaussian_mixture(args.n, d=args.d, k=8, seed=args.seed + i)
+                for i in range(args.datasets)]
+    manager = None
+    if args.store_dir:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(args.store_dir)
+    svc = ClusterService(store=IndexStore(capacity=args.capacity,
+                                          manager=manager),
+                         slots=args.slots)
+    reqs = _request_stream(datasets, args.eps, args.minpts, args.requests,
+                           args.sweep_k, rng)
+
+    t0 = time.perf_counter()
+    svc.run(reqs)
+    dt = time.perf_counter() - t0
+
+    st = svc.stats()
+    qps = st["settings_answered"] / dt if dt > 0 else float("inf")
+    print(f"served {st['requests_served']} requests "
+          f"({st['settings_answered']} parameter settings) in {dt:.2f}s "
+          f"-> {qps:.1f} settings/s")
+    print(f"  planner batches: {st['batched_sweeps']} "
+          f"(coalesced {st['coalesced_settings']} settings)")
+    print(f"  store: {st['store']}")
+    return {"seconds": dt, "settings_per_s": qps, **st}
+
+
+if __name__ == "__main__":
+    main()

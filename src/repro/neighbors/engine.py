@@ -27,6 +27,7 @@ sizes then use weighted counts while only unique objects are materialized.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Literal, Optional, Tuple
@@ -39,6 +40,44 @@ from repro.kernels import ops
 
 
 Metric = Literal["euclidean", "jaccard"]
+
+
+def dataset_fingerprint(data, metric: Metric = "euclidean",
+                        weights: Optional[np.ndarray] = None) -> str:
+    """Stable identity of a dataset: metric + shape + dtype + content hash.
+
+    Computed over the same canonical representation ``NeighborEngine``
+    stores (float32 vectors / uint32-packed bitmaps + int32 sizes), so the
+    fingerprint of raw input data equals the fingerprint of an engine built
+    from it. This is what keys the serving-side ``IndexStore`` and what
+    ``FinexIndex.load(data=...)`` checks before attaching an engine.
+    Non-unit duplicate ``weights`` are part of the identity (they change
+    every neighborhood count); unit weights hash the same as no weights.
+    """
+    if weights is not None:
+        w = np.ascontiguousarray(np.asarray(weights, dtype=np.int64))
+        if np.all(w == 1):
+            weights = None
+    if metric == "euclidean":
+        x = np.ascontiguousarray(np.asarray(data, dtype=np.float32))
+        h = hashlib.sha256(x.tobytes())
+        shape = "x".join(map(str, x.shape))
+        head = f"euclidean:{shape}:{x.dtype}"
+    elif metric == "jaccard":
+        bits, sizes = data
+        b = np.ascontiguousarray(np.asarray(bits, dtype=np.uint32))
+        s = np.ascontiguousarray(np.asarray(sizes, dtype=np.int32))
+        h = hashlib.sha256(b.tobytes())
+        h.update(s.tobytes())
+        shape = "x".join(map(str, b.shape))
+        head = f"jaccard:{shape}:{b.dtype}"
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    if weights is not None:
+        h.update(b"weights")
+        h.update(w.tobytes())
+        head += ":w"
+    return f"{head}:{h.hexdigest()[:16]}"
 
 
 @dataclass
@@ -102,6 +141,19 @@ class NeighborEngine:
         self._w_dev = jnp.asarray(self.weights.astype(np.float32))
         self.batch_rows = batch_rows
         self.distance_rows_computed = 0  # instrumentation: #row-neighborhoods
+        self._fingerprint: Optional[str] = None
+
+    def fingerprint(self) -> str:
+        """``dataset_fingerprint`` of this engine's dataset (cached)."""
+        if self._fingerprint is None:
+            if self.metric == "euclidean":
+                self._fingerprint = dataset_fingerprint(
+                    np.asarray(self._x), "euclidean", weights=self.weights)
+            else:
+                self._fingerprint = dataset_fingerprint(
+                    (np.asarray(self._bits), np.asarray(self._sizes)),
+                    "jaccard", weights=self.weights)
+        return self._fingerprint
 
     # ---------------------------------------------------------- distances
     def _dist_block(self, rows: jax.Array) -> jax.Array:

@@ -1,0 +1,23 @@
+"""Interactive clustering service over ``FinexIndex`` (serving subsystem).
+
+Three layers, composable or standalone:
+  * ``IndexStore``     — LRU registry of built indexes keyed by dataset
+                         fingerprint + generating (ε, MinPts), with disk
+                         spill/reload through ``CheckpointManager``
+  * ``SweepPlanner``   — K mixed ε*/MinPts* settings answered in batched
+                         vectorized passes: one (K, n) label matrix
+  * ``ClusterService`` — slot-batched request loop (build / cluster /
+                         sweep / stats), coalescing same-index requests
+"""
+from repro.service.store import IndexKey, IndexStore
+from repro.service.planner import Setting, SweepPlanner
+from repro.service.engine import (BuildRequest, ClusterRequest,
+                                  ClusterService, ServiceRequest,
+                                  StatsRequest, SweepRequest)
+
+__all__ = [
+    "IndexKey", "IndexStore",
+    "Setting", "SweepPlanner",
+    "BuildRequest", "ClusterRequest", "ClusterService", "ServiceRequest",
+    "StatsRequest", "SweepRequest",
+]

@@ -1,0 +1,168 @@
+"""``ClusterService`` — slot-batched clustering request loop.
+
+The clustering analog of ``repro.serve.engine.ServeEngine``: a fixed
+number of request slots drains a queue, and requests that land in the
+same slot window against the same index are *coalesced* — all of their
+parameter settings are answered by one ``SweepPlanner`` batch instead of
+one query each. Index residency is delegated to the ``IndexStore``, so a
+request against a warm index costs zero distance computations beyond
+ε*-verification.
+
+Request kinds (dataclasses, mirroring the serve Request pattern):
+  * ``BuildRequest``   — ensure the index for (data, ε, MinPts) exists
+  * ``ClusterRequest`` — one labeling: the generating pair, or a single
+                         ("eps"|"minpts", value) setting
+  * ``SweepRequest``   — K settings, answered as one (K, n) matrix
+  * ``StatsRequest``   — service + store counters snapshot
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.neighbors.engine import Metric
+from repro.service.planner import Setting, SweepPlanner
+from repro.service.store import IndexKey, IndexStore
+
+
+@dataclass
+class BuildRequest:
+    data: Any
+    eps: float
+    minpts: int
+    metric: Metric = "euclidean"
+    weights: Optional[np.ndarray] = None
+    # filled by the service
+    key: Optional[IndexKey] = None
+    outcome: str = ""                    # "hit" | "reload" | "build"
+    done: bool = False
+
+
+@dataclass
+class ClusterRequest:
+    data: Any
+    eps: float
+    minpts: int
+    setting: Optional[Setting] = None    # None -> generating-pair labels
+    metric: Metric = "euclidean"
+    weights: Optional[np.ndarray] = None
+    # filled by the service
+    labels: Optional[np.ndarray] = None  # (n,)
+    outcome: str = ""
+    done: bool = False
+
+
+@dataclass
+class SweepRequest:
+    data: Any
+    eps: float
+    minpts: int
+    settings: Sequence[Setting] = field(default_factory=list)
+    metric: Metric = "euclidean"
+    weights: Optional[np.ndarray] = None
+    # filled by the service
+    labels: Optional[np.ndarray] = None  # (K, n), request order
+    outcome: str = ""
+    done: bool = False
+
+
+@dataclass
+class StatsRequest:
+    result: Optional[Dict[str, object]] = None
+    done: bool = False
+
+
+ServiceRequest = Union[BuildRequest, ClusterRequest, SweepRequest,
+                       StatsRequest]
+
+
+class ClusterService:
+    """Fixed-slot batched clustering engine over an ``IndexStore``."""
+
+    def __init__(self, store: Optional[IndexStore] = None,
+                 slots: int = 8, capacity: int = 4, manager=None):
+        self.store = store if store is not None else IndexStore(
+            capacity=capacity, manager=manager)
+        self.slots = slots
+        self.requests_served = 0
+        self.settings_answered = 0
+        self.batched_sweeps = 0        # planner batches actually executed
+        self.coalesced_settings = 0    # settings that rode a shared batch
+
+    # ------------------------------------------------------------- loop
+    def run(self, requests: Sequence[ServiceRequest]
+            ) -> Sequence[ServiceRequest]:
+        """Serve all requests to completion (slot window = batch)."""
+        queue = list(requests)
+        while queue:
+            active = queue[:self.slots]
+            queue = queue[len(active):]
+            self._serve_window(active)
+        return requests
+
+    def _serve_window(self, active: List[ServiceRequest]) -> None:
+        # resolve indexes first: builds happen once per key per window
+        groups: Dict[IndexKey, list] = {}
+        stats_reqs: List[StatsRequest] = []
+        for r in active:
+            if isinstance(r, StatsRequest):
+                stats_reqs.append(r)     # answered after the window's work
+                continue
+            index, outcome = self.store.get_or_build(
+                r.data, r.eps, r.minpts, metric=r.metric, weights=r.weights)
+            r.outcome = outcome
+            if isinstance(r, BuildRequest):
+                r.key = IndexKey.of_index(index)
+                r.done = True
+                self.requests_served += 1
+                continue
+            groups.setdefault(IndexKey.of_index(index),
+                              [index, []])[1].append(r)
+
+        # coalesce: one planner batch per index per window
+        for index, members in groups.values():
+            settings: List[Setting] = []
+            spans = []
+            for r in members:
+                reqs = self._settings_of(index, r)
+                spans.append((r, len(settings), len(settings) + len(reqs)))
+                settings.extend(reqs)
+            labels = SweepPlanner(index).sweep(settings)
+            self.batched_sweeps += 1
+            self.settings_answered += len(settings)
+            if len(members) > 1:
+                self.coalesced_settings += len(settings)
+            for r, lo, hi in spans:
+                # .copy(): results must not pin the whole window matrix
+                r.labels = (labels[lo].copy()
+                            if isinstance(r, ClusterRequest)
+                            else labels[lo:hi].copy())
+                r.done = True
+                self.requests_served += 1
+
+        for r in stats_reqs:
+            r.result = self.stats()
+            r.done = True
+            self.requests_served += 1
+
+    @staticmethod
+    def _settings_of(index, r) -> List[Setting]:
+        if isinstance(r, SweepRequest):
+            return list(r.settings)
+        # a generating-pair ClusterRequest is the degenerate MinPts*-query
+        # MinPts* = MinPts (fast path: identical to index.clustering()
+        # labels with noise at -1), so it coalesces like everything else
+        return [r.setting if r.setting is not None
+                else ("minpts", index.minpts)]
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, object]:
+        return {
+            "requests_served": self.requests_served,
+            "settings_answered": self.settings_answered,
+            "batched_sweeps": self.batched_sweeps,
+            "coalesced_settings": self.coalesced_settings,
+            "store": self.store.stats(),
+        }

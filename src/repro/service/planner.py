@@ -1,0 +1,72 @@
+"""``SweepPlanner`` — K parameter settings against one index, batched.
+
+The paper's interactive workflow is "test various settings until a
+satisfying clustering is found"; each probe is an ε*- or MinPts*-query.
+Answering a grid one scalar facade call at a time repeats the
+setting-independent work (Algorithm-1 scan inputs, the exact sparse
+clustering, verification distance sub-matrices, the core-graph
+traversal). The planner routes a mixed grid through the batched kernels
+(``eps_star_batch`` / ``minpts_star_batch`` in ``repro.core.queries``)
+that share all of it, and returns a (K, n) label matrix in request
+order — row k byte-identical to the scalar query for settings[k].
+
+    planner = SweepPlanner(index)
+    labels = planner.sweep([("eps", 0.2), ("minpts", 60), ("eps", 0.3)])
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.index import FinexIndex
+from repro.core.queries import QueryStats, eps_star_batch, minpts_star_batch
+
+# a sweep setting: ("eps", ε* ≤ ε) or ("minpts", MinPts* ≥ MinPts)
+Setting = Tuple[str, float]
+
+
+class SweepPlanner:
+    """Batched query executor over one built ``FinexIndex``."""
+
+    def __init__(self, index: FinexIndex):
+        self.index = index
+
+    def eps_grid(self, values: Sequence[float]) -> List[Setting]:
+        return [("eps", float(v)) for v in values]
+
+    def minpts_grid(self, values: Sequence[int]) -> List[Setting]:
+        return [("minpts", int(v)) for v in values]
+
+    def sweep(self, settings: Sequence[Setting],
+              stats: Optional[QueryStats] = None) -> np.ndarray:
+        """(K, n) exact labels for the K settings, in request order."""
+        if stats is None:
+            stats = self.index.query_stats
+        eps_pos, eps_vals = [], []
+        mp_pos, mp_vals = [], []
+        for i, (kind, value) in enumerate(settings):
+            if kind == "eps":
+                eps_pos.append(i)
+                eps_vals.append(float(value))
+            elif kind == "minpts":
+                mp_pos.append(i)
+                mp_vals.append(int(value))
+            else:
+                raise ValueError(
+                    f"unknown sweep setting kind {kind!r} at position {i} "
+                    "(expected 'eps' or 'minpts')")
+        if eps_vals and self.index.engine is None:
+            raise RuntimeError(
+                "ε*-sweeps need the distance engine for verification; "
+                "load the index with its raw data (FinexIndex.load(..., "
+                "data=...)) or sweep MinPts* settings only")
+        out = np.empty((len(settings), self.index.n), dtype=np.int64)
+        if eps_vals:
+            out[eps_pos] = eps_star_batch(
+                self.index.ordering, self.index.engine, eps_vals,
+                stats=stats)
+        if mp_vals:
+            out[mp_pos] = minpts_star_batch(
+                self.index.ordering, self.index.csr, mp_vals, stats=stats)
+        return out

@@ -1,0 +1,196 @@
+"""``IndexStore`` — the serving-side registry of built FINEX indexes.
+
+A built index is the expensive artifact of this system (device tile sweep
++ host ordering sweep); every query against it is cheap. The store keeps
+the hot indexes resident under an LRU bound, keyed by dataset fingerprint
+plus generating (ε, MinPts), and spills evicted indexes to disk through
+``CheckpointManager.save_index`` so they reload instead of rebuilding.
+
+    store = IndexStore(capacity=4, manager=CheckpointManager("idx_cache"))
+    index, outcome = store.get_or_build(x, eps=0.5, minpts=10)  # "build"
+    index, outcome = store.get_or_build(x, eps=0.5, minpts=10)  # "hit"
+    # ... capacity overflow spills LRU victims; a later get_or_build of a
+    # spilled key is a "reload": npz read + engine re-attach (from the
+    # dataset the caller just presented — the store retains no data), no
+    # distances recomputed
+
+A warm hit costs zero distance computations: the resident index answers
+``clustering``/``minpts_star`` without touching the engine at all, and
+ε*-queries only ever compute verification sub-matrices. A bare ``get``
+reloads spilled indexes engine-less (MinPts*-queries and the linear scan
+still work); use ``get_or_build`` with the dataset to re-attach.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.index import FinexIndex
+from repro.neighbors.engine import Metric, dataset_fingerprint
+
+
+@dataclass(frozen=True)
+class IndexKey:
+    """Identity of a built index: what data, at which generating pair."""
+    fingerprint: str
+    eps: float
+    minpts: int
+
+    @classmethod
+    def make(cls, data, eps: float, minpts: int,
+             metric: Metric = "euclidean",
+             weights: Optional[np.ndarray] = None) -> "IndexKey":
+        # ε is canonicalized to the float32 distance domain, matching the
+        # device tile sweep — 0.5 and np.float32(0.5) are the same index
+        return cls(dataset_fingerprint(data, metric, weights=weights),
+                   float(np.float32(eps)), int(minpts))
+
+    @classmethod
+    def of_index(cls, index: FinexIndex) -> "IndexKey":
+        if index.fingerprint() is None:
+            raise ValueError(
+                "index carries no dataset fingerprint (archive predates "
+                "fingerprinting) — rebuild or re-save it before storing")
+        return cls(index.fingerprint(), float(np.float32(index.eps)),
+                   index.minpts)
+
+
+class IndexStore:
+    """LRU-bounded index registry with disk spill through a checkpoint
+    manager. ``capacity`` counts resident indexes; pass ``manager=None``
+    to drop evicted indexes instead of spilling them."""
+
+    def __init__(self, capacity: int = 4, manager=None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.manager = manager
+        self._resident: "OrderedDict[IndexKey, FinexIndex]" = OrderedDict()
+        self._spilled: Dict[IndexKey, int] = {}      # key -> manager step
+        # id(array) -> (weakref, fingerprint): skips the full-dataset hash
+        # when the same array object is presented again (every request in
+        # a service window hits this path); entries die with their array
+        self._fp_cache: Dict[int, tuple] = {}
+        self.hits = 0
+        self.reloads = 0
+        self.builds = 0
+        self.spills = 0
+        self.drops = 0
+
+    # ------------------------------------------------------------ lookup
+    def __len__(self) -> int:
+        return len(self._resident)
+
+    def __contains__(self, key: IndexKey) -> bool:
+        return key in self._resident or key in self._spilled
+
+    def get(self, key: IndexKey) -> Optional[FinexIndex]:
+        """Resident index for ``key``, reloading from spill if needed.
+        Reloads are engine-less here (the store retains no datasets) —
+        use :meth:`get_or_build` with the dataset to re-attach."""
+        idx = self._resident.get(key)
+        if idx is not None:
+            self._resident.move_to_end(key)
+            self.hits += 1
+            return idx
+        if key in self._spilled:
+            return self._reload(key, data=None)
+        return None
+
+    def _reload(self, key: IndexKey, data) -> FinexIndex:
+        idx = self.manager.restore_index(self._spilled[key], data=data)
+        self.reloads += 1
+        self._admit(key, idx)
+        return idx
+
+    def get_or_build(self, data, eps: float, minpts: int, *,
+                     metric: Metric = "euclidean",
+                     weights: Optional[np.ndarray] = None,
+                     **build_kw) -> Tuple[FinexIndex, str]:
+        """Fetch or build the index for (data, ε, MinPts).
+
+        Returns (index, outcome) with outcome one of "hit" (resident,
+        zero distance computations), "reload" (spilled npz re-read) or
+        "build" (full materialize + ordering sweep).
+        """
+        key = IndexKey(self._fingerprint_of(data, metric, weights),
+                       float(np.float32(eps)), int(minpts))
+        idx = self._resident.get(key)
+        if idx is not None:
+            self._resident.move_to_end(key)
+            self.hits += 1
+            return idx, "hit"
+        if key in self._spilled:
+            # the caller's dataset re-attaches the engine; the key proves
+            # it is the dataset the spilled index was built over
+            return self._reload(key, data=data), "reload"
+        idx = FinexIndex.build(data, eps=eps, minpts=minpts, metric=metric,
+                               weights=weights, **build_kw)
+        self.builds += 1
+        self._admit(key, idx)
+        return idx, "build"
+
+    def put(self, index: FinexIndex) -> IndexKey:
+        """Register an externally built index (keyed by its fingerprint)."""
+        key = IndexKey.of_index(index)
+        self._admit(key, index)
+        return key
+
+    def _fingerprint_of(self, data, metric: Metric, weights) -> str:
+        """``dataset_fingerprint``, memoized by array identity for the
+        common serving shape: one plain unweighted array presented on
+        every request. Weighted or (bits, sizes)-tuple datasets always
+        rehash — a cache keyed on one piece of a composite identity can
+        go stale through id reuse and silently serve the wrong index."""
+        if weights is not None or isinstance(data, tuple):
+            return dataset_fingerprint(data, metric, weights=weights)
+        ent = self._fp_cache.get(id(data))
+        if ent is not None and ent[0]() is data:
+            return ent[1]
+        fp = dataset_fingerprint(data, metric)
+        try:
+            self._fp_cache[id(data)] = (weakref.ref(
+                data, lambda _, i=id(data): self._fp_cache.pop(i, None)),
+                fp)
+        except TypeError:      # not weakref-able: recompute next time
+            pass
+        return fp
+
+    # ---------------------------------------------------------- eviction
+    def _admit(self, key: IndexKey, index: FinexIndex) -> None:
+        self._resident[key] = index
+        self._resident.move_to_end(key)
+        while len(self._resident) > self.capacity:
+            victim_key, victim = self._resident.popitem(last=False)
+            self._evict(victim_key, victim)
+
+    def _evict(self, key: IndexKey, index: FinexIndex) -> None:
+        if self.manager is None:
+            self.drops += 1
+            return
+        if key not in self._spilled:
+            # allocate the step from the manager's live listing: the step
+            # namespace is shared with training checkpoints, so a number
+            # reserved at construction time could since have been taken
+            step = max(self.manager.all_steps(), default=-1) + 1
+            self.manager.save_index(step, index)
+            self._spilled[key] = step
+            self.spills += 1
+        # else: an identical snapshot is already durable — nothing to write
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        return {
+            "capacity": self.capacity,
+            "resident": len(self._resident),
+            "spilled": len(self._spilled),
+            "hits": self.hits,
+            "reloads": self.reloads,
+            "builds": self.builds,
+            "spills": self.spills,
+            "drops": self.drops,
+        }

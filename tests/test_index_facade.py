@@ -73,6 +73,46 @@ def test_lean_resave_preserves_weights(tmp_path):
     np.testing.assert_array_equal(back.minpts_star(20), index.minpts_star(20))
 
 
+def test_from_arrays_missing_keys_named(built):
+    """A truncated/foreign npz must fail up front with the missing array
+    names — not as a bare KeyError deep in reconstruction."""
+    _, index = built
+    arrs = index.to_arrays()
+    arrs.pop("csr_indices")
+    arrs.pop("N")
+    with pytest.raises(ValueError) as ei:
+        FinexIndex.from_arrays(arrs)
+    assert "csr_indices" in str(ei.value) and "'N'" in str(ei.value)
+    with pytest.raises(ValueError, match="missing required arrays"):
+        FinexIndex.from_arrays({})
+
+
+def test_fingerprint_roundtrip_and_mismatch(tmp_path, built):
+    """The dataset fingerprint (shape + dtype + content hash) travels with
+    the index; load(data=...) refuses a different dataset instead of
+    silently attaching the wrong engine."""
+    from repro.neighbors.engine import dataset_fingerprint
+    x, index = built
+    assert index.fingerprint() == dataset_fingerprint(x, "euclidean")
+    p = str(tmp_path / "fp.npz")
+    index.save(p)
+    # lean load keeps the stored fingerprint; matching data re-attaches
+    assert FinexIndex.load(p).fingerprint() == index.fingerprint()
+    assert FinexIndex.load(p, data=x).fingerprint() == index.fingerprint()
+    # same shape, different content -> error by default, warn on request
+    y = np.array(x)
+    y[0, 0] += 1.0
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        FinexIndex.load(p, data=y)
+    with pytest.warns(UserWarning, match="fingerprint mismatch"):
+        FinexIndex.load(p, data=y, fingerprint_mismatch="warn")
+    # archives written before fingerprinting still load against any data
+    arrs = index.to_arrays()
+    del arrs["fingerprint"]
+    old = FinexIndex.from_arrays(arrs, data=y)
+    assert old.fingerprint() is not None      # recomputed from the engine
+
+
 def test_save_index_step_collision_raises(tmp_path, built):
     """save_index on a step that already holds train state must raise —
     not silently drop the index (save() skips existing steps)."""

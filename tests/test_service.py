@@ -1,0 +1,244 @@
+"""Serving subsystem: batched sweeps pinned byte-identical to scalar
+queries (property-style, across euclidean / jaccard / weighted datasets,
+including the degenerate K=1 and ε*=ε / MinPts*=MinPts sweeps), plus
+``IndexStore`` residency/spill semantics and the ``ClusterService``
+slot-batched request loop."""
+import numpy as np
+import pytest
+
+from repro.core import (FinexIndex, query_clustering,
+                        query_clustering_batch)
+from repro.core.reference import reference_sweep_labels
+from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
+from repro.neighbors.bitset import pack_sets
+from repro.neighbors.engine import NeighborEngine
+from repro.service import (BuildRequest, ClusterRequest, ClusterService,
+                           IndexStore, StatsRequest, SweepPlanner,
+                           SweepRequest)
+
+
+def _euclidean(seed):
+    x = gaussian_mixture(400, d=4, k=5, seed=seed)
+    return NeighborEngine(x, metric="euclidean"), 0.35, 8
+
+
+def _jaccard(seed):
+    sets, w = heavy_tail_sets(500, seed=seed)
+    bits, sizes = pack_sets(sets)
+    return NeighborEngine((bits, sizes), metric="jaccard", weights=w), 0.4, 16
+
+
+def _weighted(seed):
+    rng = np.random.default_rng(seed)
+    x = gaussian_mixture(300, d=3, k=4, seed=seed)
+    w = rng.integers(1, 6, size=x.shape[0]).astype(np.int64)
+    return NeighborEngine(x, metric="euclidean", weights=w), 0.4, 12
+
+
+CASES = {"euclidean": _euclidean, "jaccard": _jaccard, "weighted": _weighted}
+
+
+@pytest.fixture(params=sorted(CASES), scope="module")
+def built(request):
+    engine, eps, minpts = CASES[request.param](seed=3)
+    return FinexIndex.from_engine(engine, eps, minpts)
+
+
+def _random_settings(rng, eps, minpts, k):
+    out = []
+    for _ in range(k):
+        if rng.random() < 0.5:
+            out.append(("eps", float(eps * rng.uniform(0.05, 1.0))))
+        else:
+            out.append(("minpts", int(rng.integers(minpts, minpts * 20))))
+    return out
+
+
+# ------------------------------------------------------- batched kernels
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sweep_property_identical_to_scalar_queries(built, seed):
+    """Property: every row of a random mixed sweep — always including the
+    degenerate ε*=ε and MinPts*=MinPts settings — is byte-identical to
+    the corresponding scalar facade call."""
+    rng = np.random.default_rng(seed)
+    settings = _random_settings(rng, built.eps, built.minpts,
+                                int(rng.integers(1, 9)))
+    settings += [("eps", built.eps), ("minpts", built.minpts)]
+    got = SweepPlanner(built).sweep(settings)
+    assert got.shape == (len(settings), built.n)
+    for (kind, v), row in zip(settings, got):
+        want = built.eps_star(v) if kind == "eps" else built.minpts_star(v)
+        np.testing.assert_array_equal(
+            row, want, err_msg=f"sweep row diverged at {kind}*={v}")
+
+
+def test_sweep_k1_degenerate(built):
+    for setting in [("eps", built.eps), ("eps", built.eps * 0.4),
+                    ("minpts", built.minpts), ("minpts", built.minpts * 5)]:
+        got = SweepPlanner(built).sweep([setting])
+        assert got.shape == (1, built.n)
+        kind, v = setting
+        want = built.eps_star(v) if kind == "eps" else built.minpts_star(v)
+        np.testing.assert_array_equal(got[0], want)
+
+
+def test_sweep_matches_loop_reference(built):
+    """Tie the batched kernels to the seed-era loop implementations."""
+    settings = [("eps", built.eps * 0.5), ("minpts", built.minpts * 3),
+                ("eps", built.eps), ("minpts", built.minpts)]
+    got = SweepPlanner(built).sweep(settings)
+    ref = reference_sweep_labels(built.ordering, built.engine, built.csr,
+                                 settings)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_query_clustering_batch_identical(built):
+    es = [built.eps, built.eps * 0.7, built.eps * 0.33, built.eps * 0.05]
+    batch = query_clustering_batch(built.ordering, es)
+    for e, row in zip(es, batch):
+        np.testing.assert_array_equal(row,
+                                      query_clustering(built.ordering, e))
+
+
+def test_sweep_validates_settings(built):
+    with pytest.raises(ValueError, match="unknown sweep setting"):
+        SweepPlanner(built).sweep([("epsilon", 0.2)])
+    with pytest.raises(ValueError, match="MinPts"):
+        SweepPlanner(built).sweep([("minpts", built.minpts - 1)])
+    with pytest.raises(ValueError, match="exceeds generating"):
+        SweepPlanner(built).sweep([("eps", built.eps * 2)])
+
+
+def test_sweep_without_engine_needs_no_distances(tmp_path, built):
+    """A lean-loaded index (no engine) sweeps MinPts* settings fine and
+    refuses ε* settings with a clear error."""
+    p = str(tmp_path / "idx.npz")
+    built.save(p)
+    lean = FinexIndex.load(p)
+    settings = [("minpts", built.minpts), ("minpts", built.minpts * 4)]
+    np.testing.assert_array_equal(SweepPlanner(lean).sweep(settings),
+                                  SweepPlanner(built).sweep(settings))
+    with pytest.raises(RuntimeError, match="distance engine"):
+        SweepPlanner(lean).sweep([("eps", built.eps * 0.5)])
+
+
+# ------------------------------------------------------------ IndexStore
+def test_store_warm_hit_zero_distances():
+    x = gaussian_mixture(300, d=3, k=3, seed=0)
+    store = IndexStore(capacity=2)
+    idx1, out1 = store.get_or_build(x, 0.4, 8)
+    assert out1 == "build"
+    idx2, out2 = store.get_or_build(x, 0.4, 8)
+    assert out2 == "hit" and idx2 is idx1
+    rows = idx2.engine.distance_rows_computed
+    labels = idx2.clustering()
+    assert idx2.engine.distance_rows_computed == rows   # zero distances
+    np.testing.assert_array_equal(labels, idx1.clustering())
+    assert store.stats()["hits"] == 1
+
+
+def test_store_distinct_params_are_distinct_entries():
+    x = gaussian_mixture(300, d=3, k=3, seed=0)
+    store = IndexStore(capacity=4)
+    a, _ = store.get_or_build(x, 0.4, 8)
+    b, out = store.get_or_build(x, 0.4, 12)
+    assert out == "build" and b is not a
+    c, out = store.get_or_build(x, 0.3, 8)
+    assert out == "build" and c is not a
+    assert store.stats()["builds"] == 3
+
+
+def test_store_distinct_weights_are_distinct_entries(tmp_path):
+    """Duplicate weights change every neighborhood count, so they are part
+    of the dataset identity — same points with different weights must not
+    collide in the cache (and a weighted index survives spill/reload)."""
+    from repro.checkpoint.manager import CheckpointManager
+    x = gaussian_mixture(250, d=3, k=3, seed=4)
+    w = np.random.default_rng(4).integers(1, 5, size=x.shape[0])
+    store = IndexStore(capacity=1, manager=CheckpointManager(
+        str(tmp_path / "cache")))
+    plain, _ = store.get_or_build(x, 0.4, 8)
+    weighted, out = store.get_or_build(x, 0.4, 8, weights=w)
+    assert out == "build" and weighted is not plain
+    want = weighted.minpts_star(20)
+    # unit weights passed explicitly hash like no weights at all
+    _, out = store.get_or_build(x, 0.4, 8, weights=np.ones(x.shape[0]))
+    assert out == "reload"                       # the plain index, spilled
+    back, out = store.get_or_build(x, 0.4, 8, weights=w)
+    assert out == "reload"
+    np.testing.assert_array_equal(back.minpts_star(20), want)
+
+
+def test_store_lru_spill_and_reload(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    x1 = gaussian_mixture(300, d=3, k=3, seed=1)
+    x2 = gaussian_mixture(250, d=3, k=3, seed=2)
+    store = IndexStore(capacity=1, manager=CheckpointManager(
+        str(tmp_path / "cache")))
+    i1, _ = store.get_or_build(x1, 0.4, 8)
+    want = i1.clustering()
+    want_eps = i1.eps_star(0.25)
+    store.get_or_build(x2, 0.4, 8)               # evicts x1 -> disk spill
+    assert store.stats()["spills"] == 1
+    i1b, out = store.get_or_build(x1, 0.4, 8)
+    assert out == "reload"                        # npz read, not a rebuild
+    assert store.stats()["builds"] == 2
+    np.testing.assert_array_equal(i1b.clustering(), want)
+    # the store re-attached the engine from its data registry: ε*-queries
+    # work on the reloaded index
+    np.testing.assert_array_equal(i1b.eps_star(0.25), want_eps)
+
+
+def test_store_eviction_without_manager_drops():
+    x1 = gaussian_mixture(250, d=3, k=3, seed=1)
+    x2 = gaussian_mixture(200, d=3, k=3, seed=2)
+    store = IndexStore(capacity=1)               # no spill target
+    store.get_or_build(x1, 0.4, 8)
+    store.get_or_build(x2, 0.4, 8)
+    assert store.stats()["drops"] == 1
+    _, out = store.get_or_build(x1, 0.4, 8)      # dropped -> rebuild
+    assert out == "build"
+
+
+# -------------------------------------------------------- ClusterService
+def test_service_mixed_requests_and_coalescing():
+    x = gaussian_mixture(300, d=3, k=3, seed=0)
+    svc = ClusterService(store=IndexStore(capacity=2), slots=8)
+    reqs = [
+        BuildRequest(data=x, eps=0.4, minpts=8),
+        SweepRequest(data=x, eps=0.4, minpts=8,
+                     settings=[("eps", 0.3), ("minpts", 16)]),
+        ClusterRequest(data=x, eps=0.4, minpts=8, setting=("eps", 0.25)),
+        ClusterRequest(data=x, eps=0.4, minpts=8),      # generating pair
+        StatsRequest(),
+    ]
+    svc.run(reqs)
+    assert all(r.done for r in reqs)
+    assert reqs[0].outcome == "build"
+    index, _ = svc.store.get_or_build(x, 0.4, 8)
+    np.testing.assert_array_equal(reqs[1].labels[0], index.eps_star(0.3))
+    np.testing.assert_array_equal(reqs[1].labels[1], index.minpts_star(16))
+    np.testing.assert_array_equal(reqs[2].labels, index.eps_star(0.25))
+    np.testing.assert_array_equal(reqs[3].labels, index.clustering())
+    # the three query requests coalesced into ONE planner batch
+    assert svc.batched_sweeps == 1
+    assert svc.store.stats()["builds"] == 1
+    st = reqs[4].result
+    assert st["settings_answered"] == 4 and st["store"]["builds"] == 1
+
+
+def test_service_multiple_windows_stay_warm():
+    x = gaussian_mixture(300, d=3, k=3, seed=0)
+    svc = ClusterService(store=IndexStore(capacity=2), slots=2)
+    reqs = [ClusterRequest(data=x, eps=0.4, minpts=8,
+                           setting=("minpts", 8 * (1 + i % 4)))
+            for i in range(6)]
+    svc.run(reqs)
+    assert all(r.done for r in reqs)
+    # 3 slot windows, one index build, everything after is warm
+    assert svc.store.stats()["builds"] == 1
+    assert svc.batched_sweeps == 3
+    index, _ = svc.store.get_or_build(x, 0.4, 8)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.labels,
+                                      index.minpts_star(8 * (1 + i % 4)))
