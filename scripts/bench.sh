@@ -55,11 +55,16 @@ check("BENCH_index.json",
                 "vectorized.materialize_s", "vectorized.finex_build_s",
                 "vectorized.end_to_end_build_s", "vectorized.csr_nnz",
                 "identical_outputs",
+                "materialize.materialize_s", "materialize.mode",
+                "materialize.host_bytes_dense",
+                "materialize.host_bytes_compacted",
+                "materialize.transfer_reduction",
                 "build.speedup_end_to_end", "build.speedup_host_pipeline",
-                "build.speedup_finex_build"],
+                "build.speedup_finex_build", "build.speedup_materialize"],
       ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
                   "build.speedup_finex_build", "build.speedup_eps_star",
-                  "build.speedup_minpts_star"])
+                  "build.speedup_minpts_star", "build.speedup_materialize",
+                  "materialize.transfer_reduction"])
 check("BENCH_service.json",
       required=["n", "eps", "minpts", "k", "build_s", "hit_s",
                 "hit_zero_distance_rows", "sweep_s", "sequential_s",

@@ -75,16 +75,37 @@ class FinexIndex:
     def build(cls, data, eps: float, minpts: int, *,
               metric: Metric = "euclidean",
               weights: Optional[np.ndarray] = None,
-              batch_rows: int = 1024, use_pallas: bool = False
+              batch_rows: int = 256, use_pallas: bool = False,
+              mesh=None, shard_cap: int = 1024, shard_row_chunk: int = 2048
               ) -> "FinexIndex":
         """Materialize neighborhoods on device and run the ordering sweep.
 
         ``data``: (n, d) float array for euclidean, or the
         (bits, sizes) pair from ``bitset.pack_sets`` for jaccard.
+
+        ``mesh``: a ``jax.sharding.Mesh`` routes the materialize step
+        through the sharded ε-compacted CSR-emit
+        (``neighbors.distributed.sharded_csr_materialize``) — every
+        device sweeps its (rowblock × colblock) shard and only compacted
+        pairs are gathered; the resulting CSR (and therefore the index)
+        is byte-identical to the single-device build.  ``shard_cap``
+        bounds per-row survivors per corpus shard (the emit refuses to
+        truncate), ``shard_row_chunk`` sizes each device's local tiles.
+        Euclidean only for now; the host ordering sweep is unchanged.
         """
         engine = NeighborEngine(data, metric=metric, weights=weights,
                                 batch_rows=batch_rows, use_pallas=use_pallas)
-        return cls.from_engine(engine, eps, minpts)
+        csr = None
+        if mesh is not None:
+            if metric != "euclidean":
+                raise NotImplementedError(
+                    "mesh= sharded materialize supports euclidean data "
+                    "only (the Jaccard CSR-emit shard is not wired yet)")
+            from repro.neighbors.distributed import sharded_csr_materialize
+            csr = sharded_csr_materialize(np.asarray(data, dtype=np.float32),
+                                          eps, mesh, cap=shard_cap,
+                                          row_chunk=shard_row_chunk)
+        return cls.from_engine(engine, eps, minpts, csr=csr)
 
     @classmethod
     def from_engine(cls, engine: NeighborEngine, eps: float, minpts: int,
@@ -171,7 +192,7 @@ class FinexIndex:
         }
 
     @classmethod
-    def from_arrays(cls, z, data=None, *, batch_rows: int = 1024,
+    def from_arrays(cls, z, data=None, *, batch_rows: int = 256,
                     use_pallas: bool = False,
                     fingerprint_mismatch: str = "error") -> "FinexIndex":
         if fingerprint_mismatch not in ("error", "warn"):

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise import _pad_to
+from repro.kernels.pairwise import _pad_to, emit_tile_slots
 
 
 def _intersect_chunked(a: jax.Array, b: jax.Array, wc: int) -> jax.Array:
@@ -90,6 +90,72 @@ def _jaccard_count_kernel(n_valid, tn, wc, a_ref, sa_ref, b_ref, sb_ref,
     w = w_ref[...].astype(jnp.float32)
     hit = jnp.where((dist <= eps_ref[0, 0]) & (col < n_valid), w, 0.0)
     o_ref[...] += jnp.sum(hit, axis=1, keepdims=True)
+
+
+def _jaccard_emit_kernel(n_valid, tn, wc, cap, cc, a_ref, sa_ref, b_ref,
+                         sb_ref, eps_ref, len_ref, col_ref, dist_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        len_ref[...] = jnp.zeros_like(len_ref)
+        col_ref[...] = jnp.zeros_like(col_ref)
+        dist_ref[...] = jnp.zeros_like(dist_ref)
+
+    inter = _intersect_chunked(a_ref[...], b_ref[...], wc).astype(jnp.float32)
+    union = sa_ref[...].astype(jnp.float32) + sb_ref[...].astype(jnp.float32) - inter
+    dist = jnp.where(union > 0, 1.0 - inter / union, 0.0)       # (TM, TN)
+    col = j * tn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    hit = (dist <= eps_ref[0, 0]) & (col < n_valid)
+    emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "tm", "tn", "wc", "cc", "interpret"))
+def jaccard_eps_emit_pallas(bits_a: jax.Array, size_a: jax.Array,
+                            bits_b: jax.Array, size_b: jax.Array,
+                            eps: jax.Array, cap: int,
+                            tm: int = 128, tn: int = 128, wc: int = 32,
+                            cc: int = 128, interpret: bool = False):
+    """Fused Jaccard ε-threshold + emit → per-row compacted (col, dist).
+
+    The set-data twin of ``pairwise.eps_emit_pallas``: AND+popcount tiles
+    stay in VMEM, only ``(lens, cols (m, cap), dvals (m, cap))`` leave the
+    core.  Semantics match ``ref.eps_compact_tile`` over the dense Jaccard
+    plane (true lens may exceed ``cap``; overflow rows keep the first
+    ``cap`` hits and are re-extracted densely by the caller).
+    """
+    if cap % cc != 0:
+        raise ValueError(f"cap ({cap}) must be a multiple of cc ({cc})")
+    m, W = bits_a.shape
+    n, _ = bits_b.shape
+    ap = _pad_to(bits_a, tm, 0)
+    bp = _pad_to(bits_b, tn, 0)
+    Wp = max(wc, W + (-W) % wc)
+    ap = _pad_to(ap, Wp, 1)
+    bp = _pad_to(bp, Wp, 1)
+    sap = _pad_to(size_a.astype(jnp.int32)[:, None], tm, 0)
+    sbp = _pad_to(size_b.astype(jnp.int32)[None, :], tn, 1)
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    grid = (ap.shape[0] // tm, bp.shape[0] // tn)
+    kernel = functools.partial(_jaccard_emit_kernel, n, tn, wc, cap, cc)
+    lens, cols, dvals = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, Wp), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, Wp), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((ap.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((ap.shape[0], cap), jnp.int32),
+                   jax.ShapeDtypeStruct((ap.shape[0], cap), jnp.float32)],
+        interpret=interpret,
+    )(ap, sap, bp, sbp, eps_arr)
+    return lens[:m, 0], cols[:m], dvals[:m]
 
 
 @functools.partial(jax.jit, static_argnames=("tm", "tn", "wc", "interpret"))

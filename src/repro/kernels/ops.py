@@ -14,9 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.pairwise import pairwise_euclidean_pallas, eps_count_pallas
+from repro.kernels.pairwise import (pairwise_euclidean_pallas,
+                                    eps_count_pallas, eps_emit_pallas)
 from repro.kernels.jaccard import (jaccard_distance_pallas,
-                                   jaccard_eps_count_pallas)
+                                   jaccard_eps_count_pallas,
+                                   jaccard_eps_emit_pallas)
 from repro.kernels.kthdist import dist_histogram_pallas
 
 
@@ -56,6 +58,95 @@ def jaccard_eps_count(bits_a, size_a, bits_b, size_b, eps, weights,
                                         weights, interpret=not _on_tpu())
     d = ref.jaccard_distance(bits_a, size_a, bits_b, size_b)
     return jnp.where(d <= eps, weights[None, :].astype(jnp.float32), 0.0).sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def eps_compact(x, y, eps, cap: int, use_pallas: bool = False):
+    """Fused ε-threshold + emit: per-row compacted (col, dist) slots.
+
+    Returns ``(lens, cols, dvals)`` — see ``ref.eps_compact_tile``.  On
+    TPU this is the capacity-capped fast path of the materialize sweep:
+    the dense distance plane never reaches HBM/host.  True per-row
+    lengths may exceed ``cap``; the caller re-extracts overflow rows
+    from a dense tile (byte-identical fallback).
+    """
+    if use_pallas:
+        return eps_emit_pallas(x, y, eps, cap, interpret=not _on_tpu())
+    d = ref.pairwise_euclidean(x, y)
+    return ref.eps_compact_tile(d, eps, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def jaccard_eps_compact(bits_a, size_a, bits_b, size_b, eps, cap: int,
+                        use_pallas: bool = False):
+    """Fused ε-threshold + emit under Jaccard distance (set data)."""
+    if use_pallas:
+        return jaccard_eps_emit_pallas(bits_a, size_a, bits_b, size_b, eps,
+                                       cap, interpret=not _on_tpu())
+    d = ref.jaccard_distance(bits_a, size_a, bits_b, size_b)
+    return ref.eps_compact_tile(d, eps, cap)
+
+
+# ---------------------------------------------------------------------------
+# Compacted-sweep helpers for backends without a compiled emit kernel
+# (the CPU/XLA path of ``NeighborEngine.materialize``): the device emits a
+# bool hit plane and keeps the expensive intermediates resident; the host
+# turns the plane into flat pair ids (cheap, vectorized); a second jit
+# gathers ONLY the surviving pairs' distances — O(nnz) float traffic
+# instead of the O(m·n) dense plane.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def eps_mask_tile(x, y, sq_thresh):
+    """Fused matmul + squared-distance threshold → (hit, cross, x2, y2).
+
+    ``sq_thresh`` must be the *exact* squared image of the ε-ball (see
+    ``neighbors.engine.sq_threshold``): because float32 sqrt is correctly
+    rounded and monotone, {d² : sqrt(d²) ≤ ε} = {d² ≤ T} for the right T,
+    so the hit plane is bit-identical to thresholding sqrt'd distances —
+    without evaluating m·n square roots.  ``cross``/``x2``/``y2`` stay on
+    device for ``eps_gather_pairs``.
+    """
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    y2 = jnp.sum(yf * yf, axis=-1, keepdims=True).T
+    cross = xf @ yf.T
+    hit = (x2 + y2 - 2.0 * cross) <= sq_thresh
+    return hit, cross, x2[:, 0], y2[0]
+
+
+@jax.jit
+def eps_gather_pairs(cross, x2, y2, flat):
+    """sqrt'd distances of the surviving pairs only.
+
+    ``flat`` are row-major pair ids into the (m, n) tile (padded; excess
+    entries are junk the caller slices off).  Reconstructs
+    ``sqrt(max(x2 + y2 - 2·cross, 0))`` from the *same* cross-product
+    buffer the hit plane was computed from, so the emitted float bits are
+    identical to the dense plane's.
+    """
+    n = cross.shape[1]
+    r = flat // n
+    c = flat - r * n
+    v = cross.reshape(-1)[flat]
+    return jnp.sqrt(jnp.maximum(x2[r] + y2[c] - 2.0 * v, 0.0))
+
+
+@jax.jit
+def jaccard_mask_tile(bits_a, size_a, bits_b, size_b, eps):
+    """Fused Jaccard tile + threshold → (hit, dists); dists stay on device
+    for ``gather_flat`` (the Jaccard plane has no cheap factored form, so
+    the compacted win is skipping the O(m·n) float transfer, not the
+    distance math)."""
+    d = ref.jaccard_distance(bits_a, size_a, bits_b, size_b)
+    return d <= eps, d
+
+
+@jax.jit
+def gather_flat(dists, flat):
+    """Row-major gather of surviving pair distances from a resident tile."""
+    return dists.reshape(-1)[flat]
 
 
 @functools.partial(jax.jit, static_argnames=("nbins", "use_pallas"))

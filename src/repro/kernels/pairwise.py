@@ -6,12 +6,18 @@ term is a single MXU matmul per tile pair:
 
     d²(x, y) = ‖x‖² + ‖y‖² − 2·x·yᵀ
 
-Two kernels:
+Three kernels:
   * ``pairwise_euclidean_pallas`` — emits the distance tile (for CSR
     extraction / verification sub-matrices).
   * ``eps_count_pallas`` — *fused* threshold counting: the (TM × TN) tile
     never leaves VMEM; only per-row weighted neighbor counts |N_ε| are
     written. This is the build-time hot loop (the paper's o.N attribute).
+  * ``eps_emit_pallas`` — *fused* threshold + compaction: surviving
+    (col, dist) pairs are scattered into per-row capacity slots while the
+    distance tile stays in VMEM, so HBM/host traffic for the ε-sweep is
+    O(m·cap) ≈ O(nnz) instead of O(m·n).  The count pass sizes the slots;
+    overflow rows keep their first ``cap`` hits and report a true length
+    > cap so the caller can fall back to a dense tile for just those rows.
 
 Tiles default to 128×128: MXU-aligned on the matmul dims, and the fp32
 working set (TM·d + TN·d + TM·TN floats, d ≤ 4k) stays well under the
@@ -85,6 +91,101 @@ def _count_kernel(n_valid, tn, x_ref, y_ref, eps_ref, w_ref, o_ref):
     w = w_ref[...].astype(jnp.float32)                           # (1, TN)
     hit = jnp.where((dist <= eps_ref[0, 0]) & (col < n_valid), w, 0.0)
     o_ref[...] += jnp.sum(hit, axis=1, keepdims=True)
+
+
+def emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref):
+    """Shared in-kernel slot fill for the fused emit kernels.
+
+    Scatter-free: slots are filled by a chunked one-hot reduction over the
+    tile's column axis (VPU compare + select + sum — the (TM, TN, CC)
+    intermediate stays in VMEM).  Each slot is written by exactly one
+    (tile, column) across the whole corpus sweep, because the per-row
+    cursor advances monotonically, so ``+=`` composes the corpus tiles.
+    The per-row cursor in ``len_ref`` advances by the tile's TRUE hit
+    counts — overflow stays detectable.  Both metric kernels route
+    through this helper so their emit semantics cannot diverge.
+    """
+    cursor = len_ref[...]                                       # (TM, 1)
+    incl = jnp.cumsum(hit.astype(jnp.int32), axis=1)
+    pos = cursor + incl - 1           # target slot of each surviving pair
+
+    def emit_chunk(k, _):
+        base = k * cc
+        slot = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, cc), 2)
+        oh = (pos[:, :, None] == slot) & hit[:, :, None]        # (TM,TN,CC)
+        col_ref[:, pl.ds(base, cc)] += jnp.sum(
+            jnp.where(oh, col[:, :, None], 0), axis=1)
+        dist_ref[:, pl.ds(base, cc)] += jnp.sum(
+            jnp.where(oh, dist[:, :, None], 0.0), axis=1)
+        return 0
+
+    jax.lax.fori_loop(0, cap // cc, emit_chunk, 0)
+    len_ref[...] = cursor + incl[:, -1:]
+
+
+def _emit_kernel(n_valid, tn, cap, cc, x_ref, y_ref, eps_ref,
+                 len_ref, col_ref, dist_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        len_ref[...] = jnp.zeros_like(len_ref)
+        col_ref[...] = jnp.zeros_like(col_ref)
+        dist_ref[...] = jnp.zeros_like(dist_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    dist = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))    # (TM, TN)
+    col = j * tn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    hit = (dist <= eps_ref[0, 0]) & (col < n_valid)
+    emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "tm", "tn", "cc", "interpret"))
+def eps_emit_pallas(x: jax.Array, y: jax.Array, eps: jax.Array, cap: int,
+                    tm: int = 128, tn: int = 128, cc: int = 128,
+                    interpret: bool = False):
+    """Fused ε-threshold + emit: per-row compacted (col, dist) slots.
+
+    Returns ``(lens, cols, dvals)`` exactly as ``ref.eps_compact_tile``
+    over the full distance plane: lens (m,) int32 true hit counts (may
+    exceed ``cap``), cols (m, cap) int32 ascending neighbor ids, dvals
+    (m, cap) float32 distances.  The (TM × TN) distance tile never leaves
+    VMEM; traffic is O(m·d + n·d + m·cap) ≈ O(nnz) for a well-sized
+    capacity, vs O(m·n) for the dense plane.  ``cap`` must be a multiple
+    of the emit chunk ``cc``.  The slot fill is O(TM·TN·cap) VPU work per
+    tile pair — sized for capacity-capped sweeps (cap ≪ n); a sort-based
+    in-tile compaction would trade that for MXU-unfriendly data movement.
+    """
+    if cap % cc != 0:
+        raise ValueError(f"cap ({cap}) must be a multiple of cc ({cc})")
+    m, d = x.shape
+    n, _ = y.shape
+    xp = _pad_to(x.astype(jnp.float32), tm, 0)
+    yp = _pad_to(y.astype(jnp.float32), tn, 0)
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    grid = (xp.shape[0] // tm, yp.shape[0] // tn)
+    kernel = functools.partial(_emit_kernel, n, tn, cap, cc)
+    lens, cols, dvals = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.int32),
+                   jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp, eps_arr)
+    return lens[:m, 0], cols[:m], dvals[:m]
 
 
 @functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))

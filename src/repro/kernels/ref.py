@@ -67,6 +67,45 @@ def eps_count(dists: jax.Array, eps: jax.Array) -> jax.Array:
     return jnp.sum(dists <= eps, axis=-1).astype(jnp.int32)
 
 
+def eps_compact_tile(dists: jax.Array, eps: jax.Array, cap: int,
+                     col_offset=0, num_valid=None):
+    """Compact an ε-thresholded distance tile into per-row (col, dist) slots.
+
+    The oracle for the fused emit kernels (``pairwise.eps_emit_pallas``,
+    ``jaccard.jaccard_eps_emit_pallas``): every surviving pair of the
+    (m, n) tile is packed to the front of a fixed-width slot row, so the
+    caller transfers O(m·cap) instead of the O(m·n) dense plane.
+
+    Returns ``(lens, cols, dvals)``:
+      * ``lens``  (m,) int32 — the TRUE per-row hit count, which may
+        exceed ``cap``.  Overflow rows keep their first ``cap`` hits;
+        callers re-extract such rows from a dense tile (the fallback path
+        in ``NeighborEngine``) or retry with a larger capacity.
+      * ``cols``  (m, cap) int32 — global column ids (``col_offset`` +
+        tile column), ascending within each row; unfilled slots are 0.
+      * ``dvals`` (m, cap) float32 — the matching distances, bit-exact
+        gathers of ``dists``; unfilled slots are 0.
+
+    ``num_valid`` masks padded columns: only global column ids
+    ``< num_valid`` can hit (used by the sharded CSR-emit, where the
+    corpus block is padded to the mesh's "model" extent).
+    """
+    m, n = dists.shape
+    col = col_offset + jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    hit = dists <= eps
+    if num_valid is not None:
+        hit = hit & (col < num_valid)
+    incl = jnp.cumsum(hit.astype(jnp.int32), axis=1)
+    lens = incl[:, -1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+    # hits beyond the capacity land in a dump slot that is sliced away
+    pos = jnp.where(hit & (incl <= cap), incl - 1, cap)
+    cols = jnp.zeros((m, cap + 1), jnp.int32).at[row, pos].set(col)[:, :cap]
+    dvals = jnp.zeros((m, cap + 1), jnp.float32) \
+        .at[row, pos].set(dists.astype(jnp.float32))[:, :cap]
+    return lens, cols, dvals
+
+
 def kth_smallest(dists: jax.Array, k: int) -> jax.Array:
     """k-th smallest value per row (1-based k). (m, n) -> (m,) float32.
 

@@ -77,6 +77,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["n_micro"] = 1
         # AND + popcount + accumulate ≈ 3 VPU ops per packed word pair
         rec["model_flops"] = 3.0 * (1 << 20) ** 2 * 64
+    elif arch == "finex-csr":
+        from repro.neighbors.distributed import finex_csr_dryrun_lowerable
+        fn, args, shardings = finex_csr_dryrun_lowerable(mesh)
+        rec["n_micro"] = 1
+        # distances + the O(n²) threshold/compact epilogue per shard
+        rec["model_flops"] = 2.0 * (1 << 20) ** 2 * 64
     else:
         cfg = get_arch(arch)
         shape = SHAPES[shape_name]
@@ -233,7 +239,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.sweep:
-        cells = [(a, s) for a in list(ARCHS) + ["finex", "finex-jaccard"]
+        cells = [(a, s) for a in list(ARCHS)
+                 + ["finex", "finex-jaccard", "finex-csr"]
                  for s in (["train_4k"] if a.startswith("finex")
                            else list(SHAPES))]
     else:

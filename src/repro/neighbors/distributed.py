@@ -8,12 +8,18 @@ here it fans out over the production mesh with shard_map:
   * each device sweeps its (rowblock × colblock) tile-by-tile (row chunks
     of ``row_chunk`` so the local distance tile stays ~0.5–1 GB),
   * per-row weighted counts and distance histograms are psum-ed along
-    "model" — the only collective; traffic is O(n), never O(n²).
+    "model" — traffic O(n), never O(n²) (``sharded_neighbor_stats``),
+  * the CSR-emit variant ``sharded_csr_emit`` compacts every shard's
+    survivors into per-row capacity slots (``ref.eps_compact_tile``; the
+    fused emit kernels on real TPUs) and all-gathers only those compacted
+    pairs along "model" — O(n·cap) ≈ O(nnz) collective traffic.
 
-The host FINEX build (Algorithm 2/3) streams these statistics; the same
-sweep with a CSR-emit step feeds the ordering at fleet scale. This
-function is the ``--arch finex`` dry-run cell: it must lower + compile on
-the 256-chip and 512-chip meshes like every LM cell.
+The host FINEX build (Algorithm 2/3) streams the statistics, and
+``sharded_csr_materialize`` assembles the gathered slot rows into the
+exact CSR the single-device engine produces — the materialize step behind
+``FinexIndex.build(..., mesh=...)``. These functions are the
+``--arch finex`` / ``--arch finex-csr`` dry-run cells: they must lower +
+compile on the 256-chip and 512-chip meshes like every LM cell.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # jax >= 0.5 top-level API; 0.4.x keeps it in experimental
@@ -30,6 +37,7 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.kernels import ref
+from repro.neighbors.engine import CSRNeighborhoods, fill_slot_rows
 from repro.sharding import dp_axes
 
 
@@ -93,6 +101,140 @@ def finex_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20, d: int = 64,
                                       row_chunk=row_chunk)
 
     return fn, (x, y, w, eps, edges), shardings
+
+
+def sharded_csr_emit(x: jax.Array, y: jax.Array, eps: jax.Array, mesh: Mesh,
+                     cap: int, row_chunk: int = 2048,
+                     num_valid: int | None = None):
+    """Sharded ε-compacted CSR emit: per-shard slots, gathered along "model".
+
+    Each device sweeps its (rowblock × colblock) shard in ``row_chunk``
+    tiles, compacts survivors into ``cap`` per-row slots with global
+    column ids (``ref.eps_compact_tile``; the fused
+    ``kernels.pairwise.eps_emit_pallas`` on real TPUs), and all-gathers
+    only the compacted slots along the corpus axis — O(nq·cap) ≈ O(nnz)
+    collective traffic, never the O(nq·nc) plane.
+
+    x: (nq, d) queries, rows sharded over the DP axes.
+    y: (nc, d) corpus, rows sharded over "model" (``nc`` may be padded;
+       ``num_valid`` masks the padding by global column id).
+    Returns (lens (M, nq) int32, cols (M, nq, cap) int32,
+    dvals (M, nq, cap) float32) with M = the "model" axis size and rows
+    sharded like x — shard m holding each row's survivors from corpus
+    block m, ascending by column id, so concatenating the shard segments
+    in m-order reproduces the single-device row order exactly.
+    """
+    dp = dp_axes(mesh)
+    n_total = int(y.shape[0]) if num_valid is None else int(num_valid)
+
+    def local(xb, yb, eps_s):
+        nc_l = yb.shape[0]
+        offset = jax.lax.axis_index("model") * nc_l
+        rows = xb.shape[0]
+        # pad the local rows up to whole chunks (padding rows sweep zero
+        # vectors and are sliced off below) so any local extent tiles at
+        # ~row_chunk granularity
+        chunk_rows = min(row_chunk, rows)
+        n_chunks = -(-rows // chunk_rows)
+        pad = n_chunks * chunk_rows - rows
+        if pad:
+            xb = jnp.concatenate(
+                [xb, jnp.zeros((pad, xb.shape[-1]), xb.dtype)])
+        xc = xb.reshape(n_chunks, chunk_rows, xb.shape[-1])
+
+        def chunk(xrow):
+            d = ref.pairwise_euclidean(xrow, yb)
+            return ref.eps_compact_tile(d, eps_s, cap, col_offset=offset,
+                                        num_valid=n_total)
+
+        lens, cols, dvals = jax.lax.map(chunk, xc)
+        lens = lens.reshape(-1)[:rows]
+        cols = cols.reshape(-1, cap)[:rows]
+        dvals = dvals.reshape(-1, cap)[:rows]
+        # the only collective: compacted slots, O(rows·cap) per device
+        return (jax.lax.all_gather(lens, "model"),
+                jax.lax.all_gather(cols, "model"),
+                jax.lax.all_gather(dvals, "model"))
+
+    # the outputs ARE replicated over "model" (they are all_gathers along
+    # it), but the static replication checker cannot infer that through
+    # lax.map + the compaction scatter, so it must be disabled
+    # (check_rep= on jax 0.4/0.5, renamed check_vma= later)
+    specs = dict(mesh=mesh,
+                 in_specs=(P(dp, None), P("model", None), P()),
+                 out_specs=(P(None, dp), P(None, dp, None),
+                            P(None, dp, None)))
+    try:
+        fn = _shard_map(local, check_rep=False, **specs)
+    except TypeError:
+        fn = _shard_map(local, check_vma=False, **specs)
+    return fn(x, y, eps)
+
+
+def sharded_csr_materialize(x, eps: float, mesh: Mesh, cap: int = 1024,
+                            row_chunk: int = 2048) -> CSRNeighborhoods:
+    """Multi-device materialize: sharded CSR-emit → host CSR assembly.
+
+    Pads rows/corpus to the mesh extents, runs :func:`sharded_csr_emit`,
+    and stitches the gathered per-shard slot rows into one CSR that is
+    byte-identical to ``NeighborEngine.materialize`` on the same data —
+    the sharded entry into ``FinexIndex.build(..., mesh=...)``.
+
+    ``cap`` bounds each row's survivors *per corpus shard*; the function
+    refuses (rather than silently truncates) when a row overflows it.
+    """
+    x = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+    n, d = x.shape
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    model = int(mesh.shape["model"])
+    nq_pad = n + (-n) % dp_total
+    nc_pad = n + (-n) % model
+    xq = np.zeros((nq_pad, d), dtype=np.float32)
+    xq[:n] = x
+    yc = np.zeros((nc_pad, d), dtype=np.float32)
+    yc[:n] = x
+    with mesh:
+        lens_g, cols_g, dvals_g = sharded_csr_emit(
+            jnp.asarray(xq), jnp.asarray(yc), jnp.float32(eps), mesh,
+            cap=cap, row_chunk=row_chunk, num_valid=n)
+    lens = np.asarray(lens_g)[:, :n].astype(np.int64)     # (M, n)
+    if (lens > cap).any():
+        raise ValueError(
+            f"sharded CSR-emit capacity {cap} overflowed (longest per-shard "
+            f"row has {int(lens.max())} neighbors); re-run with a larger "
+            "cap= — the emit never silently truncates")
+    cols = np.asarray(cols_g)[:, :n]
+    dvals = np.asarray(dvals_g)[:, :n]
+    row_total = lens.sum(axis=0)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(row_total, out=indptr[1:])
+    nnz = int(indptr[-1])
+    # destination of shard m's segment within row r: row base + the
+    # lengths of the lower shards (ascending column blocks)
+    shard_base = indptr[:-1][None, :] + (np.cumsum(lens, axis=0) - lens)
+    indices = np.empty(nnz, dtype=np.int32)
+    dists = np.empty(nnz, dtype=np.float32)
+    fill_slot_rows(indices, dists, shard_base, lens, cols, dvals)
+    return CSRNeighborhoods(indptr=indptr, indices=indices, dists=dists,
+                            eps=float(eps))
+
+
+def finex_csr_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20, d: int = 64,
+                               cap: int = 128, row_chunk: int = 2048):
+    """CSR-emit dry-run cell: the paper workload's sharded materialize."""
+    dp = dp_axes(mesh)
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    y = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    eps = jax.ShapeDtypeStruct((), jnp.float32)
+    shardings = (NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P("model", None)),
+                 NamedSharding(mesh, P()))
+
+    def fn(x, y, eps):
+        return sharded_csr_emit(x, y, eps, mesh, cap=cap,
+                                row_chunk=row_chunk)
+
+    return fn, (x, y, eps), shardings
 
 
 def sharded_jaccard_counts(bits_q, sizes_q, bits_c, sizes_c, w, eps,

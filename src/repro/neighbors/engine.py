@@ -6,15 +6,40 @@ is ε-neighborhood computation. This engine is the TPU adaptation of the
 paper's "materialize all neighborhoods in a separate step in advance"
 strategy (§6, Neighborhood Computations): distances are computed in
 (row-batch × corpus) tiles on the accelerator (MXU matmul expansion for
-Euclidean, VPU popcount for Jaccard over packed bitmaps) and only the
-thresholded CSR neighbor lists and per-object statistics land on the host.
+Euclidean, VPU popcount for Jaccard over packed bitmaps) and the sweep is
+*ε-compacted on device* — only thresholded survivors ever reach the host.
 
-Every host-side step is bulk array work — tile-level 2-D ``np.nonzero``
-for CSR assembly, one matmul per tile for weighted counts, and a single
-segmented lexsort + cumulative-weight ``searchsorted`` over the whole CSR
-for core distances. No per-object Python loops anywhere on the
-materialization path (``repro.core.reference`` keeps the loop originals
-for equivalence testing).
+Two compacted emit paths share the same byte-level contract:
+  * slot emit (``emit="slots"`` / ``use_pallas=True``) — the fused
+    ``ops.eps_compact`` / ``ops.jaccard_eps_compact`` kernels pack each
+    row's surviving (col, dist) pairs into capacity-capped slots inside
+    the kernel, so host traffic is O(rows·cap) ≈ O(nnz); rows that
+    overflow the capacity are re-extracted from a dense tile
+    (byte-identical fallback) and the capacity adapts upward.
+  * mask emit (the CPU/XLA default) — a fused matmul + *squared*-distance
+    threshold emits only the bool hit plane (the exact squared threshold
+    comes from :func:`sq_threshold`, so no m·n square roots are
+    evaluated); the host flat-nonzeros the plane, and a second jit
+    gathers the O(nnz) surviving distances from the still-resident
+    cross-product tile.  Tile k+1's device work overlaps tile k's host
+    extraction (two-deep pipeline).
+
+Every host-side step is bulk array work — ``np.flatnonzero`` over the hit
+plane, a ``searchsorted`` per tile for row lengths, one weighted
+``bincount`` over the finished CSR — and the CSR arrays are filled
+preallocated, chunk by chunk (no double-concatenate peak).  No per-object
+Python loops anywhere on the materialization path
+(``repro.core.reference`` keeps the loop originals for equivalence
+testing).
+
+Bit-pinning contract: emitted distances are gathered from the *same*
+device buffers their hit plane was computed from (the cross-product tile
+on the mask path, the in-kernel tile on the slot path), and the squared
+threshold is exact by construction (:func:`sq_threshold`), so the
+remaining cross-jit assumption is only that the distance *formula*
+compiles to the same per-pair float ops in each wrapper — which
+``tests/test_vectorized_equivalence.py`` pins byte-for-byte against the
+dense ``reference_materialize`` on every emit path and metric.
 
 The host-facing product per object p:
   * count[p]  = |N_ε(p)|                      (the paper's  o.N)
@@ -29,7 +54,6 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Literal, Optional, Tuple
 
 import jax
@@ -40,6 +64,59 @@ from repro.kernels import ops
 
 
 Metric = Literal["euclidean", "jaccard"]
+
+
+def sq_threshold(eps) -> np.float32:
+    """Largest float32 t with sqrt(t) <= eps — the exact squared ε-ball.
+
+    float32 sqrt is correctly rounded and monotone, so
+    {v : sqrt(v) <= ε} = {v : v <= t} for this t, and the compacted sweep
+    can threshold *squared* distances bit-identically to thresholding
+    sqrt'd ones while evaluating sqrt only on the O(nnz) survivors.
+    Found by bisection over the float32 bit lattice (positive floats
+    order like their bit patterns): 31 host-side sqrts, no device work.
+    """
+    e = np.float32(eps)
+    if np.isnan(e) or e < 0:
+        return np.float32(np.nan)          # v <= NaN is never true: no hits
+    if np.isinf(e):
+        return np.float32(np.inf)
+    lo, hi = np.uint32(0), np.uint32(0x7F7FFFFF)     # 0.0 .. max finite
+    while lo < hi:
+        mid = np.uint32((np.uint64(lo) + np.uint64(hi) + np.uint64(1)) // 2)
+        if np.sqrt(mid.view(np.float32), dtype=np.float32) <= e:
+            lo = mid
+        else:
+            hi = np.uint32(mid - 1)
+    return lo.view(np.float32)
+
+
+def fill_slot_rows(indices: np.ndarray, dists: np.ndarray, base: np.ndarray,
+                   lens: np.ndarray, cols: np.ndarray, dvals: np.ndarray
+                   ) -> None:
+    """Scatter per-row slot data into preallocated CSR arrays.
+
+    ``cols``/``dvals`` are (..., cap) slot rows, ``lens`` the matching
+    per-row lengths and ``base`` each row's destination offset; every row
+    claims its first ``min(len, cap)`` slots.  Shared by the single-device
+    slot sweep and the sharded CSR-emit assembly so the two compaction→CSR
+    layouts cannot drift apart.
+    """
+    cap = cols.shape[-1]
+    slot = np.arange(cap, dtype=np.int64)
+    valid = slot < np.minimum(lens, cap)[..., None]
+    dst = (base[..., None] + slot)[valid]
+    indices[dst] = cols[valid]
+    dists[dst] = dvals[valid]
+
+
+def _pow2_pad(size: int, floor: int = 1 << 14) -> int:
+    """Pad gather sizes to powers of two so the surviving-pair gather jit
+    compiles a handful of shapes per dataset instead of one per tile."""
+    p = floor
+    while p < size:
+        p <<= 1
+    return p
 
 
 def dataset_fingerprint(data, metric: Metric = "euclidean",
@@ -119,9 +196,25 @@ class NeighborEngine:
 
     def __init__(self, data, metric: Metric = "euclidean",
                  weights: Optional[np.ndarray] = None,
-                 batch_rows: int = 1024, use_pallas: bool = False):
+                 batch_rows: int = 256, use_pallas: bool = False,
+                 emit: str = "auto", slot_cap: int = 256):
+        if emit not in ("auto", "slots", "mask"):
+            raise ValueError(f"emit must be 'auto', 'slots' or 'mask', "
+                             f"got {emit!r}")
         self.metric: Metric = metric
         self.use_pallas = use_pallas
+        # ε-compacted emit strategy: "slots" = fused per-row capacity
+        # slots (the Pallas kernels on TPU; their jnp oracle otherwise),
+        # "mask" = bool-plane + surviving-pair gather (the fast XLA/CPU
+        # path), "auto" = slots when the Pallas kernels are in play
+        self.emit = emit
+        # slot capacity, snapped to a power of two ≥ 128 (the Pallas emit
+        # kernels require a multiple of their chunk size) and adapted
+        # upward when rows overflow
+        self._slot_cap = 1 << max(7, (int(slot_cap) - 1).bit_length())
+        # instrumentation for benchmarks: what did the last materialize
+        # sweep actually move host<->device, and which path did it take
+        self.last_materialize: dict = {}
         if metric == "euclidean":
             self._x = jnp.asarray(np.asarray(data, dtype=np.float32))
             self.n = int(self._x.shape[0])
@@ -139,6 +232,10 @@ class NeighborEngine:
         # lengths instead of weighted reductions over the CSR
         self.unit_weights = bool(np.all(self.weights == 1))
         self._w_dev = jnp.asarray(self.weights.astype(np.float32))
+        # 256-row sweep tiles: the (B, n) cross-product tile stays
+        # cache-sized on CPU hosts and the two-deep pipeline gets a finer
+        # overlap grain (measurably faster than 1024 at n=20k); the tile
+        # extent never affects the per-pair float bits
         self.batch_rows = batch_rows
         self.distance_rows_computed = 0  # instrumentation: #row-neighborhoods
         self._fingerprint: Optional[str] = None
@@ -204,87 +301,220 @@ class NeighborEngine:
         return np.asarray(d)[:nr, :nc]
 
     # ------------------------------------------------------ neighborhoods
-    def _tile_mask(self, rows: jax.Array, eps: jax.Array):
-        """Tile sweep: distances + threshold mask, both device-resident.
-
-        The threshold runs as an eager device op on the jit'd distance
-        tile (not inside a fresh jit wrapper: re-lowering the distance
-        math would change XLA fusion and perturb float bits vs. the
-        kernel oracles), so the host only consumes the finished (B, n)
-        boolean plane and distance tile — no per-row Python work.
-        """
-        d = self._dist_block(rows)
-        return d, d <= eps
+    def _tile_bounds(self):
+        """Host-side (start, end) row bounds of every sweep tile."""
+        return [(s, min(s + self.batch_rows, self.n))
+                for s in range(0, self.n, self.batch_rows)]
 
     def materialize(self, eps: float) -> Tuple[np.ndarray, CSRNeighborhoods]:
         """Weighted counts |N_ε| and CSR neighbor lists for every object.
 
-        Fully vectorized: each (batch_rows × n) tile is thresholded on
-        device; the host turns the whole 2-D mask into CSR entries with one
-        ``np.nonzero`` (row-major, so per-row neighbor lists stay sorted by
-        object id) and accumulates weighted counts with one matmul per tile.
+        The sweep is ε-compacted on device (see the module docstring):
+        only thresholded survivors — O(nnz) pair payload plus the bool hit
+        plane (mask path) or per-row capacity slots (slot path) — ever
+        cross to the host, instead of the dense (batch_rows × n) float
+        plane.  Per-row neighbor lists come out sorted by object id and
+        the CSR arrays are filled into a single preallocated buffer pair;
+        the result is byte-identical to the dense reference
+        (``repro.core.reference.reference_materialize``).
         """
-        counts = np.zeros(self.n, dtype=np.int64)
-        ind_chunks, dist_chunks = [], []
-        lens = np.zeros(self.n, dtype=np.int64)
-        eps_dev = jnp.float32(eps)
-        for s in range(0, self.n, self.batch_rows):
-            rows = np.arange(s, min(s + self.batch_rows, self.n),
-                             dtype=np.int32)
-            self.distance_rows_computed += len(rows)
-            d, mask = self._tile_mask(jnp.asarray(rows), eps_dev)
-            d, mask = np.asarray(d), np.asarray(mask)
-            # one flat nonzero per tile; row-major order keeps per-row
-            # neighbor lists sorted by object id. Row lengths fall out of
-            # a searchsorted against the flat row boundaries — cheaper
-            # than 2-D nonzero + bincount by ~2×
-            flat = np.flatnonzero(mask)
-            cc = (flat % self.n).astype(np.int32)
-            ind_chunks.append(cc)
-            dist_chunks.append(d.ravel()[flat])
-            lens[rows] = np.diff(np.searchsorted(
-                flat, np.arange(len(rows) + 1, dtype=np.int64) * self.n))
-            if self.unit_weights:
-                counts[rows] = lens[rows]
-            else:
-                # weighted counts over the surviving pairs only: O(nnz),
-                # exact in float64 (weight sums < 2^53), vs. the O(B·n)
-                # non-BLAS bool@int64 matmul this replaces
-                rr = flat // self.n
-                counts[rows] = np.bincount(
-                    rr, weights=self.weights[cc].astype(np.float64),
-                    minlength=len(rows)).astype(np.int64)
+        use_slots = self.emit == "slots" or (self.emit == "auto"
+                                             and self.use_pallas)
+        if use_slots:
+            lens, ind_chunks, dist_chunks = self._sweep_slots(eps)
+        else:
+            lens, ind_chunks, dist_chunks = self._sweep_mask(eps)
+
         indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.cumsum(lens, out=indptr[1:])
-        csr = CSRNeighborhoods(indptr=indptr,
-                               indices=np.concatenate(ind_chunks),
-                               dists=np.concatenate(dist_chunks),
+        nnz = int(indptr[-1])
+        # preallocate once, fill chunk by chunk (chunks are freed as they
+        # are consumed — no concatenate holding chunks + result at peak)
+        indices = np.empty(nnz, dtype=np.int32)
+        dists = np.empty(nnz, dtype=np.float32)
+        off = 0
+        for i in range(len(ind_chunks)):
+            k = ind_chunks[i].size
+            indices[off:off + k] = ind_chunks[i]
+            dists[off:off + k] = dist_chunks[i]
+            ind_chunks[i] = dist_chunks[i] = None
+            off += k
+        csr = CSRNeighborhoods(indptr=indptr, indices=indices, dists=dists,
                                eps=float(eps))
+        if self.unit_weights:
+            counts = lens.copy()
+        else:
+            # weighted counts over the surviving pairs only: O(nnz), exact
+            # in float64 (weight sums < 2^53)
+            counts = np.bincount(
+                csr.row_ids(), weights=self.weights[indices].astype(np.float64),
+                minlength=self.n).astype(np.int64)
         return counts, csr
+
+    def _sweep_mask(self, eps: float):
+        """Compacted sweep, mask path: fused threshold plane + O(nnz)
+        surviving-pair gather, two-deep pipelined (tile k+1's device work
+        overlaps tile k's host extraction)."""
+        n = self.n
+        lens = np.zeros(n, dtype=np.int64)
+        ind_chunks: list = []
+        pending_gather: list = []
+        host_bytes = 0
+        if self.metric == "euclidean":
+            t_sq = jnp.asarray(sq_threshold(eps))
+        else:
+            eps_dev = jnp.float32(eps)
+
+        def dispatch(se):
+            s, e = se
+            if self.metric == "euclidean":
+                return ops.eps_mask_tile(self._x[s:e], self._x, t_sq)
+            return ops.jaccard_mask_tile(self._bits[s:e], self._sizes[s:e],
+                                         self._bits, self._sizes, eps_dev)
+
+        tiles = self._tile_bounds()
+        pend = dispatch(tiles[0]) if tiles else None
+        flat_dtype = np.int32 if self.batch_rows * n < 2 ** 31 else np.int64
+        for i, (s, e) in enumerate(tiles):
+            out = pend
+            if i + 1 < len(tiles):
+                pend = dispatch(tiles[i + 1])      # overlaps the host work
+            self.distance_rows_computed += e - s
+            mask = np.asarray(out[0])
+            flat = np.flatnonzero(mask)
+            lens[s:e] = np.diff(np.searchsorted(
+                flat, np.arange(e - s + 1, dtype=np.int64) * n))
+            pad = _pow2_pad(flat.size)
+            fpad = np.zeros(pad, dtype=flat_dtype)
+            fpad[:flat.size] = flat
+            if self.metric == "euclidean":
+                dv = ops.eps_gather_pairs(out[1], out[2], out[3],
+                                          jnp.asarray(fpad))
+            else:
+                dv = ops.gather_flat(out[1], jnp.asarray(fpad))
+            ind_chunks.append((flat % n).astype(np.int32))
+            pending_gather.append((flat.size, dv))
+            host_bytes += mask.nbytes + fpad.nbytes + pad * 4
+        dist_chunks = [np.asarray(dv)[:k] for k, dv in pending_gather]
+        self.last_materialize = {
+            "mode": "mask", "tiles": len(tiles), "cap": None,
+            "fallback_rows": 0, "host_bytes": host_bytes,
+            "host_bytes_dense": self._dense_sweep_bytes(),
+        }
+        return lens, ind_chunks, dist_chunks
+
+    def _sweep_slots(self, eps: float):
+        """Compacted sweep, slot path: the fused emit kernels pack each
+        row's survivors into ``cap`` slots on device; rows longer than the
+        capacity fall back to a dense tile (byte-identical) and the
+        capacity adapts upward for the rest of the sweep."""
+        n = self.n
+        lens = np.zeros(n, dtype=np.int64)
+        ind_chunks: list = []
+        dist_chunks: list = []
+        host_bytes = 0
+        fallback_rows = 0
+        eps_dev = jnp.float32(eps)
+        for s, e in self._tile_bounds():
+            cap = self._slot_cap
+            self.distance_rows_computed += e - s
+            if self.metric == "euclidean":
+                tl, tc, td = ops.eps_compact(self._x[s:e], self._x, eps_dev,
+                                             cap, use_pallas=self.use_pallas)
+            else:
+                tl, tc, td = ops.jaccard_eps_compact(
+                    self._bits[s:e], self._sizes[s:e], self._bits,
+                    self._sizes, eps_dev, cap, use_pallas=self.use_pallas)
+            tl = np.asarray(tl).astype(np.int64)
+            tc, td = np.asarray(tc), np.asarray(td)
+            host_bytes += tl.nbytes + tc.nbytes + td.nbytes
+            lens[s:e] = tl
+            over = tl > cap
+            if over.any():
+                # dense-tile fallback for the overflow rows only; bucket
+                # the row list to pow2 so the jit'd distance call reuses
+                # compiled shapes across tiles with different overflows
+                fallback_rows += int(over.sum())
+                rows = (s + np.flatnonzero(over)).astype(np.int32)
+                d_over = np.asarray(self._dist_block(
+                    jnp.asarray(self._bucket(rows))))[:len(rows)]
+                host_bytes += d_over.nbytes
+                oflat = np.flatnonzero(d_over <= np.float32(eps))
+                ocols = (oflat % n).astype(np.int32)
+                odists = d_over.ravel()[oflat]
+                osplit = np.searchsorted(
+                    oflat, np.arange(1, len(rows), dtype=np.int64) * n)
+                # grow the capacity for the rest of the sweep
+                while self._slot_cap < int(tl.max()):
+                    self._slot_cap <<= 1
+            # stitch slot rows and fallback rows back into row order
+            # (overflow rows claim zero slots — their whole row comes
+            # from the dense fallback)
+            tile_nnz = int(tl.sum())
+            t_indptr = np.zeros(e - s + 1, dtype=np.int64)
+            np.cumsum(tl, out=t_indptr[1:])
+            t_ind = np.empty(tile_nnz, dtype=np.int32)
+            t_dist = np.empty(tile_nnz, dtype=np.float32)
+            fill_slot_rows(t_ind, t_dist, t_indptr[:-1],
+                           np.where(over, 0, tl), tc, td)
+            if over.any():
+                obase = np.repeat(t_indptr[:-1][over],
+                                  np.diff(np.concatenate(
+                                      ([0], osplit, [len(oflat)]))))
+                odst = obase + np.arange(len(oflat)) - np.repeat(
+                    np.concatenate(([0], osplit)),
+                    np.diff(np.concatenate(([0], osplit, [len(oflat)]))))
+                t_ind[odst] = ocols
+                t_dist[odst] = odists
+            ind_chunks.append(t_ind)
+            dist_chunks.append(t_dist)
+        self.last_materialize = {
+            "mode": "slots", "tiles": len(self._tile_bounds()),
+            "cap": self._slot_cap, "fallback_rows": fallback_rows,
+            "host_bytes": host_bytes,
+            "host_bytes_dense": self._dense_sweep_bytes(),
+        }
+        return lens, ind_chunks, dist_chunks
+
+    def _dense_sweep_bytes(self) -> int:
+        """What the pre-compaction sweep moved to the host: a float32
+        distance plane plus a bool mask per tile."""
+        return self.n * self.n * 5
 
     def materialize_stats(self, eps: float, minpts: int
                           ) -> Tuple[np.ndarray, CSRNeighborhoods, np.ndarray]:
         """One-pass (counts, CSR, core distances) — the build-side product.
 
-        The k-th-distance selection rides on the same tile sweep's CSR via
-        the segmented sort in :meth:`core_distances`; at fleet scale the
-        device-resident ``kernels.kthdist`` bisection replaces it.
+        The k-th-distance selection rides on the same compacted sweep's
+        CSR via the segmented sort in :meth:`core_distances`; at fleet
+        scale the device-resident ``kernels.kthdist`` bisection replaces
+        it.
         """
         counts, csr = self.materialize(eps)
         C = self.core_distances(csr, counts, self.weights, minpts)
         return counts, csr, C
 
     def counts_only(self, eps: float) -> np.ndarray:
-        """Weighted |N_ε(p)| for all p without materializing lists."""
+        """Weighted |N_ε(p)| for all p without materializing lists.
+
+        Routed through the fused ``ops.eps_count`` /
+        ``ops.jaccard_eps_count`` kernels: the distance tile is reduced to
+        per-row counts on device (in VMEM on TPU), so only O(rows) floats
+        cross to the host per tile — no dense plane, no list storage.
+        """
         counts = np.zeros(self.n, dtype=np.int64)
         eps_dev = jnp.float32(eps)
-        for s in range(0, self.n, self.batch_rows):
-            rows = jnp.arange(s, min(s + self.batch_rows, self.n), dtype=jnp.int32)
-            self.distance_rows_computed += int(rows.shape[0])
-            d = self._dist_block(rows)
-            c = (jnp.where(d <= eps_dev, self._w_dev[None, :], 0.0)
-                 .sum(-1).astype(jnp.int64))
-            counts[int(rows[0]):int(rows[-1]) + 1] = np.asarray(c)
+        for s, e in self._tile_bounds():
+            self.distance_rows_computed += e - s
+            if self.metric == "euclidean":
+                c = ops.eps_count(self._x[s:e], self._x, eps_dev,
+                                  self._w_dev, use_pallas=self.use_pallas)
+            else:
+                c = ops.jaccard_eps_count(
+                    self._bits[s:e], self._sizes[s:e], self._bits,
+                    self._sizes, eps_dev, self._w_dev,
+                    use_pallas=self.use_pallas)
+            counts[s:e] = np.asarray(c).astype(np.int64)
         return counts
 
     @staticmethod

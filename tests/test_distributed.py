@@ -101,6 +101,64 @@ def test_distributed_neighbor_stats_match_local():
     assert "DIST_NEIGHBORS_OK" in out
 
 
+def test_sharded_csr_emit_byte_identical():
+    """The sharded ε-compacted CSR-emit must reproduce the single-device
+    engine's CSR byte-for-byte (divisible and padded row/corpus extents),
+    feed FinexIndex.build(mesh=...), and refuse to truncate on overflow."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.neighbors.distributed import sharded_csr_materialize
+        from repro.neighbors.engine import NeighborEngine
+        from repro.launch.mesh import make_host_mesh
+        from repro.core import FinexIndex
+
+        rng = np.random.default_rng(0)
+        mesh = make_host_mesh(2, 4)
+        for n in (512, 500):           # 500 exercises row/corpus padding
+            x = rng.normal(size=(n, 8)).astype(np.float32)
+            csr = sharded_csr_materialize(x, 1.5, mesh, cap=256,
+                                          row_chunk=64)
+            _, csr_ref = NeighborEngine(x).materialize(1.5)
+            np.testing.assert_array_equal(csr.indptr, csr_ref.indptr)
+            np.testing.assert_array_equal(csr.indices, csr_ref.indices)
+            np.testing.assert_array_equal(csr.dists, csr_ref.dists)
+
+        x = rng.normal(size=(500, 8)).astype(np.float32)
+        idx_m = FinexIndex.build(x, eps=1.5, minpts=8, mesh=mesh,
+                                 shard_cap=256, shard_row_chunk=64)
+        idx_s = FinexIndex.build(x, eps=1.5, minpts=8)
+        np.testing.assert_array_equal(idx_m.ordering.order,
+                                      idx_s.ordering.order)
+        np.testing.assert_array_equal(idx_m.ordering.R, idx_s.ordering.R)
+        np.testing.assert_array_equal(idx_m.clustering(), idx_s.clustering())
+
+        try:
+            sharded_csr_materialize(x, 10.0, mesh, cap=64, row_chunk=64)
+            raise SystemExit('overflow was not refused')
+        except ValueError:
+            pass
+        print('CSR_EMIT_OK')
+    """)
+    assert "CSR_EMIT_OK" in out
+
+
+def test_finex_csr_dryrun_cell_compiles():
+    """The finex-csr dry-run cell lowers + compiles on a host mesh."""
+    out = _run("""
+        import jax
+        from repro.neighbors.distributed import finex_csr_dryrun_lowerable
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(2, 4)
+        fn, args, shardings = finex_csr_dryrun_lowerable(
+            mesh, n=1024, d=16, cap=128, row_chunk=64)
+        with mesh:
+            jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+        print('CSR_DRYRUN_OK')
+    """)
+    assert "CSR_DRYRUN_OK" in out
+
+
 def test_sharded_decode_matches_single_device():
     """Flash-decode (seq-sharded cache) == single-device decode."""
     out = _run("""

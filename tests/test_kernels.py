@@ -7,9 +7,11 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.jaccard import (jaccard_distance_pallas,
-                                   jaccard_eps_count_pallas)
+                                   jaccard_eps_count_pallas,
+                                   jaccard_eps_emit_pallas)
 from repro.kernels.kthdist import dist_histogram_pallas, kth_smallest_bisect
-from repro.kernels.pairwise import eps_count_pallas, pairwise_euclidean_pallas
+from repro.kernels.pairwise import (eps_count_pallas, eps_emit_pallas,
+                                    pairwise_euclidean_pallas)
 from repro.neighbors.bitset import pack_sets, unpack_set
 
 RNG = np.random.default_rng(0)
@@ -59,6 +61,52 @@ def test_jaccard_pallas_matches_ref_and_python(m, n, universe):
         A, B = set(map(int, sets_a[i])), set(map(int, sets_b[j]))
         exact = 1.0 - len(A & B) / len(A | B)
         assert abs(got[i, j] - exact) < 1e-6
+
+
+@pytest.mark.parametrize("m,n,d,eps,cap", [(40, 300, 6, 1.2, 128),
+                                           (70, 130, 4, 2.0, 256),
+                                           (130, 257, 5, 0.8, 128)])
+def test_eps_emit_fused_matches_oracle(m, n, d, eps, cap):
+    """Fused threshold+emit == dense-plane compaction oracle, including
+    ragged (non-tile-multiple) shapes."""
+    x = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    gl, gc, gd = eps_emit_pallas(x, y, eps, cap, interpret=True)
+    dm = ref.pairwise_euclidean(x, y)
+    wl, wc, wd = ref.eps_compact_tile(dm, jnp.float32(eps), cap)
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_eps_emit_overflow_keeps_prefix_and_true_length():
+    """Rows longer than the capacity keep their first cap hits and report
+    the TRUE length (> cap) so callers can fall back to a dense tile."""
+    x = jnp.asarray(RNG.normal(size=(16, 3)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(400, 3)), jnp.float32)
+    cap = 128
+    gl, gc, gd = eps_emit_pallas(x, y, 50.0, cap, interpret=True)  # all hit
+    assert (np.asarray(gl) == 400).all()
+    np.testing.assert_array_equal(np.asarray(gc),
+                                  np.tile(np.arange(cap, dtype=np.int32),
+                                          (16, 1)))
+    dm = np.asarray(ref.pairwise_euclidean(x, y))
+    np.testing.assert_allclose(np.asarray(gd), dm[:, :cap], rtol=1e-6)
+
+
+def test_jaccard_emit_fused_matches_oracle():
+    sets = [RNG.choice(200, size=RNG.integers(1, 20), replace=False)
+            for _ in range(60)]
+    bits, sizes = pack_sets(sets, 200)
+    ba, sa = jnp.asarray(bits), jnp.asarray(sizes)
+    gl, gc, gd = jaccard_eps_emit_pallas(ba, sa, ba, sa, 0.8, 128,
+                                         interpret=True)
+    dm = ref.jaccard_distance(ba, sa, ba, sa)
+    wl, wc, wd = ref.eps_compact_tile(dm, jnp.float32(0.8), 128)
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=1e-6)
 
 
 def test_jaccard_count_fused():

@@ -47,14 +47,55 @@ def case(request):
     return engine, eps, minpts
 
 
-def test_materialize_identical(case):
-    engine, eps, _ = case
-    c_ref, csr_ref = reference_materialize(engine, eps)
-    c_new, csr_new = engine.materialize(eps)
+def _assert_csr_identical(ref_pair, new_pair):
+    (c_ref, csr_ref), (c_new, csr_new) = ref_pair, new_pair
     np.testing.assert_array_equal(c_ref, c_new)
     np.testing.assert_array_equal(csr_ref.indptr, csr_new.indptr)
     np.testing.assert_array_equal(csr_ref.indices, csr_new.indices)
     np.testing.assert_array_equal(csr_ref.dists, csr_new.dists)
+
+
+def test_materialize_identical(case):
+    """Default (mask-emit) compacted sweep == dense loop reference."""
+    engine, eps, _ = case
+    _assert_csr_identical(reference_materialize(engine, eps),
+                          engine.materialize(eps))
+    assert engine.last_materialize["mode"] == "mask"
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_materialize_slot_emit_identical(name):
+    """Slot-emit compacted sweep (the fused eps_compact kernels' jnp
+    oracle) pins the same bytes as the dense reference."""
+    ref_engine, eps, _ = CASES[name](seed=3)
+    want = reference_materialize(ref_engine, eps)
+    engine, _, _ = CASES[name](seed=3)
+    engine.emit = "slots"
+    _assert_csr_identical(want, engine.materialize(eps))
+    assert engine.last_materialize["mode"] == "slots"
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_materialize_slot_overflow_falls_back_dense(name):
+    """A capacity too small for the longest rows must route those rows
+    through the dense-tile fallback — and still be byte-identical."""
+    ref_engine, eps, _ = CASES[name](seed=3)
+    want = reference_materialize(ref_engine, eps)
+    engine, _, _ = CASES[name](seed=3)
+    engine.emit = "slots"
+    engine._slot_cap = 8            # below the longest neighborhood
+    _assert_csr_identical(want, engine.materialize(eps))
+    stats = engine.last_materialize
+    assert stats["fallback_rows"] > 0, \
+        "overflow case did not exercise the dense fallback"
+    assert engine._slot_cap > 8     # capacity adapted for later sweeps
+
+
+def test_counts_only_matches_materialize(case):
+    """The fused count kernels agree with the materialized counts."""
+    engine, eps, _ = case
+    np.testing.assert_array_equal(engine.counts_only(eps),
+                                  engine.materialize(eps)[0])
 
 
 def test_core_distances_identical(case):
