@@ -77,7 +77,10 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         eng._dist_block(jnp.asarray(tail)).block_until_ready()
 
     report: dict = {"n": n, "d": d, "eps": eps, "minpts": minpts,
-                    "seed": seed}
+                    "seed": seed,
+                    # which registered metric this whole run swept — the
+                    # schema guard refuses artifacts that do not say
+                    "metric": eng.metric.name}
 
     # the dense device distance sweep the seed path consumes — timed so
     # the host-side speedup can be reported separately from end-to-end
@@ -116,6 +119,7 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
     report["materialize"] = {
         "materialize_s": round(t_mat, 4),
         "mode": stats.get("mode"),
+        "metric": stats.get("metric"),
         "tiles": stats.get("tiles"),
         "fallback_rows": stats.get("fallback_rows"),
         "host_bytes_dense": host_d,

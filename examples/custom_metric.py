@@ -1,0 +1,135 @@
+"""Custom-metric quickstart: cluster STRINGS under a user-defined distance.
+
+FINEX's flexibility claim (paper claim (d)) is that the index is oblivious
+to data types and distance functions — only the neighborhood
+materialization touches raw data. This example exercises that end to end
+with a data type the repo never special-cased: variable-length strings
+under a user-defined per-position mismatch distance, registered at
+runtime with ``register_metric``. No Pallas kernel, no engine changes —
+the registered callable rides the dense fallback path of the metric
+protocol, and every FINEX feature (exact ε*/MinPts*-queries, npz
+round-trip, the serving-side ``IndexStore``) just works.
+
+    PYTHONPATH=src python examples/custom_metric.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import FinexIndex
+from repro.metrics import register_metric, registered_metrics
+from repro.service import IndexStore
+
+MAX_LEN = 16
+
+
+def encode_strings(words, max_len: int = MAX_LEN) -> np.ndarray:
+    """Strings → (n, max_len) uint8 codepoints, zero-padded (0 = no char).
+
+    The encoded matrix is the metric's canonical data — it is what gets
+    fingerprinted, uploaded, and swept tile-by-tile.
+    """
+    out = np.zeros((len(words), max_len), dtype=np.uint8)
+    for i, w in enumerate(words):
+        codes = np.frombuffer(w[:max_len].encode("ascii", "replace"),
+                              dtype=np.uint8)
+        out[i, :len(codes)] = codes
+    return out
+
+
+def string_mismatch(a, b):
+    """Per-position mismatch rate between padded string rows.
+
+    d(r, s) = (#positions where the strings differ, length overhang
+    included) / max(len(r), len(s)) — 0 for identical strings, 1 for
+    fully disjoint ones. Pure jnp on the (m, n, L) broadcast: exactly the
+    kind of small, readable distance a user plugs in.
+    """
+    neq = a[:, None, :] != b[None, :, :]
+    both_pad = (a[:, None, :] == 0) & (b[None, :, :] == 0)
+    diff = (neq & ~both_pad).sum(-1)
+    len_a = (a != 0).sum(-1)[:, None]
+    len_b = (b != 0).sum(-1)[None, :]
+    denom = jnp.maximum(jnp.maximum(len_a, len_b), 1)
+    return (diff / denom).astype(jnp.float32)
+
+
+# one line makes the distance a first-class metric: resolvable by name
+# everywhere the repo says metric=..., fingerprint-aware, npz-persistent
+if "string-mismatch" not in registered_metrics():
+    register_metric("string-mismatch", string_mismatch, dtype=np.uint8)
+
+
+def make_corpus(seed: int = 0):
+    """A few word families plus mutated variants and random noise."""
+    rng = np.random.default_rng(seed)
+    families = ["tokenizer", "clustering", "manifold", "density"]
+    alphabet = np.frombuffer(b"abcdefghijklmnopqrstuvwxyz", dtype=np.uint8)
+    words, truth = [], []
+    for f_id, base in enumerate(families):
+        for _ in range(40):
+            chars = bytearray(base.encode())
+            for pos in rng.choice(len(chars), size=rng.integers(0, 3),
+                                  replace=False):
+                chars[pos] = int(rng.choice(alphabet))
+            words.append(chars.decode())
+            truth.append(f_id)
+    for _ in range(25):                       # unstructured noise strings
+        length = int(rng.integers(5, MAX_LEN))
+        words.append(bytes(rng.choice(alphabet, size=length)).decode())
+        truth.append(-1)
+    order = rng.permutation(len(words))
+    return [words[i] for i in order], np.asarray(truth)[order]
+
+
+def describe(name, labels):
+    n_clusters = labels.max() + 1 if (labels >= 0).any() else 0
+    sizes = sorted((int((labels == k).sum()) for k in range(n_clusters)),
+                   reverse=True)
+    print(f"  {name:24s} clusters={n_clusters:2d} sizes={sizes[:6]} "
+          f"noise={(labels < 0).sum()}")
+
+
+def main():
+    words, truth = make_corpus()
+    data = encode_strings(words)
+
+    index = FinexIndex.build(data, eps=0.45, minpts=5,
+                             metric="string-mismatch")
+    st = index.stats()
+    print(f"built FINEX index over {st['n']} strings "
+          f"(metric={st['metric']}, cores={st['cores']}, "
+          f"csr_nnz={st['csr_nnz']})")
+
+    labels = index.clustering()
+    describe("generating (0.45, 5)", labels)
+    for f_id, word in [(0, "tokenizer"), (1, "clustering"),
+                       (2, "manifold"), (3, "density")]:
+        members = [w for w, l, t in zip(words, labels, truth)
+                   if l >= 0 and t == f_id]
+        print(f"    family {word!r:13s} -> {len(members)} clustered, "
+              f"e.g. {sorted(members)[:3]}")
+
+    print("\ntighter settings are exact queries, same as any metric:")
+    for eps_star in (0.35, 0.25, 0.15):
+        describe(f"eps*={eps_star}", index.eps_star(eps_star))
+    describe("MinPts*=12", index.minpts_star(12))
+
+    # the registry name + params round-trip through the npz archive;
+    # load resolves them back through the registry
+    index.save("/tmp/finex_strings.npz")
+    reloaded = FinexIndex.load("/tmp/finex_strings.npz", data=data)
+    assert np.array_equal(reloaded.minpts_star(12), index.minpts_star(12))
+    print("\nsave/load roundtrip under the custom metric: ok")
+
+    # and the serving layer keys it like any built-in: a warm hit costs
+    # zero distance computations
+    store = IndexStore(capacity=2)
+    store.put(index)
+    _, outcome = store.get_or_build(data, eps=0.45, minpts=5,
+                                    metric="string-mismatch")
+    print(f"IndexStore second lookup: {outcome!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,7 @@ out_dir = sys.argv[1]
 failures = []
 
 
-def check(path, required, ratio_keys):
+def check(path, required, ratio_keys, metric_keys=()):
     with open(f"{out_dir}/{path}") as f:
         r = json.load(f)
     flat = {}
@@ -48,14 +48,22 @@ def check(path, required, ratio_keys):
         if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
             failures.append(f"{path}: ratio {k!r} not a finite positive "
                             f"number (got {v!r})")
+    for k in metric_keys:
+        # each benchmark section must say which registered metric it ran
+        # under — a bare string that the metric registry resolves
+        v = flat.get(k)
+        if not isinstance(v, str) or not v:
+            failures.append(f"{path}: metric {k!r} not a non-empty string "
+                            f"(got {v!r})")
 
 
 check("BENCH_index.json",
-      required=["n", "eps", "minpts", "device_sweep_s",
+      required=["n", "eps", "minpts", "device_sweep_s", "metric",
                 "vectorized.materialize_s", "vectorized.finex_build_s",
                 "vectorized.end_to_end_build_s", "vectorized.csr_nnz",
                 "identical_outputs",
                 "materialize.materialize_s", "materialize.mode",
+                "materialize.metric",
                 "materialize.host_bytes_dense",
                 "materialize.host_bytes_compacted",
                 "materialize.transfer_reduction",
@@ -64,7 +72,8 @@ check("BENCH_index.json",
       ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
                   "build.speedup_finex_build", "build.speedup_eps_star",
                   "build.speedup_minpts_star", "build.speedup_materialize",
-                  "materialize.transfer_reduction"])
+                  "materialize.transfer_reduction"],
+      metric_keys=["metric", "materialize.metric"])
 check("BENCH_service.json",
       required=["n", "eps", "minpts", "k", "build_s", "hit_s",
                 "hit_zero_distance_rows", "sweep_s", "sequential_s",

@@ -22,6 +22,7 @@ PRs (sharded materialize, serving, caching) only have one seam to cut.
 """
 from __future__ import annotations
 
+import json
 import warnings
 from typing import Dict, Optional, Tuple
 
@@ -31,7 +32,8 @@ from repro.core.build import finex_build
 from repro.core.extract import query_clustering
 from repro.core.ordering import FinexOrdering
 from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
-from repro.neighbors.engine import CSRNeighborhoods, Metric, NeighborEngine
+from repro.metrics import Metric, MetricLike, get_metric, registered_metrics
+from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
 
 # the flat-array serialization contract of to_arrays()/from_arrays():
 # every key must be present for reconstruction, so a truncated or
@@ -47,14 +49,17 @@ class FinexIndex:
 
     def __init__(self, ordering: FinexOrdering, csr: CSRNeighborhoods,
                  engine: Optional[NeighborEngine] = None,
-                 metric: Metric = "euclidean",
+                 metric: MetricLike = "euclidean",
                  weights: Optional[np.ndarray] = None,
                  fingerprint: Optional[str] = None):
         self.ordering = ordering
         self.csr = csr
         self.engine = engine
-        self.metric: Metric = (engine.metric if engine is not None
-                               else metric)
+        # the resolved Metric instance travels with the index even when no
+        # engine is attached, so the npz round-trip can persist its
+        # registry name + params and engine re-attach resolves identically
+        self._metric_obj: Metric = (engine.metric if engine is not None
+                                    else get_metric(metric))
         # duplicate weights live on the index itself so an engine-less
         # (lean-loaded) index round-trips them instead of dropping to ones
         if engine is not None:
@@ -70,41 +75,50 @@ class FinexIndex:
         self._data_fingerprint = fingerprint
         self.query_stats = QueryStats()     # cumulative, resettable
 
+    @property
+    def metric(self) -> str:
+        """Registry name of this index's metric (what manifests, npz
+        archives and ``stats()`` record)."""
+        return self._metric_obj.name
+
+    @property
+    def metric_obj(self) -> Metric:
+        """The resolved ``repro.metrics.Metric`` instance."""
+        return self._metric_obj
+
     # ------------------------------------------------------ construction
     @classmethod
     def build(cls, data, eps: float, minpts: int, *,
-              metric: Metric = "euclidean",
+              metric: MetricLike = "euclidean",
               weights: Optional[np.ndarray] = None,
               batch_rows: int = 256, use_pallas: bool = False,
               mesh=None, shard_cap: int = 1024, shard_row_chunk: int = 2048
               ) -> "FinexIndex":
         """Materialize neighborhoods on device and run the ordering sweep.
 
-        ``data``: (n, d) float array for euclidean, or the
-        (bits, sizes) pair from ``bitset.pack_sets`` for jaccard.
+        ``data``: whatever ``metric`` canonicalizes — an (n, d) float
+        array for the vector metrics, the (bits, sizes) pair from
+        ``bitset.pack_sets`` for jaccard.  ``metric`` is a registry name
+        or a ``repro.metrics.Metric`` instance.
 
         ``mesh``: a ``jax.sharding.Mesh`` routes the materialize step
         through the sharded ε-compacted CSR-emit
         (``neighbors.distributed.sharded_csr_materialize``) — every
         device sweeps its (rowblock × colblock) shard and only compacted
         pairs are gathered; the resulting CSR (and therefore the index)
-        is byte-identical to the single-device build.  ``shard_cap``
-        bounds per-row survivors per corpus shard (the emit refuses to
-        truncate), ``shard_row_chunk`` sizes each device's local tiles.
-        Euclidean only for now; the host ordering sweep is unchanged.
+        is byte-identical to the single-device build, for every
+        registered metric.  ``shard_cap`` bounds per-row survivors per
+        corpus shard (the emit refuses to truncate), ``shard_row_chunk``
+        sizes each device's local tiles.
         """
         engine = NeighborEngine(data, metric=metric, weights=weights,
                                 batch_rows=batch_rows, use_pallas=use_pallas)
         csr = None
         if mesh is not None:
-            if metric != "euclidean":
-                raise NotImplementedError(
-                    "mesh= sharded materialize supports euclidean data "
-                    "only (the Jaccard CSR-emit shard is not wired yet)")
             from repro.neighbors.distributed import sharded_csr_materialize
-            csr = sharded_csr_materialize(np.asarray(data, dtype=np.float32),
-                                          eps, mesh, cap=shard_cap,
-                                          row_chunk=shard_row_chunk)
+            csr = sharded_csr_materialize(data, eps, mesh, cap=shard_cap,
+                                          row_chunk=shard_row_chunk,
+                                          metric=engine.metric)
         return cls.from_engine(engine, eps, minpts, csr=csr)
 
     @classmethod
@@ -187,7 +201,12 @@ class FinexIndex:
             "csr_indptr": self.csr.indptr, "csr_indices": self.csr.indices,
             "csr_dists": self.csr.dists,
             "weights": self.weights,
+            # the metric round-trips as registry name + JSON params;
+            # load resolves it back through the registry, so archives
+            # written under a user-registered metric reload exactly
             "metric": np.str_(self.metric),
+            "metric_params": np.str_(
+                json.dumps(self._metric_obj.params, sort_keys=True)),
             "fingerprint": np.str_(self.fingerprint() or ""),
         }
 
@@ -213,7 +232,21 @@ class FinexIndex:
         csr = CSRNeighborhoods(indptr=np.asarray(z["csr_indptr"]),
                                indices=np.asarray(z["csr_indices"]),
                                dists=np.asarray(z["csr_dists"]), eps=eps)
-        metric = str(z["metric"])
+        metric_name = str(z["metric"])
+        params_raw = str(z["metric_params"]) if "metric_params" in z else ""
+        metric_params = json.loads(params_raw) if params_raw else {}
+        try:
+            # resolve through the registry up front: an archive carrying
+            # an unknown (or typo'd) metric name must fail HERE, naming
+            # the registered alternatives — not blow up later inside the
+            # engine or return wrong clusterings
+            metric = get_metric(metric_name, **metric_params)
+        except ValueError as e:
+            raise ValueError(
+                f"index archive was built under metric {metric_name!r}, "
+                "which is not in the metric registry (registered: "
+                f"{list(registered_metrics())}); register_metric() it "
+                "before loading") from e
         weights = np.asarray(z["weights"])
         stored_fp = str(z["fingerprint"]) if "fingerprint" in z else ""
         engine = None

@@ -101,7 +101,7 @@ def eps_mask_tile(x, y, sq_thresh):
     """Fused matmul + squared-distance threshold → (hit, cross, x2, y2).
 
     ``sq_thresh`` must be the *exact* squared image of the ε-ball (see
-    ``neighbors.engine.sq_threshold``): because float32 sqrt is correctly
+    ``repro.metrics.sq_threshold``): because float32 sqrt is correctly
     rounded and monotone, {d² : sqrt(d²) ≤ ε} = {d² ≤ T} for the right T,
     so the hit plane is bit-identical to thresholding sqrt'd distances —
     without evaluating m·n square roots.  ``cross``/``x2``/``y2`` stay on

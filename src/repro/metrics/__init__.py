@@ -1,0 +1,26 @@
+"""Pluggable metric registry — FINEX's "flexible in data types and
+distance functions" claim as a real API surface.
+
+    from repro.metrics import get_metric, register_metric
+
+    m = get_metric("euclidean")              # built-ins: euclidean,
+    m = get_metric("jaccard")                # jaccard, cosine, cityblock
+    register_metric("mine", my_pairwise_fn)  # user distance, dense path
+
+Every ``metric=`` argument in the repo (engine, index, store, service,
+fingerprints, npz round-trips) resolves through :func:`get_metric`, so
+names and ``Metric`` instances are interchangeable everywhere.
+"""
+from repro.metrics.base import (CallableMetric, Metric, MetricLike,
+                                get_metric, register_metric,
+                                registered_metrics)
+from repro.metrics.euclidean import EuclideanMetric, sq_threshold
+from repro.metrics.jaccard import JaccardMetric
+from repro.metrics.extra import CityblockMetric, CosineMetric
+
+__all__ = [
+    "Metric", "MetricLike", "CallableMetric",
+    "get_metric", "register_metric", "registered_metrics",
+    "EuclideanMetric", "JaccardMetric", "CosineMetric", "CityblockMetric",
+    "sq_threshold",
+]

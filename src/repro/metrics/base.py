@@ -1,0 +1,291 @@
+"""The ``Metric`` protocol + registry — the paper's flexibility claim as API.
+
+FINEX's headline claim (d) is flexibility "in terms of applicable data
+types and distance functions": nothing in the index theory (Thm 5.6,
+§5.4) is Euclidean-specific — only the neighborhood *materialization*
+touches raw data. This module owns that seam. A ``Metric`` packages
+everything metric-specific behind a fixed kernel contract, so the engine,
+the sharded CSR-emit, the fingerprint, the npz round-trip and the serving
+layer never branch on metric names again:
+
+  * ``canonicalize(data)``  — raw user data → the tuple of row-aligned
+    host arrays that defines the dataset identity (hashed byte-for-byte
+    by ``dataset_fingerprint``) and is uploaded by ``device_state``.
+  * ``pairwise(q, c)``      — the distance formula as pure traceable jnp
+    (the oracle; also what runs inside ``shard_map`` on the mesh).
+  * ``tile`` / ``mask_threshold`` + ``mask_tile`` + ``gather_pairs`` /
+    ``eps_count`` / ``eps_compact`` — the engine's kernel contract: a
+    dense tile, the fused bool-plane + O(nnz) pair gather, the fused
+    threshold-count, and the fused threshold+emit capacity slots. The
+    base class derives all of them from ``pairwise`` (jit'd, byte-exact
+    vs the dense plane), so a user metric only needs the formula;
+    built-ins override with their Pallas kernels.
+
+Resolution goes through a registry: ``get_metric("euclidean")``,
+``get_metric("jaccard")`` etc. keep the historical string API working
+(every ``metric=`` argument in the repo accepts a name *or* a ``Metric``
+instance), and ``register_metric`` admits user-defined distance callables
+(dense fallback path — no Pallas kernel required).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+#: device-side dataset state: one row-aligned array tuple (axis 0 = objects)
+State = Tuple[jax.Array, ...]
+
+
+class Metric:
+    """Base metric: distance semantics + the engine's kernel contract.
+
+    Subclasses must set ``name`` and implement ``canonicalize`` and
+    ``pairwise``; everything else has byte-exact derived defaults.
+    ``params`` must be JSON-serializable — it travels through npz archives
+    and is part of the dataset identity whenever non-empty.
+    """
+
+    name: str = "?"
+
+    def __init__(self, **params):
+        self.params: Dict[str, Any] = dict(params)
+        self._jit_cache: Dict[Any, Callable] = {}
+
+    # ------------------------------------------------------------- identity
+    @property
+    def spec(self) -> str:
+        """Stable identity token: registry name + canonical params."""
+        if not self.params:
+            return self.name
+        return f"{self.name}{json.dumps(self.params, sort_keys=True)}"
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+    def fingerprint_head(self, canon: Tuple[np.ndarray, ...]) -> str:
+        """Prefix of ``dataset_fingerprint``: metric + shape + dtype (the
+        historical euclidean/jaccard format, byte-for-byte)."""
+        a = canon[0]
+        shape = "x".join(map(str, a.shape))
+        return f"{self.spec}:{shape}:{a.dtype}"
+
+    def fingerprint_update(self, hasher, canon: Tuple[np.ndarray, ...]) -> None:
+        """Feed the canonical arrays into the content hash."""
+        for a in canon:
+            hasher.update(np.ascontiguousarray(a).tobytes())
+
+    # ------------------------------------------------------- data plumbing
+    def canonicalize(self, data) -> Tuple[np.ndarray, ...]:
+        """Raw user data → tuple of row-aligned host arrays (idempotent:
+        feeding the result back must return equal arrays)."""
+        raise NotImplementedError
+
+    def device_state(self, canon: Tuple[np.ndarray, ...]) -> State:
+        return tuple(jnp.asarray(a) for a in canon)
+
+    @staticmethod
+    def take(state: State, rows) -> State:
+        """Row subset of a dataset state (same tuple structure)."""
+        return tuple(a[rows] for a in state)
+
+    @classmethod
+    def synthesize(cls, rng: np.random.Generator, n: int, d: int = 8):
+        """A small random dataset this metric accepts — test/bench support
+        so contract suites can auto-parametrize over the registry."""
+        return rng.normal(size=(n, d)).astype(np.float32)
+
+    # ---------------------------------------------------- distance kernels
+    def pairwise(self, q: State, c: State) -> jax.Array:
+        """(m, n) float32 distances between the rows of two states — pure
+        traceable jnp; the semantic oracle every other kernel must match,
+        and the formula the sharded CSR-emit runs inside ``shard_map``."""
+        raise NotImplementedError
+
+    def _jit(self, key, make: Callable[[], Callable]) -> Callable:
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = self._jit_cache[key] = make()
+        return fn
+
+    def tile(self, q: State, c: State, use_pallas: bool = False) -> jax.Array:
+        """Dense distance tile (jit'd ``pairwise``). ``use_pallas`` is a
+        hint honored by metrics that carry a compiled kernel."""
+        return self._jit("tile", lambda: jax.jit(self.pairwise))(q, c)
+
+    def mask_threshold(self, eps: float) -> jax.Array:
+        """Per-sweep device threshold for ``mask_tile``. Metrics with an
+        exact monotone transform (e.g. euclidean's squared-distance
+        lattice bisection) return the transformed threshold here."""
+        return jnp.float32(eps)
+
+    def mask_tile(self, q: State, c: State, thresh: jax.Array
+                  ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+        """Fused threshold plane: (bool hit tile, resident payload). Only
+        the hit plane crosses to the host; ``gather_pairs`` later pulls
+        the O(nnz) surviving distances from the payload."""
+        def make():
+            def f(q, c, t):
+                d = self.pairwise(q, c)
+                return d <= t, (d,)
+            return jax.jit(f)
+        return self._jit("mask", make)(q, c, thresh)
+
+    def gather_pairs(self, payload: Tuple[jax.Array, ...], flat: jax.Array
+                     ) -> jax.Array:
+        """Distances of the surviving row-major pair ids ``flat`` — bit
+        exact gathers of the same buffers the hit plane came from."""
+        def make():
+            return jax.jit(lambda p, f: p[0].reshape(-1)[f])
+        return self._jit("gather", make)(payload, flat)
+
+    def eps_count(self, q: State, c: State, eps, weights: jax.Array,
+                  use_pallas: bool = False) -> jax.Array:
+        """Fused weighted |N_ε| per query row (no dense plane to host)."""
+        def make():
+            def f(q, c, e, w):
+                d = self.pairwise(q, c)
+                return jnp.where(d <= e, w[None, :].astype(jnp.float32),
+                                 0.0).sum(-1)
+            return jax.jit(f)
+        return self._jit("count", make)(q, c, eps, weights)
+
+    def eps_compact(self, q: State, c: State, eps, cap: int,
+                    use_pallas: bool = False):
+        """Fused threshold + emit into per-row capacity slots — the slot
+        path of the materialize sweep (``ref.eps_compact_tile`` contract:
+        true lengths may exceed ``cap`` so overflow stays detectable)."""
+        def make():
+            def f(q, c, e):
+                return ref.eps_compact_tile(self.pairwise(q, c), e, cap)
+            return jax.jit(f)
+        return self._jit(("compact", cap), make)(q, c, eps)
+
+
+class CallableMetric(Metric):
+    """User-defined distance callable behind the full kernel contract.
+
+    ``pairwise_fn(q_arrays..., c_arrays...)`` gets the unpacked state
+    tuples and must return the (m, n) float32 distance tile in pure jnp
+    ops (it is jit'd, swept tile-by-tile, and run inside ``shard_map`` on
+    meshes). The dense fallback paths do the rest — no Pallas required.
+    """
+
+    def __init__(self, name: str, pairwise_fn: Callable, *,
+                 dtype=np.float32, arity: int = 1,
+                 synthesize: Optional[Callable] = None, **params):
+        super().__init__(**params)
+        self.name = name
+        self._fn = pairwise_fn
+        self._dtypes = (np.dtype(dtype),) if arity == 1 else tuple(
+            np.dtype(t) for t in dtype)
+        self._synthesize = synthesize
+
+    def canonicalize(self, data):
+        arity = len(self._dtypes)
+        parts = (data,) if arity == 1 else tuple(data)
+        if arity == 1 and isinstance(data, tuple) and len(data) == 1:
+            parts = data
+        return tuple(np.ascontiguousarray(np.asarray(p, dtype=t))
+                     for p, t in zip(parts, self._dtypes))
+
+    def pairwise(self, q, c):
+        return self._fn(*q, *c)
+
+    def synthesize(self, rng, n, d=8):  # type: ignore[override]
+        if self._synthesize is not None:
+            return self._synthesize(rng, n)
+        return rng.normal(size=(n, d)).astype(self._dtypes[0]) \
+            if len(self._dtypes) == 1 else super().synthesize(rng, n, d)
+
+
+# --------------------------------------------------------------- registry
+MetricLike = Union[str, Metric]
+
+_REGISTRY: Dict[str, Callable[..., Metric]] = {}
+# default-params resolutions share one instance per name: the derived
+# kernel jit caches live on the instance, so handing every engine a
+# fresh instance would recompile the tile/mask/count/compact kernels
+# per build instead of once per process
+_DEFAULT_INSTANCES: Dict[str, Metric] = {}
+
+
+def register_metric(name_or_metric, pairwise_fn: Optional[Callable] = None,
+                    *, overwrite: bool = False, **kw):
+    """Admit a metric into the registry.
+
+    Three forms:
+      * ``register_metric(MetricSubclass)`` — class with a ``name``
+      * ``register_metric("name", factory)`` — explicit factory/class
+      * ``register_metric("name", distance_callable, dtype=..., ...)`` —
+        a plain jnp distance function, wrapped in ``CallableMetric``
+        (the no-Pallas dense path); extra kwargs become default params.
+
+    Returns whatever was registered so it can be used as a decorator.
+    """
+    if isinstance(name_or_metric, type) and issubclass(name_or_metric, Metric):
+        cls = name_or_metric
+        _register(cls.name, cls, overwrite)
+        return cls
+    name = str(name_or_metric)
+    if pairwise_fn is None:
+        raise TypeError("register_metric(name, ...) needs a Metric factory "
+                        "or a pairwise distance callable")
+    if isinstance(pairwise_fn, type) and issubclass(pairwise_fn, Metric):
+        _register(name, pairwise_fn, overwrite)
+        return pairwise_fn
+
+    def factory(**params):
+        merged = dict(kw)
+        merged.update(params)
+        return CallableMetric(name, pairwise_fn, **merged)
+
+    _register(name, factory, overwrite)
+    return pairwise_fn
+
+
+def _register(name: str, factory, overwrite: bool) -> None:
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"metric {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _REGISTRY[name] = factory
+    _DEFAULT_INSTANCES.pop(name, None)
+
+
+def registered_metrics() -> Tuple[str, ...]:
+    """Sorted names of every registered metric."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_metric(spec: MetricLike, **params) -> Metric:
+    """Resolve a metric name (or pass an instance through).
+
+    This is the deprecation shim for the historical string API: every
+    ``metric="euclidean"`` / ``"jaccard"`` call in the repo lands here.
+    Unknown names fail with the registered alternatives spelled out.
+    """
+    if isinstance(spec, Metric):
+        if params:
+            raise TypeError("params are only accepted with a metric *name*; "
+                            f"got an instance {spec!r} plus {params}")
+        return spec
+    if isinstance(spec, str):
+        factory = _REGISTRY.get(spec)
+        if factory is None:
+            raise ValueError(
+                f"unknown metric {spec!r}; registered metrics are "
+                f"{list(registered_metrics())} (register_metric() adds "
+                "user-defined distance functions)")
+        if params:
+            return factory(**params)
+        m = _DEFAULT_INSTANCES.get(spec)
+        if m is None:
+            m = _DEFAULT_INSTANCES[spec] = factory()
+        return m
+    raise TypeError(f"metric must be a name or a Metric instance, got "
+                    f"{type(spec).__name__}")

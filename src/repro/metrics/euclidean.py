@@ -1,0 +1,70 @@
+"""Euclidean metric: MXU matmul expansion + exact squared-threshold sweep."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.metrics.base import Metric, register_metric
+
+
+def sq_threshold(eps) -> np.float32:
+    """Largest float32 t with sqrt(t) <= eps — the exact squared ε-ball.
+
+    float32 sqrt is correctly rounded and monotone, so
+    {v : sqrt(v) <= ε} = {v : v <= t} for this t, and the compacted sweep
+    can threshold *squared* distances bit-identically to thresholding
+    sqrt'd ones while evaluating sqrt only on the O(nnz) survivors.
+    Found by bisection over the float32 bit lattice (positive floats
+    order like their bit patterns): 31 host-side sqrts, no device work.
+    """
+    e = np.float32(eps)
+    if np.isnan(e) or e < 0:
+        return np.float32(np.nan)          # v <= NaN is never true: no hits
+    if np.isinf(e):
+        return np.float32(np.inf)
+    lo, hi = np.uint32(0), np.uint32(0x7F7FFFFF)     # 0.0 .. max finite
+    while lo < hi:
+        mid = np.uint32((np.uint64(lo) + np.uint64(hi) + np.uint64(1)) // 2)
+        if np.sqrt(mid.view(np.float32), dtype=np.float32) <= e:
+            lo = mid
+        else:
+            hi = np.uint32(mid - 1)
+    return lo.view(np.float32)
+
+
+@register_metric
+class EuclideanMetric(Metric):
+    """(n, d) float32 vectors under L2; Pallas kernels on TPU, the fused
+    squared-threshold mask sweep on XLA/CPU."""
+
+    name = "euclidean"
+
+    def canonicalize(self, data):
+        if isinstance(data, tuple) and len(data) == 1:
+            data = data[0]
+        return (np.ascontiguousarray(np.asarray(data, dtype=np.float32)),)
+
+    def pairwise(self, q, c):
+        return ref.pairwise_euclidean(q[0], c[0])
+
+    def tile(self, q, c, use_pallas: bool = False):
+        return ops.pairwise_euclidean(q[0], c[0], use_pallas=use_pallas)
+
+    def mask_threshold(self, eps: float):
+        # exact squared image of the ε-ball: the hit plane below is bit
+        # identical to thresholding sqrt'd distances without m·n sqrts
+        return jnp.asarray(sq_threshold(eps))
+
+    def mask_tile(self, q, c, thresh):
+        hit, cross, x2, y2 = ops.eps_mask_tile(q[0], c[0], thresh)
+        return hit, (cross, x2, y2)
+
+    def gather_pairs(self, payload, flat):
+        return ops.eps_gather_pairs(*payload, flat)
+
+    def eps_count(self, q, c, eps, weights, use_pallas: bool = False):
+        return ops.eps_count(q[0], c[0], eps, weights, use_pallas=use_pallas)
+
+    def eps_compact(self, q, c, eps, cap: int, use_pallas: bool = False):
+        return ops.eps_compact(q[0], c[0], eps, cap, use_pallas=use_pallas)

@@ -1,0 +1,52 @@
+"""Jaccard metric over packed-bitmap set data (process-mining workloads)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.metrics.base import Metric, register_metric
+
+
+@register_metric
+class JaccardMetric(Metric):
+    """Sets as (bits (n, W) uint32, sizes (n,) int32) from
+    ``neighbors.bitset.pack_sets``; |r ∩ s| is AND + popcount on the VPU.
+    The two-array state (bitmaps + cardinalities) lives entirely behind
+    the protocol — callers never unpack it."""
+
+    name = "jaccard"
+
+    def canonicalize(self, data):
+        bits, sizes = data
+        return (np.ascontiguousarray(np.asarray(bits, dtype=np.uint32)),
+                np.ascontiguousarray(np.asarray(sizes, dtype=np.int32)))
+
+    def pairwise(self, q, c):
+        return ref.jaccard_distance(q[0], q[1], c[0], c[1])
+
+    def tile(self, q, c, use_pallas: bool = False):
+        return ops.jaccard_distance(q[0], q[1], c[0], c[1],
+                                    use_pallas=use_pallas)
+
+    def mask_tile(self, q, c, thresh):
+        hit, d = ops.jaccard_mask_tile(q[0], q[1], c[0], c[1], thresh)
+        return hit, (d,)
+
+    def gather_pairs(self, payload, flat):
+        return ops.gather_flat(payload[0], flat)
+
+    def eps_count(self, q, c, eps, weights, use_pallas: bool = False):
+        return ops.jaccard_eps_count(q[0], q[1], c[0], c[1], eps, weights,
+                                     use_pallas=use_pallas)
+
+    def eps_compact(self, q, c, eps, cap: int, use_pallas: bool = False):
+        return ops.jaccard_eps_compact(q[0], q[1], c[0], c[1], eps, cap,
+                                       use_pallas=use_pallas)
+
+    @classmethod
+    def synthesize(cls, rng, n, d=8):
+        from repro.neighbors.bitset import pack_sets
+        universe = 64
+        sets = [rng.choice(universe, size=rng.integers(1, 12), replace=False)
+                for _ in range(n)]
+        return pack_sets(sets, universe=universe)

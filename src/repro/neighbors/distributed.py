@@ -37,8 +37,27 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.kernels import ref
+from repro.metrics import MetricLike, get_metric
 from repro.neighbors.engine import CSRNeighborhoods, fill_slot_rows
 from repro.sharding import dp_axes
+
+
+def _row_spec(a, axis_name):
+    """PartitionSpec sharding axis 0 of ``a`` over ``axis_name`` —
+    dataset-state arrays are row-aligned along axis 0 whatever their
+    rank (vectors, packed bitmaps, size columns)."""
+    return P(axis_name, *([None] * (a.ndim - 1)))
+
+
+def _pad_rows(parts, n_pad):
+    """Zero-pad every state array to ``n_pad`` rows (host side)."""
+    out = []
+    for a in parts:
+        a = np.ascontiguousarray(np.asarray(a))
+        padded = np.zeros((n_pad,) + a.shape[1:], dtype=a.dtype)
+        padded[:a.shape[0]] = a
+        out.append(padded)
+    return tuple(out)
 
 
 def sharded_neighbor_stats(x: jax.Array, y: jax.Array, w: jax.Array,
@@ -103,51 +122,63 @@ def finex_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20, d: int = 64,
     return fn, (x, y, w, eps, edges), shardings
 
 
-def sharded_csr_emit(x: jax.Array, y: jax.Array, eps: jax.Array, mesh: Mesh,
+def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
                      cap: int, row_chunk: int = 2048,
-                     num_valid: int | None = None):
+                     num_valid: int | None = None,
+                     metric: MetricLike = "euclidean"):
     """Sharded ε-compacted CSR emit: per-shard slots, gathered along "model".
 
     Each device sweeps its (rowblock × colblock) shard in ``row_chunk``
     tiles, compacts survivors into ``cap`` per-row slots with global
-    column ids (``ref.eps_compact_tile``; the fused
-    ``kernels.pairwise.eps_emit_pallas`` on real TPUs), and all-gathers
-    only the compacted slots along the corpus axis — O(nq·cap) ≈ O(nnz)
-    collective traffic, never the O(nq·nc) plane.
+    column ids (``ref.eps_compact_tile``; the fused emit kernels on real
+    TPUs), and all-gathers only the compacted slots along the corpus
+    axis — O(nq·cap) ≈ O(nnz) collective traffic, never the O(nq·nc)
+    plane.  The distance tile comes from ``metric.pairwise`` — the same
+    traceable formula every registered metric already supplies — so the
+    emit is metric-oblivious.
 
-    x: (nq, d) queries, rows sharded over the DP axes.
-    y: (nc, d) corpus, rows sharded over "model" (``nc`` may be padded;
-       ``num_valid`` masks the padding by global column id).
+    q: query dataset state — one row-aligned array, or a tuple of them
+       (e.g. (bits, sizes) for jaccard); rows sharded over the DP axes.
+    c: corpus state, rows sharded over "model" (the corpus extent may be
+       padded; ``num_valid`` masks the padding by global column id —
+       padding *content* never matters, only the id mask).
     Returns (lens (M, nq) int32, cols (M, nq, cap) int32,
     dvals (M, nq, cap) float32) with M = the "model" axis size and rows
-    sharded like x — shard m holding each row's survivors from corpus
+    sharded like q — shard m holding each row's survivors from corpus
     block m, ascending by column id, so concatenating the shard segments
     in m-order reproduces the single-device row order exactly.
     """
+    m = get_metric(metric)
     dp = dp_axes(mesh)
-    n_total = int(y.shape[0]) if num_valid is None else int(num_valid)
+    q_parts = q if isinstance(q, tuple) else (q,)
+    c_parts = c if isinstance(c, tuple) else (c,)
+    nq_parts = len(q_parts)
+    n_total = int(c_parts[0].shape[0]) if num_valid is None else int(num_valid)
 
-    def local(xb, yb, eps_s):
-        nc_l = yb.shape[0]
+    def local(eps_s, *parts):
+        qb = parts[:nq_parts]
+        cb = parts[nq_parts:]
+        nc_l = cb[0].shape[0]
         offset = jax.lax.axis_index("model") * nc_l
-        rows = xb.shape[0]
+        rows = qb[0].shape[0]
         # pad the local rows up to whole chunks (padding rows sweep zero
-        # vectors and are sliced off below) so any local extent tiles at
+        # state and are sliced off below) so any local extent tiles at
         # ~row_chunk granularity
         chunk_rows = min(row_chunk, rows)
         n_chunks = -(-rows // chunk_rows)
         pad = n_chunks * chunk_rows - rows
         if pad:
-            xb = jnp.concatenate(
-                [xb, jnp.zeros((pad, xb.shape[-1]), xb.dtype)])
-        xc = xb.reshape(n_chunks, chunk_rows, xb.shape[-1])
+            qb = tuple(jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]) for a in qb)
+        qc = tuple(a.reshape((n_chunks, chunk_rows) + a.shape[1:])
+                   for a in qb)
 
-        def chunk(xrow):
-            d = ref.pairwise_euclidean(xrow, yb)
+        def chunk(qrow):
+            d = m.pairwise(qrow, cb)
             return ref.eps_compact_tile(d, eps_s, cap, col_offset=offset,
                                         num_valid=n_total)
 
-        lens, cols, dvals = jax.lax.map(chunk, xc)
+        lens, cols, dvals = jax.lax.map(chunk, qc)
         lens = lens.reshape(-1)[:rows]
         cols = cols.reshape(-1, cap)[:rows]
         dvals = dvals.reshape(-1, cap)[:rows]
@@ -161,42 +192,47 @@ def sharded_csr_emit(x: jax.Array, y: jax.Array, eps: jax.Array, mesh: Mesh,
     # lax.map + the compaction scatter, so it must be disabled
     # (check_rep= on jax 0.4/0.5, renamed check_vma= later)
     specs = dict(mesh=mesh,
-                 in_specs=(P(dp, None), P("model", None), P()),
+                 in_specs=(P(),
+                           *[_row_spec(a, dp) for a in q_parts],
+                           *[_row_spec(a, "model") for a in c_parts]),
                  out_specs=(P(None, dp), P(None, dp, None),
                             P(None, dp, None)))
     try:
         fn = _shard_map(local, check_rep=False, **specs)
     except TypeError:
         fn = _shard_map(local, check_vma=False, **specs)
-    return fn(x, y, eps)
+    return fn(eps, *q_parts, *c_parts)
 
 
-def sharded_csr_materialize(x, eps: float, mesh: Mesh, cap: int = 1024,
-                            row_chunk: int = 2048) -> CSRNeighborhoods:
+def sharded_csr_materialize(data, eps: float, mesh: Mesh, cap: int = 1024,
+                            row_chunk: int = 2048,
+                            metric: MetricLike = "euclidean"
+                            ) -> CSRNeighborhoods:
     """Multi-device materialize: sharded CSR-emit → host CSR assembly.
 
-    Pads rows/corpus to the mesh extents, runs :func:`sharded_csr_emit`,
-    and stitches the gathered per-shard slot rows into one CSR that is
-    byte-identical to ``NeighborEngine.materialize`` on the same data —
-    the sharded entry into ``FinexIndex.build(..., mesh=...)``.
+    Canonicalizes ``data`` through the metric, pads rows/corpus to the
+    mesh extents, runs :func:`sharded_csr_emit`, and stitches the
+    gathered per-shard slot rows into one CSR that is byte-identical to
+    ``NeighborEngine.materialize`` on the same data — the sharded entry
+    into ``FinexIndex.build(..., mesh=...)``, for every registered
+    metric.
 
     ``cap`` bounds each row's survivors *per corpus shard*; the function
     refuses (rather than silently truncates) when a row overflows it.
     """
-    x = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
-    n, d = x.shape
+    m = get_metric(metric)
+    canon = m.canonicalize(data)
+    n = int(canon[0].shape[0])
     dp_total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
     model = int(mesh.shape["model"])
     nq_pad = n + (-n) % dp_total
     nc_pad = n + (-n) % model
-    xq = np.zeros((nq_pad, d), dtype=np.float32)
-    xq[:n] = x
-    yc = np.zeros((nc_pad, d), dtype=np.float32)
-    yc[:n] = x
+    xq = tuple(jnp.asarray(a) for a in _pad_rows(canon, nq_pad))
+    yc = tuple(jnp.asarray(a) for a in _pad_rows(canon, nc_pad))
     with mesh:
         lens_g, cols_g, dvals_g = sharded_csr_emit(
-            jnp.asarray(xq), jnp.asarray(yc), jnp.float32(eps), mesh,
-            cap=cap, row_chunk=row_chunk, num_valid=n)
+            xq, yc, jnp.float32(eps), mesh,
+            cap=cap, row_chunk=row_chunk, num_valid=n, metric=m)
     lens = np.asarray(lens_g)[:, :n].astype(np.int64)     # (M, n)
     if (lens > cap).any():
         raise ValueError(

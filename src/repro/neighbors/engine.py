@@ -5,24 +5,29 @@ FINEX-build and the residual verification inside ε*/MinPts*-queries alike —
 is ε-neighborhood computation. This engine is the TPU adaptation of the
 paper's "materialize all neighborhoods in a separate step in advance"
 strategy (§6, Neighborhood Computations): distances are computed in
-(row-batch × corpus) tiles on the accelerator (MXU matmul expansion for
-Euclidean, VPU popcount for Jaccard over packed bitmaps) and the sweep is
+(row-batch × corpus) tiles on the accelerator and the sweep is
 *ε-compacted on device* — only thresholded survivors ever reach the host.
 
+Everything metric-specific lives behind the ``repro.metrics`` protocol:
+the engine holds one opaque row-aligned dataset state (float vectors for
+euclidean/cosine/cityblock, packed bitmaps + sizes for Jaccard, whatever
+a user-registered metric canonicalizes to) and dispatches every kernel —
+dense tile, fused mask sweep, fused count, fused slot emit — through the
+``Metric`` instance. The engine itself never branches on metric names.
+
 Two compacted emit paths share the same byte-level contract:
-  * slot emit (``emit="slots"`` / ``use_pallas=True``) — the fused
-    ``ops.eps_compact`` / ``ops.jaccard_eps_compact`` kernels pack each
-    row's surviving (col, dist) pairs into capacity-capped slots inside
-    the kernel, so host traffic is O(rows·cap) ≈ O(nnz); rows that
-    overflow the capacity are re-extracted from a dense tile
-    (byte-identical fallback) and the capacity adapts upward.
-  * mask emit (the CPU/XLA default) — a fused matmul + *squared*-distance
-    threshold emits only the bool hit plane (the exact squared threshold
-    comes from :func:`sq_threshold`, so no m·n square roots are
-    evaluated); the host flat-nonzeros the plane, and a second jit
-    gathers the O(nnz) surviving distances from the still-resident
-    cross-product tile.  Tile k+1's device work overlaps tile k's host
-    extraction (two-deep pipeline).
+  * slot emit (``emit="slots"`` / ``use_pallas=True``) — the metric's
+    fused ``eps_compact`` kernel packs each row's surviving (col, dist)
+    pairs into capacity-capped slots inside the kernel, so host traffic
+    is O(rows·cap) ≈ O(nnz); rows that overflow the capacity are
+    re-extracted from a dense tile (byte-identical fallback).
+  * mask emit (the CPU/XLA default) — the metric's fused ``mask_tile``
+    emits only the bool hit plane (euclidean thresholds *squared*
+    distances exactly via ``metrics.sq_threshold``, so no m·n square
+    roots are evaluated); the host flat-nonzeros the plane, and
+    ``gather_pairs`` pulls the O(nnz) surviving distances from the
+    still-resident device payload.  Tile k+1's device work overlaps
+    tile k's host extraction (two-deep pipeline).
 
 Every host-side step is bulk array work — ``np.flatnonzero`` over the hit
 plane, a ``searchsorted`` per tile for row lengths, one weighted
@@ -33,11 +38,10 @@ Python loops anywhere on the materialization path
 testing).
 
 Bit-pinning contract: emitted distances are gathered from the *same*
-device buffers their hit plane was computed from (the cross-product tile
-on the mask path, the in-kernel tile on the slot path), and the squared
-threshold is exact by construction (:func:`sq_threshold`), so the
-remaining cross-jit assumption is only that the distance *formula*
-compiles to the same per-pair float ops in each wrapper — which
+device buffers their hit plane was computed from, and each metric's
+threshold transform is exact by construction, so the remaining cross-jit
+assumption is only that the distance *formula* compiles to the same
+per-pair float ops in each wrapper — which
 ``tests/test_vectorized_equivalence.py`` pins byte-for-byte against the
 dense ``reference_materialize`` on every emit path and metric.
 
@@ -54,41 +58,17 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Literal, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
-
-
-Metric = Literal["euclidean", "jaccard"]
-
-
-def sq_threshold(eps) -> np.float32:
-    """Largest float32 t with sqrt(t) <= eps — the exact squared ε-ball.
-
-    float32 sqrt is correctly rounded and monotone, so
-    {v : sqrt(v) <= ε} = {v : v <= t} for this t, and the compacted sweep
-    can threshold *squared* distances bit-identically to thresholding
-    sqrt'd ones while evaluating sqrt only on the O(nnz) survivors.
-    Found by bisection over the float32 bit lattice (positive floats
-    order like their bit patterns): 31 host-side sqrts, no device work.
-    """
-    e = np.float32(eps)
-    if np.isnan(e) or e < 0:
-        return np.float32(np.nan)          # v <= NaN is never true: no hits
-    if np.isinf(e):
-        return np.float32(np.inf)
-    lo, hi = np.uint32(0), np.uint32(0x7F7FFFFF)     # 0.0 .. max finite
-    while lo < hi:
-        mid = np.uint32((np.uint64(lo) + np.uint64(hi) + np.uint64(1)) // 2)
-        if np.sqrt(mid.view(np.float32), dtype=np.float32) <= e:
-            lo = mid
-        else:
-            hi = np.uint32(mid - 1)
-    return lo.view(np.float32)
+from repro.metrics import MetricLike, get_metric
+# re-exported for backwards compatibility: these lived here before the
+# metric registry (PR 4) pulled everything metric-specific into
+# ``repro.metrics``
+from repro.metrics import Metric, sq_threshold  # noqa: F401
 
 
 def fill_slot_rows(indices: np.ndarray, dists: np.ndarray, base: np.ndarray,
@@ -119,37 +99,30 @@ def _pow2_pad(size: int, floor: int = 1 << 14) -> int:
     return p
 
 
-def dataset_fingerprint(data, metric: Metric = "euclidean",
+def dataset_fingerprint(data, metric: MetricLike = "euclidean",
                         weights: Optional[np.ndarray] = None) -> str:
     """Stable identity of a dataset: metric + shape + dtype + content hash.
 
-    Computed over the same canonical representation ``NeighborEngine``
-    stores (float32 vectors / uint32-packed bitmaps + int32 sizes), so the
-    fingerprint of raw input data equals the fingerprint of an engine built
-    from it. This is what keys the serving-side ``IndexStore`` and what
-    ``FinexIndex.load(data=...)`` checks before attaching an engine.
+    Computed over the metric's *canonical* representation (the same
+    arrays ``NeighborEngine`` uploads — float32 vectors, uint32-packed
+    bitmaps + int32 sizes, …), so the fingerprint of raw input data
+    equals the fingerprint of an engine built from it. This is what keys
+    the serving-side ``IndexStore`` and what ``FinexIndex.load(data=...)``
+    checks before attaching an engine.  The metric contributes its
+    registry name (and params, when any) to the head, so the same bytes
+    under different distance semantics never collide.
     Non-unit duplicate ``weights`` are part of the identity (they change
     every neighborhood count); unit weights hash the same as no weights.
     """
+    m = get_metric(metric)
     if weights is not None:
         w = np.ascontiguousarray(np.asarray(weights, dtype=np.int64))
         if np.all(w == 1):
             weights = None
-    if metric == "euclidean":
-        x = np.ascontiguousarray(np.asarray(data, dtype=np.float32))
-        h = hashlib.sha256(x.tobytes())
-        shape = "x".join(map(str, x.shape))
-        head = f"euclidean:{shape}:{x.dtype}"
-    elif metric == "jaccard":
-        bits, sizes = data
-        b = np.ascontiguousarray(np.asarray(bits, dtype=np.uint32))
-        s = np.ascontiguousarray(np.asarray(sizes, dtype=np.int32))
-        h = hashlib.sha256(b.tobytes())
-        h.update(s.tobytes())
-        shape = "x".join(map(str, b.shape))
-        head = f"jaccard:{shape}:{b.dtype}"
-    else:
-        raise ValueError(f"unknown metric {metric!r}")
+    canon = m.canonicalize(data)
+    h = hashlib.sha256()
+    m.fingerprint_update(h, canon)
+    head = m.fingerprint_head(canon)
     if weights is not None:
         h.update(b"weights")
         h.update(w.tobytes())
@@ -190,18 +163,20 @@ class CSRNeighborhoods:
 class NeighborEngine:
     """Batched distance plane for one dataset + metric.
 
-    Vector data: ``data`` is (n, d) float. Set data: ``data`` is the pair
-    (bits (n, W) uint32, sizes (n,) int32) from ``bitset.pack_sets``.
+    ``metric`` is a registry name or a ``repro.metrics.Metric`` instance;
+    ``data`` is whatever that metric canonicalizes — (n, d) float arrays
+    for the vector metrics, the (bits, sizes) pair from
+    ``bitset.pack_sets`` for Jaccard, etc.
     """
 
-    def __init__(self, data, metric: Metric = "euclidean",
+    def __init__(self, data, metric: MetricLike = "euclidean",
                  weights: Optional[np.ndarray] = None,
                  batch_rows: int = 256, use_pallas: bool = False,
                  emit: str = "auto", slot_cap: int = 256):
         if emit not in ("auto", "slots", "mask"):
             raise ValueError(f"emit must be 'auto', 'slots' or 'mask', "
                              f"got {emit!r}")
-        self.metric: Metric = metric
+        self.metric: Metric = get_metric(metric)
         self.use_pallas = use_pallas
         # ε-compacted emit strategy: "slots" = fused per-row capacity
         # slots (the Pallas kernels on TPU; their jnp oracle otherwise),
@@ -215,16 +190,8 @@ class NeighborEngine:
         # instrumentation for benchmarks: what did the last materialize
         # sweep actually move host<->device, and which path did it take
         self.last_materialize: dict = {}
-        if metric == "euclidean":
-            self._x = jnp.asarray(np.asarray(data, dtype=np.float32))
-            self.n = int(self._x.shape[0])
-        elif metric == "jaccard":
-            bits, sizes = data
-            self._bits = jnp.asarray(np.asarray(bits, dtype=np.uint32))
-            self._sizes = jnp.asarray(np.asarray(sizes, dtype=np.int32))
-            self.n = int(self._bits.shape[0])
-        else:
-            raise ValueError(f"unknown metric {metric!r}")
+        self._state = self.metric.device_state(self.metric.canonicalize(data))
+        self.n = int(self._state[0].shape[0])
         if weights is None:
             weights = np.ones(self.n, dtype=np.int64)
         self.weights = np.asarray(weights, dtype=np.int64)
@@ -240,27 +207,29 @@ class NeighborEngine:
         self.distance_rows_computed = 0  # instrumentation: #row-neighborhoods
         self._fingerprint: Optional[str] = None
 
+    @property
+    def metric_name(self) -> str:
+        """The metric's registry name (the string serialized into npz
+        archives and checkpoint manifests)."""
+        return self.metric.name
+
     def fingerprint(self) -> str:
         """``dataset_fingerprint`` of this engine's dataset (cached)."""
         if self._fingerprint is None:
-            if self.metric == "euclidean":
-                self._fingerprint = dataset_fingerprint(
-                    np.asarray(self._x), "euclidean", weights=self.weights)
-            else:
-                self._fingerprint = dataset_fingerprint(
-                    (np.asarray(self._bits), np.asarray(self._sizes)),
-                    "jaccard", weights=self.weights)
+            # the canonical host arrays round-trip bit-exactly through the
+            # device state, so hashing the pulled-back state equals
+            # hashing the original input
+            canon = tuple(np.asarray(a) for a in self._state)
+            self._fingerprint = dataset_fingerprint(
+                canon if len(canon) > 1 else canon[0], self.metric,
+                weights=self.weights)
         return self._fingerprint
 
     # ---------------------------------------------------------- distances
     def _dist_block(self, rows: jax.Array) -> jax.Array:
         """(B,) row ids -> (B, n) float32 distances."""
-        if self.metric == "euclidean":
-            return ops.pairwise_euclidean(self._x[rows], self._x,
-                                          use_pallas=self.use_pallas)
-        return ops.jaccard_distance(self._bits[rows], self._sizes[rows],
-                                    self._bits, self._sizes,
-                                    use_pallas=self.use_pallas)
+        return self.metric.tile(self.metric.take(self._state, rows),
+                                self._state, use_pallas=self.use_pallas)
 
     def distances_from(self, rows: np.ndarray) -> np.ndarray:
         """Distances from the given row ids to the whole dataset."""
@@ -291,13 +260,9 @@ class NeighborEngine:
         self.distance_rows_computed += nr
         rp = jnp.asarray(self._bucket(rows))
         cp = jnp.asarray(self._bucket(cols))
-        if self.metric == "euclidean":
-            d = ops.pairwise_euclidean(self._x[rp], self._x[cp],
-                                       use_pallas=self.use_pallas)
-        else:
-            d = ops.jaccard_distance(self._bits[rp], self._sizes[rp],
-                                     self._bits[cp], self._sizes[cp],
-                                     use_pallas=self.use_pallas)
+        d = self.metric.tile(self.metric.take(self._state, rp),
+                             self.metric.take(self._state, cp),
+                             use_pallas=self.use_pallas)
         return np.asarray(d)[:nr, :nc]
 
     # ------------------------------------------------------ neighborhoods
@@ -305,6 +270,10 @@ class NeighborEngine:
         """Host-side (start, end) row bounds of every sweep tile."""
         return [(s, min(s + self.batch_rows, self.n))
                 for s in range(0, self.n, self.batch_rows)]
+
+    def _rows(self, s: int, e: int):
+        """Device state of the sweep tile's query rows [s, e)."""
+        return self.metric.take(self._state, slice(s, e))
 
     def materialize(self, eps: float) -> Tuple[np.ndarray, CSRNeighborhoods]:
         """Weighted counts |N_ε| and CSR neighbor lists for every object.
@@ -360,44 +329,36 @@ class NeighborEngine:
         ind_chunks: list = []
         pending_gather: list = []
         host_bytes = 0
-        if self.metric == "euclidean":
-            t_sq = jnp.asarray(sq_threshold(eps))
-        else:
-            eps_dev = jnp.float32(eps)
+        thresh = self.metric.mask_threshold(eps)
 
         def dispatch(se):
             s, e = se
-            if self.metric == "euclidean":
-                return ops.eps_mask_tile(self._x[s:e], self._x, t_sq)
-            return ops.jaccard_mask_tile(self._bits[s:e], self._sizes[s:e],
-                                         self._bits, self._sizes, eps_dev)
+            return self.metric.mask_tile(self._rows(s, e), self._state,
+                                         thresh)
 
         tiles = self._tile_bounds()
         pend = dispatch(tiles[0]) if tiles else None
         flat_dtype = np.int32 if self.batch_rows * n < 2 ** 31 else np.int64
         for i, (s, e) in enumerate(tiles):
-            out = pend
+            hit, payload = pend
             if i + 1 < len(tiles):
                 pend = dispatch(tiles[i + 1])      # overlaps the host work
             self.distance_rows_computed += e - s
-            mask = np.asarray(out[0])
+            mask = np.asarray(hit)
             flat = np.flatnonzero(mask)
             lens[s:e] = np.diff(np.searchsorted(
                 flat, np.arange(e - s + 1, dtype=np.int64) * n))
             pad = _pow2_pad(flat.size)
             fpad = np.zeros(pad, dtype=flat_dtype)
             fpad[:flat.size] = flat
-            if self.metric == "euclidean":
-                dv = ops.eps_gather_pairs(out[1], out[2], out[3],
-                                          jnp.asarray(fpad))
-            else:
-                dv = ops.gather_flat(out[1], jnp.asarray(fpad))
+            dv = self.metric.gather_pairs(payload, jnp.asarray(fpad))
             ind_chunks.append((flat % n).astype(np.int32))
             pending_gather.append((flat.size, dv))
             host_bytes += mask.nbytes + fpad.nbytes + pad * 4
         dist_chunks = [np.asarray(dv)[:k] for k, dv in pending_gather]
         self.last_materialize = {
-            "mode": "mask", "tiles": len(tiles), "cap": None,
+            "mode": "mask", "metric": self.metric.name,
+            "tiles": len(tiles), "cap": None,
             "fallback_rows": 0, "host_bytes": host_bytes,
             "host_bytes_dense": self._dense_sweep_bytes(),
         }
@@ -418,13 +379,9 @@ class NeighborEngine:
         for s, e in self._tile_bounds():
             cap = self._slot_cap
             self.distance_rows_computed += e - s
-            if self.metric == "euclidean":
-                tl, tc, td = ops.eps_compact(self._x[s:e], self._x, eps_dev,
-                                             cap, use_pallas=self.use_pallas)
-            else:
-                tl, tc, td = ops.jaccard_eps_compact(
-                    self._bits[s:e], self._sizes[s:e], self._bits,
-                    self._sizes, eps_dev, cap, use_pallas=self.use_pallas)
+            tl, tc, td = self.metric.eps_compact(
+                self._rows(s, e), self._state, eps_dev, cap,
+                use_pallas=self.use_pallas)
             tl = np.asarray(tl).astype(np.int64)
             tc, td = np.asarray(tc), np.asarray(td)
             host_bytes += tl.nbytes + tc.nbytes + td.nbytes
@@ -469,7 +426,8 @@ class NeighborEngine:
             ind_chunks.append(t_ind)
             dist_chunks.append(t_dist)
         self.last_materialize = {
-            "mode": "slots", "tiles": len(self._tile_bounds()),
+            "mode": "slots", "metric": self.metric.name,
+            "tiles": len(self._tile_bounds()),
             "cap": self._slot_cap, "fallback_rows": fallback_rows,
             "host_bytes": host_bytes,
             "host_bytes_dense": self._dense_sweep_bytes(),
@@ -497,23 +455,18 @@ class NeighborEngine:
     def counts_only(self, eps: float) -> np.ndarray:
         """Weighted |N_ε(p)| for all p without materializing lists.
 
-        Routed through the fused ``ops.eps_count`` /
-        ``ops.jaccard_eps_count`` kernels: the distance tile is reduced to
-        per-row counts on device (in VMEM on TPU), so only O(rows) floats
-        cross to the host per tile — no dense plane, no list storage.
+        Routed through the metric's fused ``eps_count`` kernel: the
+        distance tile is reduced to per-row counts on device (in VMEM on
+        TPU), so only O(rows) floats cross to the host per tile — no
+        dense plane, no list storage.
         """
         counts = np.zeros(self.n, dtype=np.int64)
         eps_dev = jnp.float32(eps)
         for s, e in self._tile_bounds():
             self.distance_rows_computed += e - s
-            if self.metric == "euclidean":
-                c = ops.eps_count(self._x[s:e], self._x, eps_dev,
-                                  self._w_dev, use_pallas=self.use_pallas)
-            else:
-                c = ops.jaccard_eps_count(
-                    self._bits[s:e], self._sizes[s:e], self._bits,
-                    self._sizes, eps_dev, self._w_dev,
-                    use_pallas=self.use_pallas)
+            c = self.metric.eps_count(self._rows(s, e), self._state, eps_dev,
+                                      self._w_dev,
+                                      use_pallas=self.use_pallas)
             counts[s:e] = np.asarray(c).astype(np.int64)
         return counts
 

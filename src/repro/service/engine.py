@@ -22,7 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.neighbors.engine import Metric
+from repro.metrics import MetricLike
 from repro.service.planner import Setting, SweepPlanner
 from repro.service.store import IndexKey, IndexStore
 
@@ -32,7 +32,7 @@ class BuildRequest:
     data: Any
     eps: float
     minpts: int
-    metric: Metric = "euclidean"
+    metric: MetricLike = "euclidean"
     weights: Optional[np.ndarray] = None
     # filled by the service
     key: Optional[IndexKey] = None
@@ -46,7 +46,7 @@ class ClusterRequest:
     eps: float
     minpts: int
     setting: Optional[Setting] = None    # None -> generating-pair labels
-    metric: Metric = "euclidean"
+    metric: MetricLike = "euclidean"
     weights: Optional[np.ndarray] = None
     # filled by the service
     labels: Optional[np.ndarray] = None  # (n,)
@@ -60,7 +60,7 @@ class SweepRequest:
     eps: float
     minpts: int
     settings: Sequence[Setting] = field(default_factory=list)
-    metric: Metric = "euclidean"
+    metric: MetricLike = "euclidean"
     weights: Optional[np.ndarray] = None
     # filled by the service
     labels: Optional[np.ndarray] = None  # (K, n), request order

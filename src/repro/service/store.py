@@ -30,19 +30,24 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.index import FinexIndex
-from repro.neighbors.engine import Metric, dataset_fingerprint
+from repro.metrics import MetricLike, get_metric
+from repro.neighbors.engine import dataset_fingerprint
 
 
 @dataclass(frozen=True)
 class IndexKey:
-    """Identity of a built index: what data, at which generating pair."""
+    """Identity of a built index: what data, at which generating pair.
+
+    The metric is part of the identity through the fingerprint head
+    (registry name + params), so the same bytes under different distance
+    semantics key different indexes."""
     fingerprint: str
     eps: float
     minpts: int
 
     @classmethod
     def make(cls, data, eps: float, minpts: int,
-             metric: Metric = "euclidean",
+             metric: MetricLike = "euclidean",
              weights: Optional[np.ndarray] = None) -> "IndexKey":
         # ε is canonicalized to the float32 distance domain, matching the
         # device tile sweep — 0.5 and np.float32(0.5) are the same index
@@ -71,9 +76,11 @@ class IndexStore:
         self.manager = manager
         self._resident: "OrderedDict[IndexKey, FinexIndex]" = OrderedDict()
         self._spilled: Dict[IndexKey, int] = {}      # key -> manager step
-        # id(array) -> (weakref, fingerprint): skips the full-dataset hash
-        # when the same array object is presented again (every request in
-        # a service window hits this path); entries die with their array
+        # (id(array), metric spec) -> (weakref, fingerprint): skips the
+        # full-dataset hash when the same array object is presented again
+        # under the same metric (every request in a service window hits
+        # this path); one entry per metric per array, each dying with the
+        # array through its own weakref finalizer
         self._fp_cache: Dict[int, tuple] = {}
         self.hits = 0
         self.reloads = 0
@@ -108,7 +115,7 @@ class IndexStore:
         return idx
 
     def get_or_build(self, data, eps: float, minpts: int, *,
-                     metric: Metric = "euclidean",
+                     metric: MetricLike = "euclidean",
                      weights: Optional[np.ndarray] = None,
                      **build_kw) -> Tuple[FinexIndex, str]:
         """Fetch or build the index for (data, ε, MinPts).
@@ -140,21 +147,25 @@ class IndexStore:
         self._admit(key, index)
         return key
 
-    def _fingerprint_of(self, data, metric: Metric, weights) -> str:
-        """``dataset_fingerprint``, memoized by array identity for the
-        common serving shape: one plain unweighted array presented on
-        every request. Weighted or (bits, sizes)-tuple datasets always
-        rehash — a cache keyed on one piece of a composite identity can
-        go stale through id reuse and silently serve the wrong index."""
+    def _fingerprint_of(self, data, metric: MetricLike, weights) -> str:
+        """``dataset_fingerprint``, memoized by (array identity, metric)
+        for the common serving shape: one plain unweighted array
+        presented on every request. Weighted or multi-array-tuple
+        datasets always rehash — a cache keyed on one piece of a
+        composite identity can go stale through id reuse and silently
+        serve the wrong index. The metric's identity token is part of
+        the cache key: the same array under two registered metrics has
+        two fingerprints."""
         if weights is not None or isinstance(data, tuple):
             return dataset_fingerprint(data, metric, weights=weights)
-        ent = self._fp_cache.get(id(data))
+        key = (id(data), get_metric(metric).spec)
+        ent = self._fp_cache.get(key)
         if ent is not None and ent[0]() is data:
             return ent[1]
         fp = dataset_fingerprint(data, metric)
         try:
-            self._fp_cache[id(data)] = (weakref.ref(
-                data, lambda _, i=id(data): self._fp_cache.pop(i, None)),
+            self._fp_cache[key] = (weakref.ref(
+                data, lambda _, k=key: self._fp_cache.pop(k, None)),
                 fp)
         except TypeError:      # not weakref-able: recompute next time
             pass

@@ -142,6 +142,59 @@ def test_sharded_csr_emit_byte_identical():
     assert "CSR_EMIT_OK" in out
 
 
+def test_sharded_csr_emit_jaccard_and_registry_metrics():
+    """The metric-oblivious sharded CSR-emit (ROADMAP open item): jaccard
+    set data — and a non-euclidean vector metric straight from the
+    registry — must reproduce the single-device engine's CSR byte for
+    byte on the 2x4 host mesh, divisible and non-divisible n alike, and
+    feed FinexIndex.build(mesh=...)."""
+    out = _run("""
+        import numpy as np
+        from repro.neighbors.distributed import sharded_csr_materialize
+        from repro.neighbors.engine import NeighborEngine
+        from repro.neighbors.bitset import pack_sets
+        from repro.launch.mesh import make_host_mesh
+        from repro.core import FinexIndex
+
+        rng = np.random.default_rng(0)
+        mesh = make_host_mesh(2, 4)
+
+        for n in (512, 500):           # 500 exercises row/corpus padding
+            sets = [rng.choice(96, size=rng.integers(1, 14), replace=False)
+                    for _ in range(n)]
+            data = pack_sets(sets, universe=96)
+            csr = sharded_csr_materialize(data, 0.6, mesh, cap=256,
+                                          row_chunk=64, metric='jaccard')
+            _, csr_ref = NeighborEngine(data, metric='jaccard') \\
+                .materialize(0.6)
+            np.testing.assert_array_equal(csr.indptr, csr_ref.indptr)
+            np.testing.assert_array_equal(csr.indices, csr_ref.indices)
+            np.testing.assert_array_equal(csr.dists, csr_ref.dists)
+
+            x = rng.normal(size=(n, 8)).astype(np.float32)
+            csr = sharded_csr_materialize(x, 0.25, mesh, cap=256,
+                                          row_chunk=64, metric='cosine')
+            _, csr_ref = NeighborEngine(x, metric='cosine').materialize(0.25)
+            np.testing.assert_array_equal(csr.indptr, csr_ref.indptr)
+            np.testing.assert_array_equal(csr.indices, csr_ref.indices)
+            np.testing.assert_array_equal(csr.dists, csr_ref.dists)
+
+        sets = [rng.choice(96, size=rng.integers(1, 14), replace=False)
+                for _ in range(500)]
+        data = pack_sets(sets, universe=96)
+        idx_m = FinexIndex.build(data, eps=0.6, minpts=4, metric='jaccard',
+                                 mesh=mesh, shard_cap=256,
+                                 shard_row_chunk=64)
+        idx_s = FinexIndex.build(data, eps=0.6, minpts=4, metric='jaccard')
+        np.testing.assert_array_equal(idx_m.ordering.order,
+                                      idx_s.ordering.order)
+        np.testing.assert_array_equal(idx_m.ordering.R, idx_s.ordering.R)
+        np.testing.assert_array_equal(idx_m.clustering(), idx_s.clustering())
+        print('JACCARD_CSR_EMIT_OK')
+    """)
+    assert "JACCARD_CSR_EMIT_OK" in out
+
+
 def test_finex_csr_dryrun_cell_compiles():
     """The finex-csr dry-run cell lowers + compiles on a host mesh."""
     out = _run("""

@@ -1,0 +1,183 @@
+"""Registry contract suite: every registered metric — built-in or user
+defined — must satisfy the engine's kernel contract (symmetry, zero
+self-distance, fused-count == mask row sums, compact == oracle, emit
+paths byte-identical), plus the end-to-end custom-metric workflow:
+register → build → query → save/load → warm IndexStore hit."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import FinexIndex
+from repro.core.reference import reference_materialize
+from repro.kernels import ref
+from repro.metrics import (CallableMetric, Metric, get_metric,
+                           register_metric, registered_metrics)
+from repro.neighbors.engine import NeighborEngine, dataset_fingerprint
+
+
+# a user-defined distance, registered the way a downstream user would:
+# a plain jnp callable, no Pallas kernel — it rides the dense fallback
+# path and participates in the whole contract suite below
+def _chebyshev(x, y):
+    m, d = x.shape
+    acc = jnp.zeros((m, y.shape[0]), jnp.float32)
+    for w0 in range(0, d, 4):
+        acc = jnp.maximum(acc, jnp.abs(
+            x[:, None, w0:w0 + 4] - y[None, :, w0:w0 + 4]).max(-1))
+    return acc
+
+
+if "chebyshev" not in registered_metrics():
+    register_metric("chebyshev", _chebyshev)
+
+ALL_METRICS = registered_metrics()
+
+
+def _dataset(name, n=90, seed=3):
+    m = get_metric(name)
+    return m, m.synthesize(np.random.default_rng(seed), n)
+
+
+def _eps_for(dists):
+    """A threshold that keeps a meaningful survivor fraction for any
+    distance scale — the 20th percentile of off-diagonal distances."""
+    off = dists[~np.eye(dists.shape[0], dtype=bool)]
+    return float(np.quantile(off, 0.2))
+
+
+@pytest.fixture(scope="module", params=ALL_METRICS)
+def metric_case(request):
+    m, data = _dataset(request.param)
+    eng = NeighborEngine(data, metric=m)
+    dense = eng.distances_from(np.arange(eng.n))
+    return m, data, eng, dense, _eps_for(dense)
+
+
+def test_symmetry_and_zero_self_distance(metric_case):
+    _, _, _, dense, _ = metric_case
+    np.testing.assert_allclose(dense, dense.T, rtol=1e-5, atol=1e-5)
+    # the euclidean MXU expansion ‖x‖²+‖y‖²−2x·y cancels catastrophically
+    # on the diagonal: self-distances are O(sqrt(float32 eps)·scale), not
+    # exactly zero — bound them well below any useful ε instead
+    np.testing.assert_allclose(np.diag(dense), 0.0, atol=5e-3)
+    assert (dense >= 0.0).all()
+
+
+def test_eps_count_matches_mask_tile_row_sums(metric_case):
+    m, _, eng, dense, eps = metric_case
+    w = jnp.ones(eng.n, jnp.float32)
+    counts = m.eps_count(eng._state, eng._state, jnp.float32(eps), w)
+    hit, _ = m.mask_tile(eng._state, eng._state, m.mask_threshold(eps))
+    np.testing.assert_array_equal(
+        np.asarray(counts).astype(np.int64), np.asarray(hit).sum(axis=1))
+    # the mask threshold transform must be exact: the hit plane equals
+    # thresholding the dense plane directly
+    np.testing.assert_array_equal(np.asarray(hit), dense <= np.float32(eps))
+
+
+def test_eps_compact_matches_oracle(metric_case):
+    m, _, eng, dense, eps = metric_case
+    lens, cols, dvals = m.eps_compact(eng._state, eng._state,
+                                      jnp.float32(eps), 128)
+    ol, oc, od = ref.eps_compact_tile(jnp.asarray(dense), jnp.float32(eps),
+                                      128)
+    np.testing.assert_array_equal(np.asarray(lens), np.asarray(ol))
+    np.testing.assert_array_equal(np.asarray(cols), np.asarray(oc))
+    np.testing.assert_array_equal(np.asarray(dvals), np.asarray(od))
+
+
+def test_gather_pairs_matches_dense_plane(metric_case):
+    m, _, eng, dense, eps = metric_case
+    hit, payload = m.mask_tile(eng._state, eng._state, m.mask_threshold(eps))
+    flat = np.flatnonzero(np.asarray(hit))
+    got = np.asarray(m.gather_pairs(payload, jnp.asarray(flat)))
+    np.testing.assert_array_equal(got, dense.ravel()[flat])
+
+
+def test_emit_paths_byte_identical_to_reference(metric_case):
+    m, data, _, _, eps = metric_case
+    ref_counts, ref_csr = reference_materialize(
+        NeighborEngine(data, metric=m), eps)
+    for kw in (dict(emit="mask"), dict(emit="slots", slot_cap=128),
+               dict(emit="slots", slot_cap=128, batch_rows=32)):
+        eng = NeighborEngine(data, metric=m, **kw)
+        counts, csr = eng.materialize(eps)
+        np.testing.assert_array_equal(counts, ref_counts)
+        np.testing.assert_array_equal(csr.indptr, ref_csr.indptr)
+        np.testing.assert_array_equal(csr.indices, ref_csr.indices)
+        np.testing.assert_array_equal(csr.dists, ref_csr.dists)
+        np.testing.assert_array_equal(eng.counts_only(eps), ref_counts)
+
+
+def test_fingerprint_distinguishes_metrics_and_params():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(40, 8)).astype(np.float32)
+    fps = {name: dataset_fingerprint(x, name)
+           for name in ALL_METRICS if name != "jaccard"}
+    assert len(set(fps.values())) == len(fps)     # same bytes, distinct ids
+    for name, fp in fps.items():
+        assert fp == dataset_fingerprint(x, name)  # deterministic
+        # head = metric spec (name + params when any) + shape + dtype
+        assert fp.startswith(f"{get_metric(name).spec}:40x8:float32:")
+    # params are part of the identity
+    a = CallableMetric("chebyshev", _chebyshev, scale=1.0)
+    b = CallableMetric("chebyshev", _chebyshev, scale=2.0)
+    assert dataset_fingerprint(x, a) != dataset_fingerprint(x, b)
+
+
+def test_registry_errors():
+    with pytest.raises(ValueError, match="registered metrics"):
+        get_metric("euclidaen")
+    with pytest.raises(ValueError, match="already registered"):
+        register_metric("euclidean", _chebyshev)
+    with pytest.raises(TypeError):
+        get_metric(get_metric("euclidean"), foo=1)
+
+
+def test_metric_instances_pass_everywhere_strings_do():
+    m, data = _dataset("cosine")
+    assert dataset_fingerprint(data, m) == dataset_fingerprint(data, "cosine")
+    a = FinexIndex.build(data, eps=0.4, minpts=5, metric=m)
+    b = FinexIndex.build(data, eps=0.4, minpts=5, metric="cosine")
+    np.testing.assert_array_equal(a.clustering(), b.clustering())
+    assert a.metric == "cosine"
+    assert isinstance(a.metric_obj, Metric)
+
+
+def test_custom_metric_end_to_end(tmp_path):
+    """register_metric → FinexIndex.build → eps*/minpts* → save/load →
+    IndexStore.get_or_build warm hit — the full user workflow."""
+    from repro.service import IndexStore
+
+    _, data = _dataset("chebyshev", n=150)
+    eps, minpts = 1.6, 6
+    index = FinexIndex.build(data, eps=eps, minpts=minpts,
+                             metric="chebyshev")
+    assert index.metric == "chebyshev"
+    lab_e = index.eps_star(1.1)
+    lab_m = index.minpts_star(12)
+    assert lab_e.shape == lab_m.shape == (150,)
+    assert (lab_e >= -1).all() and lab_e.max() >= 0
+
+    path = str(tmp_path / "chebyshev.npz")
+    index.save(path)
+    reloaded = FinexIndex.load(path, data=data)
+    assert reloaded.metric == "chebyshev"
+    np.testing.assert_array_equal(reloaded.eps_star(1.1), lab_e)
+    np.testing.assert_array_equal(reloaded.minpts_star(12), lab_m)
+
+    store = IndexStore(capacity=2)
+    built, outcome = store.get_or_build(data, eps=eps, minpts=minpts,
+                                        metric="chebyshev")
+    assert outcome == "build"
+    rows_before = built.engine.distance_rows_computed
+    warm, outcome = store.get_or_build(data, eps=eps, minpts=minpts,
+                                       metric="chebyshev")
+    assert outcome == "hit" and warm is built
+    assert warm.engine.distance_rows_computed == rows_before
+    np.testing.assert_array_equal(warm.minpts_star(12), lab_m)
+    # the same bytes under a different metric is a different index
+    _, outcome = store.get_or_build(data, eps=eps, minpts=minpts,
+                                    metric="euclidean")
+    assert outcome == "build"
