@@ -128,6 +128,70 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         "nnz_payload_bytes": int(csr.nnz) * 8,   # int32 col + float32 dist
     }
 
+    # ------------------------------------------------ incremental section
+    # insert/delete deltas vs full rebuilds — the serving story of
+    # incremental maintenance: a single insert must be an order of
+    # magnitude cheaper than re-running materialize + ordering sweep.
+    # Both sides are timed post-compile (a warm-up build/insert runs
+    # first at every dataset shape involved).
+    def _same_index(a, b):
+        oa, ob = a.ordering, b.ordering
+        return (all(np.array_equal(getattr(oa, f), getattr(ob, f))
+                    for f in ("order", "pos", "C", "R", "N", "F"))
+                and np.array_equal(a.csr.indptr, b.csr.indptr)
+                and np.array_equal(a.csr.indices, b.csr.indices)
+                and np.array_equal(a.csr.dists, b.csr.dists))
+
+    rng = np.random.default_rng(seed + 1)
+    point = x[rng.integers(n)][None, :] + 0.03   # lands inside a cluster
+    x_ins = np.concatenate([x, point])
+    FinexIndex.build(x_ins, eps=eps, minpts=minpts)          # warm n+1
+    # median of 3 independent runs on each side: single-shot wall-clock
+    # of a sub-second delta against a multi-second rebuild is noisy
+    # enough to matter for the regression floor
+    reb_ins, t_reb_ins = None, []
+    for _ in range(3):
+        reb_ins, t = _timed(
+            lambda: FinexIndex.build(x_ins, eps=eps, minpts=minpts))
+        t_reb_ins.append(t)
+    t_reb_ins = float(np.median(t_reb_ins))
+    # steady-state maintenance latency: the component labels are lazy,
+    # so one warm insert+delete cycle (exact — it restores the original
+    # index bytes) materializes them and the strip jit shapes before
+    # timing; each repetition restores the base the same way
+    base = FinexIndex.build(x, eps=eps, minpts=minpts)
+    base.insert(point)
+    base.delete(np.array([n]))
+    rep_ins, t_ins = None, []
+    for i in range(3):
+        rep_ins, t = _timed(lambda: base.insert(point))
+        t_ins.append(t)
+        if i < 2:
+            base.delete(np.array([n]))
+    t_ins = float(np.median(t_ins))
+    identical = _same_index(base, reb_ins)
+
+    del_ids = rng.choice(n + 1, size=max(1, n // 100), replace=False)
+    x_del = np.delete(x_ins, del_ids, axis=0)
+    FinexIndex.build(x_del, eps=eps, minpts=minpts)          # warm shape
+    reb_del, t_reb_del = _timed(
+        lambda: FinexIndex.build(x_del, eps=eps, minpts=minpts))
+    rep_del, t_del = _timed(lambda: base.delete(del_ids))
+    identical = identical and _same_index(base, reb_del)
+    report["incremental"] = {
+        "single_insert_s": round(t_ins, 4),
+        "rebuild_insert_s": round(t_reb_ins, 4),
+        "speedup_vs_rebuild": round(t_reb_ins / max(t_ins, 1e-9), 2),
+        "insert_mode": rep_ins["mode"],
+        "insert_affected_frac": rep_ins["affected_frac"],
+        "batch_delete_ids": int(del_ids.size),
+        "batch_delete_s": round(t_del, 4),
+        "rebuild_delete_s": round(t_reb_del, 4),
+        "delete_speedup_vs_rebuild": round(t_reb_del / max(t_del, 1e-9), 2),
+        "delete_mode": rep_del["mode"],
+        "identical": bool(identical),
+    }
+
     # ---------------------------------------------------------- seed path
     if not skip_seed:
         (_, csr_ref), t_mat_ref = _timed(lambda: reference_materialize(

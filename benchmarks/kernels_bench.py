@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.neighbors.bitset import pack_sets
 
 

@@ -16,7 +16,7 @@ hardware-independent cost that dominates every algorithm here (the paper's
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 

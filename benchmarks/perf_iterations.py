@@ -55,7 +55,6 @@ def _run_finex_variant(kw):
     import time
     import traceback
     import jax
-    from repro.launch.hlo_analysis import analyze_hlo
     from repro.launch.mesh import make_production_mesh
     from repro.neighbors import distributed as D
     t0 = time.time()

@@ -6,8 +6,6 @@ kernels and the dry-run-derived roofline table.
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 import time
 
 

@@ -1,32 +1,90 @@
 #!/usr/bin/env bash
-# Benchmark smoke runner + schema guard — keeps the perf artifacts honest.
-#   scripts/bench.sh            smoke: small-n runs into a temp dir, then
-#                               sanity-check the emitted BENCH_*.json
-#                               schemas (keys present, ratios finite)
+# Benchmark smoke runner + regression guard — keeps the perf artifacts
+# honest AND regression-free.
+#   scripts/bench.sh            smoke: small-n runs into $BENCH_DIR (a
+#                               temp dir by default; CI sets it to the
+#                               artifact upload path), then check the
+#                               emitted BENCH_*.json against the smoke
+#                               floors (schema keys present, exactness
+#                               flags true, ratios finite and above
+#                               their committed floors)
 #   scripts/bench.sh --full     full 20k runs, refresh the committed
-#                               BENCH_index.json / BENCH_service.json
+#                               BENCH_index.json / BENCH_service.json and
+#                               guard them against the (stricter) full
+#                               floors
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+MODE="smoke"
 if [ "${1:-}" = "--full" ]; then
+    MODE="full"
     OUT_DIR="."
     python benchmarks/index_bench.py --out "$OUT_DIR/BENCH_index.json"
     python benchmarks/service_bench.py --out "$OUT_DIR/BENCH_service.json"
 else
-    OUT_DIR="$(mktemp -d)"
-    trap 'rm -rf "$OUT_DIR"' EXIT
+    if [ -n "${BENCH_DIR:-}" ]; then
+        OUT_DIR="$BENCH_DIR"
+        mkdir -p "$OUT_DIR"
+    else
+        OUT_DIR="$(mktemp -d)"
+        trap 'rm -rf "$OUT_DIR"' EXIT
+    fi
     python benchmarks/index_bench.py --n 2000 \
         --out "$OUT_DIR/BENCH_index.json" >/dev/null
     python benchmarks/service_bench.py --smoke \
         --out "$OUT_DIR/BENCH_service.json" >/dev/null
 fi
 
-python - "$OUT_DIR" <<'EOF'
+python - "$OUT_DIR" "$MODE" <<'EOF'
 import json, math, sys
 
-out_dir = sys.argv[1]
+out_dir, mode = sys.argv[1], sys.argv[2]
 failures = []
+
+# Regression floors. "smoke" floors hold even at toy scale (n=2000, CI);
+# "full" floors are the committed-artifact bars at the 20k reference
+# setting. Exactness flags are hard requirements at every scale: the
+# vectorized/compacted/incremental paths must stay byte-identical.
+EXACT_FLAGS = {
+    "BENCH_index.json": ["identical_outputs", "incremental.identical"],
+    "BENCH_service.json": ["sweep_identical_to_sequential",
+                           "hit_zero_distance_rows"],
+}
+FLOORS = {
+    "smoke": {
+        "BENCH_index.json": {
+            "materialize.transfer_reduction": 1.5,
+            "build.speedup_materialize": 1.5,
+            "build.speedup_end_to_end": 1.5,
+            # both sides of this ratio are tens of ms at smoke scale
+            # (median-of-3, ~4.4x on the reference host): keep a wide
+            # margin so shared-runner noise can't fail an unrelated PR
+            "incremental.speedup_vs_rebuild": 1.5,
+        },
+        "BENCH_service.json": {
+            "cache_hit_speedup": 10.0,
+            # batching barely pays at toy scale; the full floor is 1.5
+            "sweep_vs_sequential": 0.7,
+        },
+    },
+    "full": {
+        "BENCH_index.json": {
+            "materialize.transfer_reduction": 2.0,
+            "build.speedup_materialize": 2.0,
+            "build.speedup_end_to_end": 2.5,
+            "build.speedup_finex_build": 2.5,
+            # the incremental-maintenance headline: a 20k single-insert
+            # delta update must stay several times cheaper than a full
+            # rebuild (the committed artifact shows >=10x)
+            "incremental.speedup_vs_rebuild": 6.0,
+        },
+        "BENCH_service.json": {
+            "cache_hit_speedup": 50.0,
+            "sweep_vs_sequential": 1.5,
+        },
+    },
+}
 
 
 def check(path, required, ratio_keys, metric_keys=()):
@@ -55,6 +113,16 @@ def check(path, required, ratio_keys, metric_keys=()):
         if not isinstance(v, str) or not v:
             failures.append(f"{path}: metric {k!r} not a non-empty string "
                             f"(got {v!r})")
+    for k in EXACT_FLAGS.get(path, []):
+        if flat.get(k) is not True:
+            failures.append(f"{path}: exactness flag {k!r} must be true "
+                            f"(got {flat.get(k)!r})")
+    for k, floor in FLOORS[mode].get(path, {}).items():
+        v = flat.get(k)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                or v < floor:
+            failures.append(f"{path}: {k!r} = {v!r} regressed below the "
+                            f"committed {mode} floor {floor}")
 
 
 check("BENCH_index.json",
@@ -67,12 +135,20 @@ check("BENCH_index.json",
                 "materialize.host_bytes_dense",
                 "materialize.host_bytes_compacted",
                 "materialize.transfer_reduction",
+                "incremental.single_insert_s",
+                "incremental.rebuild_insert_s",
+                "incremental.speedup_vs_rebuild",
+                "incremental.batch_delete_s", "incremental.batch_delete_ids",
+                "incremental.insert_mode", "incremental.delete_mode",
+                "incremental.identical",
                 "build.speedup_end_to_end", "build.speedup_host_pipeline",
                 "build.speedup_finex_build", "build.speedup_materialize"],
       ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
                   "build.speedup_finex_build", "build.speedup_eps_star",
                   "build.speedup_minpts_star", "build.speedup_materialize",
-                  "materialize.transfer_reduction"],
+                  "materialize.transfer_reduction",
+                  "incremental.speedup_vs_rebuild",
+                  "incremental.delete_speedup_vs_rebuild"],
       metric_keys=["metric", "materialize.metric"])
 check("BENCH_service.json",
       required=["n", "eps", "minpts", "k", "build_s", "hit_s",
@@ -84,10 +160,10 @@ check("BENCH_service.json",
                   "service.settings_per_s"])
 
 if failures:
-    print("BENCH schema check FAILED:")
+    print(f"BENCH regression guard FAILED ({mode} floors):")
     for f in failures:
         print(f"  - {f}")
     sys.exit(1)
-print(f"BENCH schema check OK ({out_dir}/BENCH_index.json, "
-      f"{out_dir}/BENCH_service.json)")
+print(f"BENCH regression guard OK ({mode} floors; "
+      f"{out_dir}/BENCH_index.json, {out_dir}/BENCH_service.json)")
 EOF

@@ -12,12 +12,9 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
-from repro.checkpoint.manager import CheckpointManager, _flatten, \
-    _unflatten_like
-from repro.sharding import param_shardings
+from repro.checkpoint.manager import CheckpointManager, _unflatten_like
 
 
 def restore_for_mesh(mgr: CheckpointManager, step: int, like: Any,

@@ -8,8 +8,8 @@ and is what the launcher, dry-run and benchmarks consume.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Literal, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Literal, Optional
 
 VOCAB_PAD = 2048          # pad vocab so TP shards stay MXU-aligned
 

@@ -177,13 +177,27 @@ def _prepare(engine: NeighborEngine, eps: float, minpts: int,
     return counts, csr, C
 
 
-def finex_build(engine: NeighborEngine, eps: float, minpts: int,
-                csr: Optional[CSRNeighborhoods] = None
-                ) -> Tuple[FinexOrdering, CSRNeighborhoods]:
-    """Algorithm 2 (with Algorithm 3 queue updates). Returns (index, CSR)."""
-    n = engine.n
-    counts, csr, C = _prepare(engine, eps, minpts, csr)
+def finex_sweep(counts: np.ndarray, csr: CSRNeighborhoods, C: np.ndarray,
+                active: Optional[np.ndarray] = None) -> dict:
+    """Algorithm 2/3 ordering sweep over precomputed neighborhood stats.
 
+    ``C`` is the float32 core-distance array from
+    ``NeighborEngine.core_distances``. With ``active=None`` this is the
+    full build sweep; with an id array the outer loop visits exactly
+    those objects (in ascending id order) and every other object is
+    treated as already processed.  The incremental-maintenance repair
+    path (``repro.core.delta``) relies on the sweep never crossing a
+    core-incidence component boundary, so handing it the affected
+    components reproduces the full sweep's bytes for those objects.
+
+    Returns a dict:
+      order        — emitted object ids, emission order (active only)
+      R, F         — full-size arrays; non-active entries left at init
+      run_id       — per object: index (in trigger order) of the
+                     outer-loop run that finally emitted it, -1 if none
+      run_triggers — per run, its outer-loop trigger object id
+    """
+    n = counts.shape[0]
     R = np.full(n, np.inf, dtype=np.float64)
     N = counts.astype(np.int64)               # o.N — weighted |N_ε(o)|
     F = np.arange(n, dtype=np.int64)          # o.F — init: self-reference
@@ -191,6 +205,15 @@ def finex_build(engine: NeighborEngine, eps: float, minpts: int,
     # track the "visible" N exactly as Algorithm 2 does:
     visible_N = np.zeros(n, dtype=np.int64)
     processed = np.zeros(n, dtype=bool)
+    run_id = np.full(n, -1, dtype=np.int64)
+    run_triggers: list = []
+    if active is None:
+        outer = range(n)
+    else:
+        outer = np.sort(np.asarray(active, dtype=np.int64))
+        live = np.zeros(n, dtype=bool)
+        live[outer] = True
+        processed[~live] = True
     slot = np.full(n, -1, dtype=np.int64)     # position in order list or -1
     order_list = _Tombstones(n)
     is_core = np.isfinite(C)
@@ -224,31 +247,56 @@ def finex_build(engine: NeighborEngine, eps: float, minpts: int,
         if upd.any():
             F[nbrs[upd]] = c
 
-    def append(o: int) -> None:
+    def append(o: int, run: int) -> None:
         processed[o] = True
         slot[o] = order_list.append(o)
         visible_N[o] = N[o]
+        run_id[o] = run
 
-    for o in range(n):
+    for o in outer:
         if processed[o]:
             continue
         # o.C, o.N computed; o.R = inf (outer-loop object)
-        append(o)
+        run = len(run_triggers)
+        run_triggers.append(int(o))
+        append(o, run)
         if is_core[o]:
             q_update(o)
             while len(pq):
                 p, _ = pq.pop()
-                append(p)
+                append(p, run)
                 if is_core[p]:
                     q_update(p)
 
-    order = order_list.survivors()
+    return {"order": order_list.survivors(), "R": R, "F": F,
+            "run_id": run_id,
+            "run_triggers": np.asarray(run_triggers, dtype=np.int64)}
+
+
+def finex_build(engine: NeighborEngine, eps: float, minpts: int,
+                csr: Optional[CSRNeighborhoods] = None,
+                run_meta: Optional[dict] = None
+                ) -> Tuple[FinexOrdering, CSRNeighborhoods]:
+    """Algorithm 2 (with Algorithm 3 queue updates). Returns (index, CSR).
+
+    Pass a dict as ``run_meta`` to receive the sweep's run decomposition
+    (``run_id`` per object + ``run_triggers``) — the bookkeeping that
+    lets ``FinexIndex.insert``/``delete`` stitch unaffected run
+    subsequences instead of re-sweeping the whole dataset.
+    """
+    n = engine.n
+    counts, csr, C = _prepare(engine, eps, minpts, csr)
+    sweep = finex_sweep(counts, csr, C)
+    order = sweep["order"]
     assert order.shape[0] == n
     pos = np.empty(n, dtype=np.int64)
     pos[order] = np.arange(n)
+    if run_meta is not None:
+        run_meta["run_id"] = sweep["run_id"]
+        run_meta["run_triggers"] = sweep["run_triggers"]
     idx = FinexOrdering(eps=float(eps), minpts=int(minpts), order=order,
-                        pos=pos, C=C.astype(np.float64), R=R,
-                        N=N, F=F)
+                        pos=pos, C=C.astype(np.float64), R=sweep["R"],
+                        N=counts.astype(np.int64), F=sweep["F"])
     return idx, csr
 
 

@@ -14,7 +14,6 @@ queries against the DBSCAN oracle.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 
@@ -26,9 +25,9 @@ def canonical_core_partition(labels: np.ndarray, core: np.ndarray
                              ) -> set[frozenset]:
     out: dict[int, set] = {}
     for obj in np.nonzero(core)[0]:
-        l = labels[obj]
-        assert l >= 0, f"core object {obj} labeled noise"
-        out.setdefault(int(l), set()).add(int(obj))
+        lab = labels[obj]
+        assert lab >= 0, f"core object {obj} labeled noise"
+        out.setdefault(int(lab), set()).add(int(obj))
     return {frozenset(v) for v in out.values()}
 
 

@@ -24,11 +24,14 @@ from __future__ import annotations
 
 import json
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.build import finex_build
+from repro.core.build import finex_build, finex_sweep
+from repro.core.delta import (core_components, merge_insert_components,
+                              splice_delete, splice_insert, stitch,
+                              subset_core_distances, subset_csr)
 from repro.core.extract import query_clustering
 from repro.core.ordering import FinexOrdering
 from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
@@ -51,10 +54,26 @@ class FinexIndex:
                  engine: Optional[NeighborEngine] = None,
                  metric: MetricLike = "euclidean",
                  weights: Optional[np.ndarray] = None,
-                 fingerprint: Optional[str] = None):
+                 fingerprint: Optional[str] = None,
+                 version: int = 0, delta_log: Optional[list] = None,
+                 comp: Optional[np.ndarray] = None,
+                 run_id: Optional[np.ndarray] = None,
+                 run_triggers: Optional[np.ndarray] = None):
         self.ordering = ordering
         self.csr = csr
         self.engine = engine
+        # --- incremental-maintenance state (see repro.core.delta) ---
+        # version: monotonically bumped per mutation; delta_log: one
+        # report dict per applied insert/delete (the npz round-trips
+        # both). comp/run_id/run_triggers are the sweep decomposition
+        # that lets deltas re-sweep only affected components; indexes
+        # loaded from archives that predate them (None) still mutate
+        # exactly, through the full-resweep fallback.
+        self.version = int(version)
+        self.delta_log: list = list(delta_log) if delta_log else []
+        self._comp = comp
+        self._run_id = run_id
+        self._run_triggers = run_triggers
         # the resolved Metric instance travels with the index even when no
         # engine is attached, so the npz round-trip can persist its
         # registry name + params and engine re-attach resolves identically
@@ -124,8 +143,15 @@ class FinexIndex:
     @classmethod
     def from_engine(cls, engine: NeighborEngine, eps: float, minpts: int,
                     csr: Optional[CSRNeighborhoods] = None) -> "FinexIndex":
-        ordering, csr = finex_build(engine, eps, minpts, csr=csr)
-        return cls(ordering, csr, engine)
+        run_meta: dict = {}
+        ordering, csr = finex_build(engine, eps, minpts, csr=csr,
+                                    run_meta=run_meta)
+        # component labels (the delta-update seam) are computed lazily on
+        # the first mutation — build-once indexes never pay the O(nnz)
+        # union-find; the run decomposition falls out of the sweep free
+        return cls(ordering, csr, engine,
+                   run_id=run_meta["run_id"],
+                   run_triggers=run_meta["run_triggers"])
 
     # ----------------------------------------------------------- queries
     @property
@@ -163,6 +189,313 @@ class FinexIndex:
                                  stats=stats if stats is not None
                                  else self.query_stats)
 
+    # ---------------------------------------------- incremental updates
+    def insert(self, points, *, weights: Optional[np.ndarray] = None,
+               rebuild_threshold: float = 0.5) -> dict:
+        """Append new objects and repair the index — an exact delta.
+
+        The result is byte-identical to ``FinexIndex.build`` over the
+        concatenated dataset (new objects take ids n..n+m-1), for every
+        registered metric: only the new rows' (m, n+m) and (n, m)
+        distance strips are computed (``NeighborEngine
+        .strip_materialize``, same bit contract as the full sweep), the
+        CSR is spliced in place, core distances are recomputed only for
+        rows whose ε-neighborhood changed, and the ordering is repaired
+        by re-sweeping only the affected core-incidence components
+        (``repro.core.delta``).  When the affected set exceeds
+        ``rebuild_threshold`` (as a fraction of the *post-mutation*
+        object count) the ordering falls back —
+        loudly — to a full re-sweep over the spliced CSR, which is still
+        exact and still free of any O(n²) distance work.
+
+        ``points`` is whatever the index's metric canonicalizes (for
+        jaccard: sets packed against the dataset's universe). Returns
+        the report dict, which is also appended to ``delta_log`` (no-op
+        mutations return a ``mode="noop"`` report and are not logged).
+        Exactness of the delta path additionally assumes the metric's
+        ``pairwise`` is per-pair independent and bit-symmetric (true for
+        every built-in; see ``repro.core.delta``) — on any failure the
+        engine state is rolled back and the index left untouched.
+        """
+        if self.engine is None:
+            raise RuntimeError(
+                "index mutations need the distance engine; load the "
+                "index with its raw data (FinexIndex.load(..., data=...))")
+        eng = self.engine
+        metric = self._metric_obj
+        canon_new = metric.canonicalize(points)
+        m = int(canon_new[0].shape[0])
+        if m == 0:
+            return self._noop_report("insert")
+        n_old = self.n
+        was_core = np.isfinite(self.ordering.C)
+        # atomicity: the index's own fields are only assigned at the very
+        # end of _apply_mutation, so restoring the engine on any failure
+        # (bad weights, a non-bit-symmetric user metric tripping the
+        # component-closure check, ...) leaves the whole index untouched
+        snap = eng.state_snapshot()
+        try:
+            return self._insert_impl(canon_new, weights, m, n_old,
+                                     was_core, rebuild_threshold)
+        except BaseException:
+            eng.state_restore(snap)
+            raise
+
+    def _insert_impl(self, canon_new, weights, m: int, n_old: int,
+                     was_core: np.ndarray,
+                     rebuild_threshold: float) -> dict:
+        eng = self.engine
+        metric = self._metric_obj
+        # append_rows re-canonicalizes the tuple; canonicalize is
+        # documented idempotent (repro.metrics.Metric.canonicalize), so
+        # this second pass is a no-copy identity
+        eng.append_rows(canon_new, weights=weights)
+        n_new = n_old + m
+        new_ids = np.arange(n_old, n_new, dtype=np.int64)
+        # ONE compacted (m, n+m) strip: the new rows against everything,
+        # in exactly the full sweep's orientation and corpus extent
+        new_state = metric.take(eng._state, slice(n_old, n_new))
+        lens_a, cols_a, dists_a = eng.strip_materialize(new_state, self.eps)
+        # the old rows' gained entries come from the SAME strip,
+        # transposed: pairwise is bit-symmetric and the strip shares the
+        # full sweep's corpus extent, so d(p, i) carries exactly the bits
+        # a full build would write at (i, p) — a separate narrow-corpus
+        # (n, m) sweep could not promise that (XLA lowers skinny matmuls
+        # through different reduction orders)
+        rows_a = np.repeat(np.arange(m, dtype=np.int64), lens_a)
+        sel = cols_a < n_old
+        old_i = cols_a[sel].astype(np.int64)
+        by_row = np.argsort(old_i, kind="stable")   # keeps new-id order
+        add_lens = np.bincount(old_i, minlength=n_old)
+        add_cols = (rows_a[sel][by_row] + n_old).astype(np.int32)
+        add_dists = dists_a[sel][by_row]
+        csr_new = splice_insert(self.csr, add_lens, add_cols, add_dists,
+                                lens_a, cols_a, dists_a)
+        w = eng.weights
+        counts = np.empty(n_new, dtype=np.int64)
+        add_w = np.bincount(
+            old_i, weights=w[rows_a[sel] + n_old].astype(np.float64),
+            minlength=n_old).astype(np.int64)
+        counts[:n_old] = self.ordering.N + add_w
+        counts[n_old:] = np.bincount(
+            rows_a, weights=w[cols_a].astype(np.float64),
+            minlength=m).astype(np.int64)
+        touched_old = np.flatnonzero(add_lens)
+        C32 = np.empty(n_new, dtype=np.float32)
+        C32[:n_old] = self.ordering.C.astype(np.float32)
+        # core distances: a row's C moves only if an added neighbor lands
+        # strictly below it (weight added at or beyond the staircase hit
+        # leaves the selected value untouched; non-core rows have C=inf,
+        # so any gain qualifies them) — recompute just those rows
+        if touched_old.size:
+            starts = np.zeros(touched_old.size, dtype=np.int64)
+            np.cumsum(add_lens[touched_old][:-1], out=starts[1:])
+            min_add = np.minimum.reduceat(add_dists, starts)
+            moved = touched_old[min_add < C32[touched_old]]
+        else:
+            moved = touched_old
+        recompute = np.concatenate([moved, new_ids])
+        C32[recompute] = subset_core_distances(
+            csr_new, recompute, counts[recompute], w, self.minpts)
+        affected = None
+        base = None
+        comp_affected = None
+        if self._run_id is not None and self._run_triggers is not None:
+            comp = self._ensure_comp()
+            is_core = np.isfinite(C32)
+            # affected = components of the dirty rows, plus every
+            # component a newly-core row's edges now bind to them (new
+            # edges are all incident to dirty rows, so one step closes)
+            newly_core = touched_old[is_core[touched_old]
+                                     & ~was_core[touched_old]]
+            reach = subset_csr(csr_new, newly_core).indices
+            reach = reach[reach < n_old]
+            labels = np.unique(np.concatenate(
+                [comp[touched_old], comp[reach]]))
+            aff_mask = np.isin(comp, labels)
+            aff_old = np.flatnonzero(aff_mask)
+            affected = np.concatenate([aff_old, new_ids])
+            # inserts only merge components, so the affected region's new
+            # labels come from a contracted union-find over (affected old
+            # labels + new rows) — no subgraph re-traversal
+            comp_affected = merge_insert_components(
+                comp, labels, aff_old, is_core, n_old, m,
+                rows_a, cols_a, newly_core, csr_new)
+            base = {
+                "pos": np.concatenate(
+                    [self.ordering.pos, np.zeros(m, dtype=np.int64)]),
+                "R": np.concatenate(
+                    [self.ordering.R, np.full(m, np.inf)]),
+                "F": np.concatenate([self.ordering.F, new_ids]),
+                "run_id": np.concatenate(
+                    [self._run_id, np.full(m, -1, dtype=np.int64)]),
+                "triggers": self._run_triggers,
+                "comp": np.concatenate(
+                    [comp, np.zeros(m, dtype=np.int64)]),
+            }
+        return self._apply_mutation("insert", m, csr_new, counts, C32,
+                                    affected, base, rebuild_threshold,
+                                    comp_affected=comp_affected)
+
+    def delete(self, ids, *, rebuild_threshold: float = 0.5) -> dict:
+        """Remove objects by id and repair the index — an exact delta.
+
+        Byte-identical to ``FinexIndex.build`` over the dataset with
+        those rows removed (``np.delete`` id semantics: survivors are
+        renumbered compactly, order preserved).  Deletion computes *no*
+        distances at all: surviving CSR entries keep their original
+        bits, counts/core distances are recomputed only for rows that
+        lost a neighbor, and only the affected core-incidence components
+        are re-swept (cluster splits included). See :meth:`insert` for
+        the ``rebuild_threshold`` fallback.
+        """
+        if self.engine is None:
+            raise RuntimeError(
+                "index mutations need the distance engine; load the "
+                "index with its raw data (FinexIndex.load(..., data=...))")
+        ids = np.unique(np.asarray(ids, dtype=np.int64))
+        if ids.size == 0:
+            return self._noop_report("delete")
+        if ids[0] < 0 or ids[-1] >= self.n:
+            raise IndexError(
+                f"delete ids must lie in [0, {self.n}), got range "
+                f"[{ids[0]}, {ids[-1]}]")
+        if ids.size >= self.n:
+            raise ValueError("cannot delete every object in the index")
+        snap = self.engine.state_snapshot()
+        try:
+            return self._delete_impl(ids, rebuild_threshold)
+        except BaseException:
+            self.engine.state_restore(snap)
+            raise
+
+    def _delete_impl(self, ids: np.ndarray,
+                     rebuild_threshold: float) -> dict:
+        n_old = self.n
+        keep = np.ones(n_old, dtype=bool)
+        keep[ids] = False
+        csr_new, removed_w, min_removed = splice_delete(
+            self.csr, keep, self.engine.weights)
+        self.engine.keep_rows(keep)
+        idmap = np.cumsum(keep, dtype=np.int64) - 1
+        counts = self.ordering.N[keep] - removed_w
+        C32 = self.ordering.C.astype(np.float32)[keep]
+        # structurally-changed rows (an entry vanished), not weight-based:
+        # the ordering sweep reads row contents, so a row losing even a
+        # zero-weight neighbor is dirty
+        touched = np.flatnonzero(np.isfinite(min_removed))
+        # a row's C moves only if a loss reaches down to it: removals
+        # strictly beyond the staircase hit never shift the selected
+        # value, and non-core rows (C=inf, counts only shrink) stay
+        # non-core — recompute just the rows where min lost dist <= C
+        moved = np.flatnonzero(np.isfinite(C32) & (min_removed <= C32))
+        C32[moved] = subset_core_distances(
+            csr_new, moved, counts[moved], self.engine.weights,
+            self.minpts)
+        affected = None
+        base = None
+        if self._run_id is not None and self._run_triggers is not None:
+            comp = self._ensure_comp()
+            # edge removal never merges components, so the affected set
+            # is exactly the components holding a deleted or touched row
+            comp_kept = comp[keep]
+            labels = np.unique(np.concatenate(
+                [comp[ids], comp_kept[touched]]))
+            affected = np.flatnonzero(np.isin(comp_kept, labels))
+            base = {
+                "pos": self.ordering.pos[keep],
+                "R": self.ordering.R[keep],
+                "F": idmap[self.ordering.F[keep]],
+                "run_id": self._run_id[keep],
+                # triggers of dropped (affected/deleted) runs are never
+                # read by the stitch; map survivors, poison the rest
+                "triggers": np.where(keep[self._run_triggers],
+                                     idmap[self._run_triggers], -1),
+                "comp": comp_kept,
+            }
+        return self._apply_mutation("delete", int(ids.size), csr_new,
+                                    counts, C32, affected, base,
+                                    rebuild_threshold)
+
+    def _ensure_comp(self) -> Optional[np.ndarray]:
+        """Core-incidence component labels, computed on first use (one
+        O(nnz) weak-connectivity pass — deferred so build-once indexes
+        never pay it) and maintained incrementally by every mutation."""
+        if self._comp is None:
+            self._comp = core_components(
+                self.csr, np.isfinite(self.ordering.C))
+        return self._comp
+
+    def _noop_report(self, op: str) -> dict:
+        """Empty mutation: full report shape (callers index into it),
+        version unchanged, nothing appended to the delta log."""
+        return {"op": op, "count": 0, "n": int(self.n), "mode": "noop",
+                "affected": 0, "affected_frac": 0.0,
+                "version": self.version}
+
+    def _apply_mutation(self, op: str, moved: int, csr_new, counts, C32,
+                        affected, base, rebuild_threshold: float,
+                        comp_affected=None) -> dict:
+        """Shared tail of insert/delete: ordering repair + bookkeeping."""
+        n_new = counts.shape[0]
+        eps, minpts = self.ordering.eps, self.ordering.minpts
+        is_core = np.isfinite(C32)
+        frac = (affected.size / n_new) if affected is not None else 1.0
+        fallback = affected is None or frac > rebuild_threshold
+        if fallback:
+            if affected is None:
+                reason = ("index carries no run metadata (archive "
+                          "predates incremental maintenance)")
+            else:
+                reason = (f"affected fraction {frac:.2f} exceeds "
+                          f"rebuild_threshold {rebuild_threshold:g}")
+            warnings.warn(
+                f"FinexIndex.{op}: {reason}; falling back to a full "
+                "ordering re-sweep over the spliced CSR (still exact, "
+                "still no O(n^2) distance recomputation)")
+            sweep = finex_sweep(counts, csr_new, C32)
+            order = sweep["order"]
+            run_id, triggers = sweep["run_id"], sweep["run_triggers"]
+            R, F = sweep["R"], sweep["F"]
+            comp = core_components(csr_new, is_core)
+        else:
+            sweep = finex_sweep(counts, csr_new, C32, active=affected)
+            clean = np.ones(n_new, dtype=bool)
+            clean[affected] = False
+            order, run_id, triggers = stitch(
+                n_new, clean, base["pos"], base["run_id"],
+                base["triggers"], sweep)
+            R = base["R"].copy()
+            R[affected] = sweep["R"][affected]
+            F = base["F"].copy()
+            F[affected] = sweep["F"][affected]
+            comp = base["comp"].copy()
+            if comp_affected is None:
+                # deletions can split a component: re-label the affected
+                # subgraph by traversal (inserts pass the contracted
+                # union-find result instead — merges only)
+                comp_affected = core_components(
+                    csr_new, is_core[affected], rows=affected)
+            comp[affected] = (int(comp.max()) + 1) + comp_affected
+        pos = np.empty(n_new, dtype=np.int64)
+        pos[order] = np.arange(n_new)
+        self.ordering = FinexOrdering(
+            eps=eps, minpts=minpts, order=order, pos=pos,
+            C=C32.astype(np.float64), R=R, N=counts.astype(np.int64), F=F)
+        self.csr = csr_new
+        self.weights = self.engine.weights
+        self._comp, self._run_id, self._run_triggers = comp, run_id, triggers
+        self._data_fingerprint = None    # the engine's (rehashed) wins
+        self.version += 1
+        report = {"op": op, "count": int(moved), "n": int(n_new),
+                  "mode": "resweep" if fallback else "delta",
+                  "affected": (int(affected.size) if affected is not None
+                               else int(n_new)),
+                  "affected_frac": round(float(frac), 4),
+                  "version": self.version}
+        self.delta_log.append(report)
+        return dict(report)
+
     def fingerprint(self) -> Optional[str]:
         """Dataset identity (metric + shape + dtype + content hash) of the
         data this index was built over; ``None`` only for engine-less
@@ -188,6 +521,8 @@ class FinexIndex:
                 if self.engine is not None else None,
             "query_candidates": self.query_stats.candidates,
             "query_verification_pairs": self.query_stats.verification_pairs,
+            "version": self.version,
+            "mutations": len(self.delta_log),
         }
 
     # ----------------------------------------------------------- persist
@@ -208,6 +543,20 @@ class FinexIndex:
             "metric_params": np.str_(
                 json.dumps(self._metric_obj.params, sort_keys=True)),
             "fingerprint": np.str_(self.fingerprint() or ""),
+            # incremental-maintenance state: the mutation counter and the
+            # delta log always travel; the sweep decomposition arrays are
+            # included when present so a reloaded index keeps taking the
+            # fast component-local delta path (absent -> full-resweep
+            # fallback, still exact)
+            "version": np.int64(self.version),
+            "delta_log": np.str_(json.dumps(self.delta_log)),
+            **({"run_id": self._run_id,
+                "run_triggers": self._run_triggers}
+               if self._run_id is not None
+               and self._run_triggers is not None else {}),
+            # comp is lazy: only present once a mutation (or load of a
+            # mutated archive) has materialized it
+            **({"comp": self._comp} if self._comp is not None else {}),
         }
 
     @classmethod
@@ -270,8 +619,16 @@ class FinexIndex:
                         msg + " (pass fingerprint_mismatch='warn' to "
                               "attach anyway)")
                 warnings.warn(msg)
+        def _opt(key):
+            return np.asarray(z[key]) if key in z else None
+
+        delta_raw = str(z["delta_log"]) if "delta_log" in z else ""
         return cls(ordering, csr, engine, metric=metric, weights=weights,
-                   fingerprint=stored_fp or None)
+                   fingerprint=stored_fp or None,
+                   version=int(z["version"]) if "version" in z else 0,
+                   delta_log=json.loads(delta_raw) if delta_raw else [],
+                   comp=_opt("comp"), run_id=_opt("run_id"),
+                   run_triggers=_opt("run_triggers"))
 
     def save(self, path: str) -> None:
         """Serialize ordering + CSR + weights as one compressed npz."""

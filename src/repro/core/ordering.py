@@ -16,7 +16,6 @@ serializable, and the Alg.-1 linear scan vectorizes over it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 

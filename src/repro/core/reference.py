@@ -296,13 +296,13 @@ def reference_eps_star_query(index: FinexOrdering, engine: NeighborEngine,
         last = np.full(m, -1, dtype=np.int64)
         pos = o.pos
         for obj in range(o.n):
-            l = labels[obj]
-            if l >= 0:
+            lab = labels[obj]
+            if lab >= 0:
                 p = pos[obj]
-                if p < first[l]:
-                    first[l] = p
-                if p > last[l]:
-                    last[l] = p
+                if p < first[lab]:
+                    first[lab] = p
+                if p > last[lab]:
+                    last[lab] = p
         return first, last
 
     eps_star = float(np.float32(eps_star))
@@ -323,9 +323,9 @@ def reference_eps_star_query(index: FinexOrdering, engine: NeighborEngine,
     core_star = index.C <= eps_star
     cores_by_S: dict = {}
     for obj in np.nonzero(core_star)[0]:
-        l = labels[obj]
-        if l >= 0:
-            cores_by_S.setdefault(int(l), []).append(int(obj))
+        lab = labels[obj]
+        if lab >= 0:
+            cores_by_S.setdefault(int(lab), []).append(int(obj))
 
     sparse_of_S = np.full(m, -1, dtype=np.int64)
     for i, cores in cores_by_S.items():

@@ -29,12 +29,11 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS, SHAPES, RunConfig, get_arch
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import auto_n_micro, build_lowerable, dp_size
+from repro.launch.specs import auto_n_micro, build_lowerable
 
 # --- TPU v5e-class hardware constants (mandate §Roofline) ---
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -12,7 +12,6 @@ No array is ever allocated: everything is ShapeDtypeStruct.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -23,8 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models.transformer import (cache_shapes, cache_specs, decode_step,
                                       forward, param_shapes)
-from repro.sharding import (batch_spec, check_divisible, dp_axes,
-                            param_shardings)
+from repro.sharding import check_divisible, dp_axes, param_shardings
 from repro.train.optimizer import AdamWState
 from repro.train.step import TrainState, make_train_step
 

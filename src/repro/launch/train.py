@@ -18,18 +18,16 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import ARCHS, RunConfig, ShapeConfig, get_arch
+from repro.configs import RunConfig, ShapeConfig, get_arch
 from repro.data.tokens import TokenStream
-from repro.train.optimizer import adamw_init, cosine_schedule, wsd_schedule
-from repro.train.step import TrainState, init_state, make_train_step
+from repro.train.optimizer import cosine_schedule, wsd_schedule
+from repro.train.step import init_state, make_train_step
 
 
 def main(argv=None) -> dict:

@@ -20,13 +20,10 @@ oracle and what the CPU dry-run lowers (mosaic cannot target CPU).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:

@@ -11,7 +11,6 @@ maps paths to PartitionSpecs. Stacked group dims lead every layer param.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -23,7 +23,6 @@ compile on the 256-chip and 512-chip meshes like every LM cell.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

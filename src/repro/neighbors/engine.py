@@ -195,6 +195,11 @@ class NeighborEngine:
         if weights is None:
             weights = np.ones(self.n, dtype=np.int64)
         self.weights = np.asarray(weights, dtype=np.int64)
+        if self.weights.size and self.weights.min() < 1:
+            # weights are duplicate multiplicities (paper §6): a count
+            # below 1 has no meaning and would silently skew every
+            # neighborhood count and core distance
+            raise ValueError("duplicate weights must be >= 1")
         # unit weights (no duplicates) let counts come straight from row
         # lengths instead of weighted reductions over the CSR
         self.unit_weights = bool(np.all(self.weights == 1))
@@ -320,6 +325,25 @@ class NeighborEngine:
                 minlength=self.n).astype(np.int64)
         return counts, csr
 
+    def _mask_extract(self, hit, payload, nc: int, flat_dtype):
+        """One tile of the mask path: bool hit plane -> (per-row lens,
+        sorted cols, in-flight distance gather, #survivors, host bytes).
+
+        Shared by the full sweep and ``strip_materialize`` — the two are
+        required to produce byte-identical entries for the incremental
+        insert contract, so the extraction must be one piece of code.
+        """
+        mask = np.asarray(hit)
+        flat = np.flatnonzero(mask)
+        lens = np.diff(np.searchsorted(
+            flat, np.arange(mask.shape[0] + 1, dtype=np.int64) * nc))
+        pad = _pow2_pad(flat.size)
+        fpad = np.zeros(pad, dtype=flat_dtype)
+        fpad[:flat.size] = flat
+        dv = self.metric.gather_pairs(payload, jnp.asarray(fpad))
+        cols = (flat % nc).astype(np.int32)
+        return lens, cols, dv, flat.size, mask.nbytes + fpad.nbytes + pad * 4
+
     def _sweep_mask(self, eps: float):
         """Compacted sweep, mask path: fused threshold plane + O(nnz)
         surviving-pair gather, two-deep pipelined (tile k+1's device work
@@ -344,17 +368,12 @@ class NeighborEngine:
             if i + 1 < len(tiles):
                 pend = dispatch(tiles[i + 1])      # overlaps the host work
             self.distance_rows_computed += e - s
-            mask = np.asarray(hit)
-            flat = np.flatnonzero(mask)
-            lens[s:e] = np.diff(np.searchsorted(
-                flat, np.arange(e - s + 1, dtype=np.int64) * n))
-            pad = _pow2_pad(flat.size)
-            fpad = np.zeros(pad, dtype=flat_dtype)
-            fpad[:flat.size] = flat
-            dv = self.metric.gather_pairs(payload, jnp.asarray(fpad))
-            ind_chunks.append((flat % n).astype(np.int32))
-            pending_gather.append((flat.size, dv))
-            host_bytes += mask.nbytes + fpad.nbytes + pad * 4
+            tl, cols, dv, k, nbytes = self._mask_extract(
+                hit, payload, n, flat_dtype)
+            lens[s:e] = tl
+            ind_chunks.append(cols)
+            pending_gather.append((k, dv))
+            host_bytes += nbytes
         dist_chunks = [np.asarray(dv)[:k] for k, dv in pending_gather]
         self.last_materialize = {
             "mode": "mask", "metric": self.metric.name,
@@ -433,6 +452,126 @@ class NeighborEngine:
             "host_bytes_dense": self._dense_sweep_bytes(),
         }
         return lens, ind_chunks, dist_chunks
+
+    def strip_materialize(self, rows_state, eps: float, corpus=None,
+                          batch_rows: Optional[int] = None
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """ε-compacted neighborhoods of arbitrary query rows vs ``corpus``
+        (default: the full dataset state) — the (m, n) strip sweep behind
+        incremental index maintenance.
+
+        Same bit contract as the mask path of :meth:`materialize`: the
+        per-pair distance bits of every registered metric depend only on
+        that pair's rows (never on the tile extent or the other rows in
+        the tile), so strip entries are byte-identical to the matching
+        entries of a full sweep over the mutated dataset.
+
+        Returns ``(lens, cols, dists)``: per-query-row survivor counts
+        plus the flat row-major (col, dist) pairs, cols ascending within
+        each row (the CSR ordering).
+        """
+        corpus = self._state if corpus is None else corpus
+        nc = int(corpus[0].shape[0])
+        nq = int(rows_state[0].shape[0])
+        if batch_rows is None:
+            # strips are narrow: tile by pair budget (~2^24) instead of
+            # the cache-sized sweep default, so a single-row insert is a
+            # couple of dispatches rather than n/batch_rows of them
+            batch_rows = max(self.batch_rows, (1 << 24) // max(nc, 1))
+        thresh = self.metric.mask_threshold(eps)
+        lens = np.zeros(nq, dtype=np.int64)
+        cols_chunks: list = []
+        dist_chunks: list = []
+        flat_dtype = np.int32 if batch_rows * nc < 2 ** 31 else np.int64
+        for s in range(0, nq, batch_rows):
+            e = min(s + batch_rows, nq)
+            self.distance_rows_computed += e - s
+            hit, payload = self.metric.mask_tile(
+                self.metric.take(rows_state, slice(s, e)), corpus, thresh)
+            tl, cols, dv, k, _ = self._mask_extract(
+                hit, payload, nc, flat_dtype)
+            lens[s:e] = tl
+            cols_chunks.append(cols)
+            dist_chunks.append(np.asarray(dv)[:k])
+        cols = (np.concatenate(cols_chunks) if cols_chunks
+                else np.zeros(0, dtype=np.int32))
+        dists = (np.concatenate(dist_chunks) if dist_chunks
+                 else np.zeros(0, dtype=np.float32))
+        return lens, cols, dists
+
+    # ------------------------------------------------------ row mutation
+    def state_snapshot(self):
+        """Cheap (reference-only) snapshot of the mutable dataset state —
+        ``FinexIndex.insert``/``delete`` restore it if a delta fails
+        midway, so the engine can never end up holding a different row
+        set than the ordering it is attached to."""
+        return (self._state, self.weights, self.n, self.unit_weights,
+                self._w_dev, self._fingerprint)
+
+    def state_restore(self, snap) -> None:
+        (self._state, self.weights, self.n, self.unit_weights,
+         self._w_dev, self._fingerprint) = snap
+
+    def append_rows(self, data, weights: Optional[np.ndarray] = None) -> int:
+        """Extend the dataset with new rows (incremental insert support).
+
+        ``data`` is anything the metric canonicalizes; its canonical
+        arrays must match the existing rows' trailing shape and dtype
+        (for jaccard: pack new sets against the same universe). Returns
+        the number of appended rows. Invalidate-and-recompute semantics
+        for the fingerprint: the engine hashes the mutated dataset on
+        next use.
+        """
+        canon_new = self.metric.canonicalize(data)
+        canon_old = tuple(np.asarray(a) for a in self._state)
+        if len(canon_new) != len(canon_old):
+            raise ValueError(
+                f"appended data canonicalizes to {len(canon_new)} arrays, "
+                f"dataset has {len(canon_old)}")
+        for a_old, a_new in zip(canon_old, canon_new):
+            if a_old.shape[1:] != a_new.shape[1:] \
+                    or a_old.dtype != a_new.dtype:
+                raise ValueError(
+                    "appended rows have incompatible canonical shape/dtype "
+                    f"{a_new.shape[1:]}/{a_new.dtype} vs dataset "
+                    f"{a_old.shape[1:]}/{a_old.dtype} (for jaccard, pack "
+                    "new sets with the dataset's universe)")
+        m = int(canon_new[0].shape[0])
+        if weights is None:
+            w_new = np.ones(m, dtype=np.int64)
+        else:
+            w_new = np.asarray(weights, dtype=np.int64)
+            if w_new.shape != (m,):
+                raise ValueError(
+                    f"weights shape {w_new.shape} != ({m},)")
+            if w_new.size and w_new.min() < 1:
+                raise ValueError("duplicate weights must be >= 1")
+        self._state = self.metric.device_state(tuple(
+            np.concatenate([o, a]) for o, a in zip(canon_old, canon_new)))
+        self.weights = np.concatenate([self.weights, w_new])
+        self.n += m
+        self.unit_weights = bool(np.all(self.weights == 1))
+        self._w_dev = jnp.asarray(self.weights.astype(np.float32))
+        self._fingerprint = None
+        return m
+
+    def keep_rows(self, keep: np.ndarray) -> None:
+        """Restrict the dataset to ``keep`` (bool mask over rows) —
+        incremental delete support. Surviving rows get compacted ids in
+        the original order (``np.delete`` semantics)."""
+        keep = np.asarray(keep, dtype=bool)
+        if keep.shape != (self.n,):
+            raise ValueError(f"keep mask shape {keep.shape} != ({self.n},)")
+        idx = np.flatnonzero(keep)
+        if idx.size == 0:
+            raise ValueError("cannot delete every object")
+        self._state = self.metric.device_state(tuple(
+            np.asarray(a)[idx] for a in self._state))
+        self.weights = self.weights[idx]
+        self.n = int(idx.size)
+        self.unit_weights = bool(np.all(self.weights == 1))
+        self._w_dev = jnp.asarray(self.weights.astype(np.float32))
+        self._fingerprint = None
 
     def _dense_sweep_bytes(self) -> int:
         """What the pre-compaction sweep moved to the host: a float32

@@ -87,6 +87,7 @@ class IndexStore:
         self.builds = 0
         self.spills = 0
         self.drops = 0
+        self.rekeys = 0
 
     # ------------------------------------------------------------ lookup
     def __len__(self) -> int:
@@ -147,6 +148,28 @@ class IndexStore:
         self._admit(key, index)
         return key
 
+    def rekey(self, index: FinexIndex) -> IndexKey:
+        """Re-register a mutated index under its post-mutation identity.
+
+        ``FinexIndex.insert``/``delete`` change the dataset fingerprint,
+        so a resident entry would otherwise keep serving the mutated
+        index under the *old* dataset's key — a ``get_or_build`` for the
+        original data would return wrong clusterings. Call this after
+        mutating a stored index: every resident entry holding this index
+        object is invalidated and the index is re-admitted under its new
+        fingerprint (spilled snapshots of the old state stay on disk —
+        they are still exact for the old dataset). ``SweepPlanner``s
+        re-read the ordering per sweep, so a re-keyed index keeps
+        answering exactly. Returns the new key.
+        """
+        stale = [k for k, v in self._resident.items() if v is index]
+        for k in stale:
+            del self._resident[k]
+        key = IndexKey.of_index(index)
+        self.rekeys += 1
+        self._admit(key, index)
+        return key
+
     def _fingerprint_of(self, data, metric: MetricLike, weights) -> str:
         """``dataset_fingerprint``, memoized by (array identity, metric)
         for the common serving shape: one plain unweighted array
@@ -183,6 +206,16 @@ class IndexStore:
         if self.manager is None:
             self.drops += 1
             return
+        fp = index.fingerprint()
+        if fp is not None and IndexKey.of_index(index) != key:
+            # the index was mutated after admission and never rekey()'d:
+            # spilling the post-mutation state under the pre-mutation key
+            # would poison every future lookup of the original dataset
+            # (the reload's fingerprint check would fail forever instead
+            # of rebuilding) — drop it; the caller still holds the object
+            # and can rekey() it back in
+            self.drops += 1
+            return
         if key not in self._spilled:
             # allocate the step from the manager's live listing: the step
             # namespace is shared with training checkpoints, so a number
@@ -204,4 +237,5 @@ class IndexStore:
             "builds": self.builds,
             "spills": self.spills,
             "drops": self.drops,
+            "rekeys": self.rekeys,
         }

@@ -7,7 +7,7 @@ paper (arXiv:2404.06395); everything else defaults to cosine.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ DP gradient reduction happens once per step on the accumulated grads
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax

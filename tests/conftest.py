@@ -1,7 +1,6 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — the main test session must
 see exactly 1 device; multi-device tests spawn subprocesses with their own
 flags (tests/test_distributed.py)."""
-import numpy as np
 import pytest
 
 from repro.data.synthetic import gaussian_mixture, heavy_tail_sets

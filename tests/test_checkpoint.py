@@ -1,17 +1,14 @@
 """Fault tolerance: atomic checkpoints, bit-exact resume, preemption
 survival, elastic restore."""
-import json
 import os
 import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import RunConfig, ShapeConfig, get_arch
+from repro.configs import get_arch
 from repro.train.step import init_state
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

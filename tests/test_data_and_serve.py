@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import RunConfig, ShapeConfig, get_arch
-from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
 from repro.data.tokens import TokenStream
 from repro.models.transformer import forward, init_params
 from repro.serve.engine import Request, ServeEngine

@@ -70,7 +70,6 @@ def test_chunked_attention_exact(window, causal):
 def test_ssd_chunk_size_invariance():
     """The chunked SSD scan must be exact for any chunk size."""
     from repro.models.mamba2 import SSMParams, ssd_forward
-    from repro.models.transformer import param_shapes
     cfg = ModelConfig("s", "ssm", n_layers=1, d_model=32, n_heads=0,
                       n_kv_heads=0, d_ff=0, vocab=64, ssm_state=8,
                       ssm_headdim=16, ssm_chunk=8, tie_embeddings=True)

@@ -4,9 +4,9 @@ claim of the paper (Thm 5.6, §5.4, Cor 5.5)."""
 import numpy as np
 import pytest
 
-from repro.core import (assert_equivalent_exact, dbscan_from_csr,
-                        eps_star_query, finex_build, minpts_star_query,
-                        query_clustering, QueryStats)
+from repro.core import (
+    assert_equivalent_exact, dbscan_from_csr, eps_star_query,
+    minpts_star_query, query_clustering, QueryStats)
 
 
 EPS_V, MINPTS_V = 0.35, 8

@@ -2,7 +2,6 @@
 bytes right — verified against computations with known structure."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze_hlo
 

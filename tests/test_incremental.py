@@ -1,0 +1,370 @@
+"""Incremental maintenance property suite: insert/delete deltas must be
+byte-identical to a fresh ``FinexIndex.build`` over the mutated dataset —
+ordering quintuple, CSR, run decomposition and query results alike — for
+every registered metric, through both the component-local delta path and
+the (loud) full-resweep fallback."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import FinexIndex
+from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
+from repro.metrics import register_metric
+from repro.neighbors.bitset import pack_sets
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _chebyshev(q, c):
+    return jnp.max(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+
+
+try:
+    register_metric("incr-cheb", _chebyshev)
+except ValueError:
+    pass  # already registered by a previous import of this module
+
+
+def _vectors(n, seed):
+    return gaussian_mixture(n, d=4, k=5, seed=seed), None
+
+
+def _sets(n, seed):
+    sets, w = heavy_tail_sets(n, seed=seed)
+    return pack_sets(sets, universe=512), w
+
+
+# (metric, dataset factory, eps, minpts) — euclidean, jaccard's packed
+# bitmap tuple state, cosine, and a register_metric user distance
+CASES = [
+    ("euclidean", _vectors, 0.35, 8),
+    ("jaccard", _sets, 0.4, 8),
+    ("cosine", _vectors, 0.02, 6),
+    ("incr-cheb", _vectors, 0.3, 6),
+]
+IDS = [c[0] for c in CASES]
+
+
+def take_rows(data, sel):
+    if isinstance(data, tuple):
+        return tuple(a[sel] for a in data)
+    return data[sel]
+
+
+def n_rows(data):
+    return (data[0] if isinstance(data, tuple) else data).shape[0]
+
+
+def build(data, case, weights=None):
+    metric, _, eps, minpts = case
+    return FinexIndex.build(
+        data, eps=eps, minpts=minpts, metric=metric, weights=weights
+    )
+
+
+def assert_identical(got, want, what=""):
+    """Byte-for-byte equality of everything the index serves from."""
+    a, b = got.ordering, want.ordering
+    for f in ("order", "pos", "C", "R", "N", "F"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (what, f)
+    for f in ("indptr", "indices", "dists"):
+        got_f, want_f = getattr(got.csr, f), getattr(want.csr, f)
+        assert np.array_equal(got_f, want_f), (what, f)
+    assert np.array_equal(got.weights, want.weights), (what, "weights")
+    # the run decomposition is part of the contract: a stitched index
+    # must keep taking the fast delta path exactly like a fresh build
+    assert np.array_equal(got._run_id, want._run_id), (what, "run_id")
+    triggers_equal = np.array_equal(got._run_triggers, want._run_triggers)
+    assert triggers_equal, (what, "run_triggers")
+    # component labels may be numbered differently — same partition
+    # (lazy on fresh builds: _ensure_comp materializes them on demand)
+    pair = {}
+    got_comp, want_comp = got._ensure_comp(), want._ensure_comp()
+    for la, lb in zip(got_comp.tolist(), want_comp.tolist()):
+        assert pair.setdefault(la, lb) == lb, (what, "comp partition")
+    assert len(set(pair.values())) == len(pair), (what, "comp injective")
+    labels_equal = np.array_equal(got.clustering(), want.clustering())
+    assert labels_equal, (what, "clustering")
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_insert_matches_fresh_build(case):
+    """Randomized inserts (single and batched, with duplicate weights on
+    the weighted dataset) pin byte-identical results vs a fresh build."""
+    _, make, _, _ = case
+    for seed, m in [(0, 1), (1, 7), (2, 25)]:
+        data, w = make(220, seed)
+        n = n_rows(data)
+        m = min(m, n // 4)
+        head, tail = np.arange(n) < n - m, np.arange(n) >= n - m
+        idx = build(
+            take_rows(data, head), case, weights=None if w is None else w[head]
+        )
+        rep = idx.insert(
+            take_rows(data, tail), weights=None if w is None else w[tail]
+        )
+        assert rep["op"] == "insert" and rep["count"] == m
+        assert idx.version == 1 and idx.delta_log == [rep]
+        fresh = build(data, case, weights=w)
+        assert_identical(idx, fresh, f"insert seed={seed} m={m}")
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_delete_matches_fresh_build(case):
+    """Randomized deletes — including core points — pin byte-identical
+    results (splits and all) vs a fresh build on the surviving rows."""
+    _, make, _, _ = case
+    for seed, m in [(3, 1), (4, 9), (5, 40)]:
+        data, w = make(220, seed)
+        n = n_rows(data)
+        rng = np.random.default_rng(seed)
+        ids = rng.choice(n, size=min(m, n // 3), replace=False)
+        keep = np.ones(n, dtype=bool)
+        keep[ids] = False
+        idx = build(data, case, weights=w)
+        cores_gone = np.isfinite(idx.ordering.C[ids]).sum()
+        rep = idx.delete(ids)
+        assert rep["op"] == "delete" and rep["count"] == ids.size
+        fresh = build(
+            take_rows(data, keep), case, weights=None if w is None else w[keep]
+        )
+        assert_identical(idx, fresh, f"delete seed={seed} cores={cores_gone}")
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_mutation_chain_matches_fresh_build(case):
+    """insert -> delete -> insert chains stay exact and keep exact
+    eps*/MinPts*-query behaviour at every step."""
+    metric, make, eps, minpts = case
+    data, w = make(240, seed=6)
+    n = n_rows(data)
+    cut = n - 12
+    idx = build(
+        take_rows(data, np.arange(n) < cut),
+        case,
+        weights=None if w is None else w[:cut],
+    )
+    idx.insert(
+        take_rows(data, np.arange(n) >= cut),
+        weights=None if w is None else w[cut:],
+    )
+    ids = np.arange(0, n, 31)
+    keep = np.ones(n, dtype=bool)
+    keep[ids] = False
+    idx.delete(ids)
+    fresh = build(
+        take_rows(data, keep), case, weights=None if w is None else w[keep]
+    )
+    assert_identical(idx, fresh, "chain")
+    assert idx.version == 2 and len(idx.delta_log) == 2
+    assert np.array_equal(idx.eps_star(eps * 0.6), fresh.eps_star(eps * 0.6))
+    assert np.array_equal(
+        idx.minpts_star(minpts * 3), fresh.minpts_star(minpts * 3)
+    )
+
+
+def _bridge_dataset():
+    """Two dense blobs joined only through one core bridge point."""
+    rng = np.random.default_rng(9)
+    a = rng.normal(scale=0.05, size=(40, 2)).astype(np.float32)
+    b = (rng.normal(scale=0.05, size=(40, 2)) + [2.0, 0.0]).astype(np.float32)
+    bridge = np.array([[0.5, 0.0], [1.0, 0.0], [1.5, 0.0]], np.float32)
+    return np.concatenate([a, b, bridge])
+
+
+def _n_clusters(labels):
+    return int(labels.max()) + 1 if (labels >= 0).any() else 0
+
+
+def test_delete_core_bridge_splits_and_insert_merges():
+    """Deleting the core bridge splits the merged cluster in two; putting
+    it back merges them again — both as exact deltas."""
+    x = _bridge_dataset()
+    n = x.shape[0]
+    idx = FinexIndex.build(x, eps=0.6, minpts=3)
+    assert _n_clusters(idx.clustering()) == 1
+    bridge_ids = np.array([n - 3, n - 2, n - 1])
+    assert np.isfinite(idx.ordering.C[bridge_ids]).all()
+
+    idx.delete(bridge_ids)
+    fresh = FinexIndex.build(x[: n - 3], eps=0.6, minpts=3)
+    assert_identical(idx, fresh, "bridge delete")
+    assert _n_clusters(idx.clustering()) == 2, "core deletion must split"
+
+    rep = idx.insert(x[n - 3 :])
+    assert rep["count"] == 3
+    fresh = FinexIndex.build(x, eps=0.6, minpts=3)
+    assert_identical(idx, fresh, "bridge insert")
+    assert _n_clusters(idx.clustering()) == 1, "insert must re-merge"
+
+
+def test_rebuild_fallback_is_loud_and_exact():
+    """rebuild_threshold=0 forces the full-resweep fallback: a warning is
+    raised and the result stays byte-identical."""
+    x, _ = _vectors(200, seed=12)
+    idx = FinexIndex.build(x[:195], eps=0.35, minpts=8)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = idx.insert(x[195:], rebuild_threshold=0.0)
+    assert rep["mode"] == "resweep"
+    assert any("re-sweep" in str(w.message) for w in caught)
+    fresh = FinexIndex.build(x, eps=0.35, minpts=8)
+    assert_identical(idx, fresh, "forced fallback")
+
+
+def test_legacy_archive_without_run_metadata_falls_back(tmp_path):
+    """Archives that predate incremental maintenance still mutate exactly
+    through the (loud) resweep fallback, which regenerates the metadata."""
+    x, _ = _vectors(150, seed=13)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    arrs = idx.to_arrays()
+    for k in ("comp", "run_id", "run_triggers", "version", "delta_log"):
+        arrs.pop(k, None)
+    legacy = FinexIndex.from_arrays(arrs, data=x)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = legacy.delete(np.array([3]))
+    assert rep["mode"] == "resweep"
+    assert any("run metadata" in str(w.message) for w in caught)
+    fresh = FinexIndex.build(np.delete(x, [3], axis=0), eps=0.35, minpts=8)
+    assert_identical(legacy, fresh, "legacy")
+    # the fallback regenerated run metadata: next mutation is a delta
+    rep = legacy.delete(np.array([7]))
+    assert rep["mode"] == "delta"
+
+
+def test_npz_roundtrip_carries_delta_log(tmp_path):
+    x, _ = _vectors(150, seed=14)
+    idx = FinexIndex.build(x[:145], eps=0.35, minpts=8)
+    idx.insert(x[145:])
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    back = FinexIndex.load(path, data=x)
+    assert back.version == 1
+    assert back.delta_log == idx.delta_log
+    assert back.stats()["version"] == 1 and back.stats()["mutations"] == 1
+    # and the reloaded index keeps mutating on the fast path, exactly
+    rep = back.delete(np.array([0]))
+    idx.delete(np.array([0]))
+    assert rep["mode"] == idx.delta_log[-1]["mode"]
+    assert_identical(back, idx, "post-roundtrip mutation")
+
+
+def test_mutation_validation_errors():
+    x, _ = _vectors(120, seed=15)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    assert idx.insert(x[:0])["mode"] == "noop"
+    assert idx.delete(np.array([], dtype=np.int64))["mode"] == "noop"
+    assert idx.version == 0 and idx.delta_log == []
+    with pytest.raises(IndexError, match="out of range|must lie"):
+        idx.delete(np.array([120]))
+    with pytest.raises(ValueError, match="every object"):
+        idx.delete(np.arange(120))
+    lean = FinexIndex.from_arrays(idx.to_arrays())  # engine-less
+    with pytest.raises(RuntimeError, match="distance engine"):
+        lean.insert(x[:1])
+    with pytest.raises(RuntimeError, match="distance engine"):
+        lean.delete(np.array([0]))
+
+
+def test_store_rekey_after_mutation(tmp_path):
+    """A mutated resident index must be invalidated/re-keyed so sweeps
+    and lookups stay exact for both the old and the new dataset."""
+    from repro.service import IndexStore, SweepPlanner
+
+    x, _ = _vectors(160, seed=16)
+    store = IndexStore(capacity=4)
+    idx, outcome = store.get_or_build(x[:155], eps=0.35, minpts=8)
+    assert outcome == "build"
+    idx.insert(x[155:])
+    key = store.rekey(idx)
+    assert store.stats()["rekeys"] == 1
+    # new identity: presenting the mutated dataset is a warm hit ...
+    hit, outcome = store.get_or_build(x, eps=0.35, minpts=8)
+    assert outcome == "hit" and hit is idx
+    assert key.fingerprint == idx.fingerprint()
+    # ... and the old dataset no longer maps to the mutated index
+    old, outcome = store.get_or_build(x[:155], eps=0.35, minpts=8)
+    assert outcome == "build" and old is not idx
+    # planner sweeps over the re-keyed index stay byte-exact
+    grid = [("eps", 0.2), ("minpts", 16)]
+    rows = SweepPlanner(idx).sweep(grid)
+    assert np.array_equal(rows[0], idx.eps_star(0.2))
+    assert np.array_equal(rows[1], idx.minpts_star(16))
+
+
+def test_store_never_spills_mutated_index_under_stale_key(tmp_path):
+    """Evicting a mutated-but-not-rekeyed index must NOT write the
+    post-mutation state under the pre-mutation key: the original
+    dataset's key would reload-fail forever instead of rebuilding."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.service import IndexStore
+
+    x, _ = _vectors(160, seed=17)
+    y, _ = _vectors(120, seed=18)
+    store = IndexStore(capacity=1, manager=CheckpointManager(str(tmp_path)))
+    idx, _ = store.get_or_build(x[:155], eps=0.35, minpts=8)
+    idx.insert(x[155:])  # mutated in place, rekey() not called yet
+    store.get_or_build(y, eps=0.35, minpts=8)  # evicts the mutated idx
+    assert store.stats()["drops"] == 1 and store.stats()["spills"] == 0
+    # the original dataset's key must rebuild cleanly, not reload-fail
+    again, outcome = store.get_or_build(x[:155], eps=0.35, minpts=8)
+    assert outcome == "build"
+    fresh = FinexIndex.build(x[:155], eps=0.35, minpts=8)
+    assert np.array_equal(again.clustering(), fresh.clustering())
+    # the caller still holds the mutated object: rekey admits it back
+    store.rekey(idx)
+    hit, outcome = store.get_or_build(x, eps=0.35, minpts=8)
+    assert outcome == "hit" and hit is idx
+
+
+def test_nonpositive_duplicate_weights_rejected():
+    """Weights are duplicate multiplicities — a 0 would silently skew
+    counts, core distances and the delete-repair bookkeeping."""
+    x, _ = _vectors(40, seed=19)
+    w = np.ones(40, dtype=np.int64)
+    w[3] = 0
+    with pytest.raises(ValueError, match="weights must be >= 1"):
+        FinexIndex.build(x, eps=0.35, minpts=8, weights=w)
+    idx = FinexIndex.build(x[:38], eps=0.35, minpts=8)
+    with pytest.raises(ValueError, match="weights must be >= 1"):
+        idx.insert(x[38:], weights=np.zeros(2, dtype=np.int64))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_hypothesis_mutations_match_fresh_build(data_strategy):
+        """Property form (runs where hypothesis is installed): any small
+        insert/delete against a fixed base dataset equals a fresh build."""
+        x, _ = _vectors(140, seed=42)
+        n = x.shape[0]
+        cut = data_strategy.draw(st.integers(min_value=n - 8, max_value=n - 1))
+        idx = FinexIndex.build(x[:cut], eps=0.35, minpts=8)
+        idx.insert(x[cut:])
+        drop = data_strategy.draw(
+            st.lists(
+                st.integers(min_value=0, max_value=n - 1),
+                min_size=1,
+                max_size=6,
+                unique=True,
+            )
+        )
+        keep = np.ones(n, dtype=bool)
+        keep[drop] = False
+        if not keep.any():
+            return
+        idx.delete(np.asarray(drop))
+        fresh = FinexIndex.build(x[keep], eps=0.35, minpts=8)
+        assert_identical(idx, fresh, "hypothesis")

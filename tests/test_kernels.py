@@ -12,7 +12,7 @@ from repro.kernels.jaccard import (jaccard_distance_pallas,
 from repro.kernels.kthdist import dist_histogram_pallas, kth_smallest_bisect
 from repro.kernels.pairwise import (eps_count_pallas, eps_emit_pallas,
                                     pairwise_euclidean_pallas)
-from repro.neighbors.bitset import pack_sets, unpack_set
+from repro.neighbors.bitset import pack_sets
 
 RNG = np.random.default_rng(0)
 

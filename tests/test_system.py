@@ -1,7 +1,5 @@
 """End-to-end system behaviour: the paper's full interactive workflow and
 its integration into the training stack."""
-import numpy as np
-import pytest
 
 from repro.core import (assert_equivalent_exact, dbscan_from_csr,
                         eps_star_query, finex_build, minpts_star_query)
