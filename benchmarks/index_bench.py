@@ -128,6 +128,32 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         "nnz_payload_bytes": int(csr.nnz) * 8,   # int32 col + float32 dist
     }
 
+    # --------------------------------------------------- pruning section
+    # the projection-pruned sweep (PR 6) vs the same engine with the
+    # screen disabled: identical CSR bytes (hard exactness gate in
+    # scripts/bench.sh), candidate fraction and tile-skip counts from
+    # the screen, and the wall-clock win. Both sides warm; the screen
+    # itself is one-time/eps-independent and reported separately.
+    eng_off = NeighborEngine(x, metric="euclidean", prune="off")
+    eng_off.materialize(eps)                                 # warm
+    (c_off, csr_off), t_off = _timed(lambda: eng_off.materialize(eps))
+    pruned_same = (np.array_equal(counts, c_off)
+                   and np.array_equal(csr.indptr, csr_off.indptr)
+                   and np.array_equal(csr.indices, csr_off.indices)
+                   and np.array_equal(csr.dists, csr_off.dists))
+    fresh = NeighborEngine(x, metric="euclidean")
+    _, t_screen = _timed(fresh._screen_get)
+    pr = dict(stats.get("pruning") or {})
+    report["pruning"] = {
+        **pr,
+        "pruned_materialize_s": round(t_mat, 4),
+        "unpruned_materialize_s": round(t_off, 4),
+        "speedup_vs_unpruned": round(t_off / max(t_mat, 1e-9), 2),
+        "screen_build_s": round(t_screen, 4),
+        "identical_outputs": bool(pruned_same),
+    }
+    del eng_off, fresh, c_off, csr_off
+
     # ------------------------------------------------ incremental section
     # insert/delete deltas vs full rebuilds — the serving story of
     # incremental maintenance: a single insert must be an order of

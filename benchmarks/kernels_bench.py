@@ -36,9 +36,31 @@ def run(rows: List[str]) -> None:
         # fused counting must not be slower than distance materialization
         rows.append(f"kernel,fusion_speedup,n={n},"
                     f"x{us_dist / max(us_count, 1e-9):.2f}")
+        # screened sweep (PR 6): the k-dim screen plane + verify —
+        # the bound evaluation must stay cheap relative to the d-dim
+        # distance tile it lets the engine skip
+        e = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+        s2t = jnp.float32(4.0)
+        us_sc = _bench(lambda: ops.screened_eps_count(
+            x, x, e, e, 1.0, s2t, w))
+        rows.append(f"kernel,screened_eps_count,n={n},d={d},us={us_sc:.0f}")
     sets = [set(rng.choice(512, size=12, replace=False)) for _ in range(2048)]
     bits, sizes = pack_sets(sets, 512)
     b = jnp.asarray(bits)
     s = jnp.asarray(sizes)
     us_j = _bench(lambda: ops.jaccard_distance(b, s, b, s))
     rows.append(f"kernel,jaccard_bitmap,n=2048,W={bits.shape[1]},us={us_j:.0f}")
+
+
+def main() -> None:
+    """Standalone smoke entry point (`python -m benchmarks.kernels_bench`)
+    — CI runs this in the unit lane so a kernel wrapper that stops
+    compiling (or silently falls off the fused path) fails the build."""
+    rows: List[str] = []
+    run(rows)
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

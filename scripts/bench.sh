@@ -30,7 +30,9 @@ else
         OUT_DIR="$(mktemp -d)"
         trap 'rm -rf "$OUT_DIR"' EXIT
     fi
-    python benchmarks/index_bench.py --n 2000 \
+    # 2400 > the prune screen's auto gate (2048): the smoke run must
+    # exercise (and exactness-gate) the screened sweep, not skip it
+    python benchmarks/index_bench.py --n 2400 \
         --out "$OUT_DIR/BENCH_index.json" >/dev/null
     python benchmarks/service_bench.py --smoke \
         --out "$OUT_DIR/BENCH_service.json" >/dev/null
@@ -47,7 +49,12 @@ failures = []
 # setting. Exactness flags are hard requirements at every scale: the
 # vectorized/compacted/incremental paths must stay byte-identical.
 EXACT_FLAGS = {
-    "BENCH_index.json": ["identical_outputs", "incremental.identical"],
+    # pruning.identical_outputs / .screened: the projection-pruned sweep
+    # must (a) actually engage at bench scale and (b) stay byte-identical
+    # to the unpruned sweep — a wrong prune is a correctness bug, not a
+    # perf regression
+    "BENCH_index.json": ["identical_outputs", "incremental.identical",
+                         "pruning.identical_outputs", "pruning.screened"],
     "BENCH_service.json": ["sweep_identical_to_sequential",
                            "hit_zero_distance_rows"],
 }
@@ -82,6 +89,18 @@ FLOORS = {
         "BENCH_service.json": {
             "cache_hit_speedup": 50.0,
             "sweep_vs_sequential": 1.5,
+        },
+    },
+}
+# Upper bounds (same spirit, inverted): values that must stay BELOW a
+# committed ceiling. At the 20k reference geometry the screen must rule
+# out a real fraction of the n^2 plane — candidate_fraction creeping
+# toward 1.0 means the prune degenerated into pure overhead.
+CEILINGS = {
+    "smoke": {},
+    "full": {
+        "BENCH_index.json": {
+            "pruning.candidate_fraction": 0.6,
         },
     },
 }
@@ -123,6 +142,12 @@ def check(path, required, ratio_keys, metric_keys=()):
                 or v < floor:
             failures.append(f"{path}: {k!r} = {v!r} regressed below the "
                             f"committed {mode} floor {floor}")
+    for k, ceil in CEILINGS[mode].get(path, {}).items():
+        v = flat.get(k)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                or v > ceil:
+            failures.append(f"{path}: {k!r} = {v!r} rose above the "
+                            f"committed {mode} ceiling {ceil}")
 
 
 check("BENCH_index.json",
@@ -141,6 +166,12 @@ check("BENCH_index.json",
                 "incremental.batch_delete_s", "incremental.batch_delete_ids",
                 "incremental.insert_mode", "incremental.delete_mode",
                 "incremental.identical",
+                "pruning.screened", "pruning.tiles_total",
+                "pruning.tiles_skipped", "pruning.candidate_fraction",
+                "pruning.pruned_materialize_s",
+                "pruning.unpruned_materialize_s",
+                "pruning.speedup_vs_unpruned", "pruning.screen_build_s",
+                "pruning.identical_outputs",
                 "build.speedup_end_to_end", "build.speedup_host_pipeline",
                 "build.speedup_finex_build", "build.speedup_materialize"],
       ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
@@ -148,7 +179,8 @@ check("BENCH_index.json",
                   "build.speedup_minpts_star", "build.speedup_materialize",
                   "materialize.transfer_reduction",
                   "incremental.speedup_vs_rebuild",
-                  "incremental.delete_speedup_vs_rebuild"],
+                  "incremental.delete_speedup_vs_rebuild",
+                  "pruning.speedup_vs_unpruned"],
       metric_keys=["metric", "materialize.metric"])
 check("BENCH_service.json",
       required=["n", "eps", "minpts", "k", "build_s", "hit_s",

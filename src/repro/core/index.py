@@ -300,6 +300,7 @@ class FinexIndex:
         affected = None
         base = None
         comp_affected = None
+        frac = None
         if self._run_id is not None and self._run_triggers is not None:
             comp = self._ensure_comp()
             is_core = np.isfinite(C32)
@@ -321,6 +322,12 @@ class FinexIndex:
             comp_affected = merge_insert_components(
                 comp, labels, aff_old, is_core, n_old, m,
                 rows_a, cols_a, newly_core, csr_new)
+            # the fallback decision is component-granular: re-sweep cost
+            # scales with how many sweep components are dirtied, not how
+            # many rows they happen to contain (one giant cluster would
+            # otherwise push row-fraction past any threshold on a
+            # handful of inserts)
+            frac = labels.size / max(np.unique(comp).size, 1)
             base = {
                 "pos": np.concatenate(
                     [self.ordering.pos, np.zeros(m, dtype=np.int64)]),
@@ -335,7 +342,8 @@ class FinexIndex:
             }
         return self._apply_mutation("insert", m, csr_new, counts, C32,
                                     affected, base, rebuild_threshold,
-                                    comp_affected=comp_affected)
+                                    comp_affected=comp_affected,
+                                    frac=frac)
 
     def delete(self, ids, *, rebuild_threshold: float = 0.5) -> dict:
         """Remove objects by id and repair the index — an exact delta.
@@ -394,6 +402,7 @@ class FinexIndex:
             self.minpts)
         affected = None
         base = None
+        frac = None
         if self._run_id is not None and self._run_triggers is not None:
             comp = self._ensure_comp()
             # edge removal never merges components, so the affected set
@@ -402,6 +411,10 @@ class FinexIndex:
             labels = np.unique(np.concatenate(
                 [comp[ids], comp_kept[touched]]))
             affected = np.flatnonzero(np.isin(comp_kept, labels))
+            # component-granular fallback fraction (see _insert_impl):
+            # deleting 1% of the rows of one large cluster dirties one
+            # component, not "most of the dataset"
+            frac = labels.size / max(np.unique(comp_kept).size, 1)
             base = {
                 "pos": self.ordering.pos[keep],
                 "R": self.ordering.R[keep],
@@ -415,7 +428,7 @@ class FinexIndex:
             }
         return self._apply_mutation("delete", int(ids.size), csr_new,
                                     counts, C32, affected, base,
-                                    rebuild_threshold)
+                                    rebuild_threshold, frac=frac)
 
     def _ensure_comp(self) -> Optional[np.ndarray]:
         """Core-incidence component labels, computed on first use (one
@@ -435,20 +448,28 @@ class FinexIndex:
 
     def _apply_mutation(self, op: str, moved: int, csr_new, counts, C32,
                         affected, base, rebuild_threshold: float,
-                        comp_affected=None) -> dict:
-        """Shared tail of insert/delete: ordering repair + bookkeeping."""
+                        comp_affected=None, frac=None) -> dict:
+        """Shared tail of insert/delete: ordering repair + bookkeeping.
+
+        ``frac`` is the *component*-granular affected fraction computed
+        by the caller (dirty sweep components / total components) — the
+        quantity the re-sweep cost actually scales with.  ``None``
+        (callers without run metadata) forces the full-resweep fallback.
+        """
         n_new = counts.shape[0]
         eps, minpts = self.ordering.eps, self.ordering.minpts
         is_core = np.isfinite(C32)
-        frac = (affected.size / n_new) if affected is not None else 1.0
+        if frac is None:
+            frac = (affected.size / n_new) if affected is not None else 1.0
         fallback = affected is None or frac > rebuild_threshold
         if fallback:
             if affected is None:
                 reason = ("index carries no run metadata (archive "
                           "predates incremental maintenance)")
             else:
-                reason = (f"affected fraction {frac:.2f} exceeds "
-                          f"rebuild_threshold {rebuild_threshold:g}")
+                reason = (f"affected component fraction {frac:.2f} "
+                          f"exceeds rebuild_threshold "
+                          f"{rebuild_threshold:g}")
             warnings.warn(
                 f"FinexIndex.{op}: {reason}; falling back to a full "
                 "ordering re-sweep over the spliced CSR (still exact, "
@@ -508,6 +529,12 @@ class FinexIndex:
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
         cores = int(np.isfinite(self.ordering.C).sum())
+        # prune rates of the engine's most recent sweep (the build, or
+        # the last strip/verification batch) — absent for engine-less
+        # indexes and sweeps that ran unscreened
+        pruning = None
+        if self.engine is not None:
+            pruning = (self.engine.last_materialize or {}).get("pruning")
         return {
             "n": self.n,
             "eps": self.eps,
@@ -521,6 +548,7 @@ class FinexIndex:
                 if self.engine is not None else None,
             "query_candidates": self.query_stats.candidates,
             "query_verification_pairs": self.query_stats.verification_pairs,
+            "pruning": pruning,
             "version": self.version,
             "mutations": len(self.delta_log),
         }

@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.pairwise import (pairwise_euclidean_pallas,
-                                    eps_count_pallas, eps_emit_pallas)
+                                    eps_count_pallas, eps_emit_pallas,
+                                    cosine_eps_count_pallas,
+                                    cosine_eps_emit_pallas,
+                                    screened_eps_emit_pallas)
 from repro.kernels.jaccard import (jaccard_distance_pallas,
                                    jaccard_eps_count_pallas,
                                    jaccard_eps_emit_pallas)
@@ -74,6 +77,80 @@ def eps_compact(x, y, eps, cap: int, use_pallas: bool = False):
         return eps_emit_pallas(x, y, eps, cap, interpret=not _on_tpu())
     d = ref.pairwise_euclidean(x, y)
     return ref.eps_compact_tile(d, eps, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def cosine_eps_count(x, y, eps, weights, use_pallas: bool = False):
+    """Weighted |N_eps| counts under cosine distance.
+
+    Rows are augmented-unit-normalized once (``ref.cosine_normalize``)
+    and the fused euclidean-style tile kernels take over.
+    """
+    xa = ref.cosine_normalize(x)
+    ya = ref.cosine_normalize(y)
+    if use_pallas:
+        return cosine_eps_count_pallas(xa, ya, eps, weights,
+                                       interpret=not _on_tpu())
+    d = ref.cosine_distance(xa, ya)
+    return jnp.where(d <= eps, weights[None, :].astype(jnp.float32), 0.0).sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))
+def cosine_eps_compact(x, y, eps, cap: int, use_pallas: bool = False):
+    """Fused ε-threshold + emit under cosine distance; contract of
+    ``eps_compact``."""
+    xa = ref.cosine_normalize(x)
+    ya = ref.cosine_normalize(y)
+    if use_pallas:
+        return cosine_eps_emit_pallas(xa, ya, eps, cap,
+                                      interpret=not _on_tpu())
+    d = ref.cosine_distance(xa, ya)
+    return ref.eps_compact_tile(d, eps, cap)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "use_pallas", "cosine"))
+def screened_eps_compact(x, y, sx, sy, eps, s2t, cap: int, num_valid=None,
+                         use_pallas: bool = False, cosine: bool = False):
+    """Projection-pruned fused emit (euclidean or cosine tile math).
+
+    ``sx``/``sy`` are screen embeddings, ``s2t`` the slack-inflated
+    squared screen threshold, ``num_valid`` the unpadded corpus extent.
+    Returns ``(lens, cols, dvals, cand)`` — byte-identical slots to the
+    unscreened ``eps_compact`` (the screen only removes provable
+    non-hits) plus per-row candidate counts.  Cosine callers pass
+    pre-normalized augmented rows.
+    """
+    if use_pallas:
+        return screened_eps_emit_pallas(x, y, sx, sy, eps, s2t, cap,
+                                        interpret=not _on_tpu(),
+                                        num_valid=num_valid, cosine=cosine)
+    d = ref.cosine_distance(x, y) if cosine else ref.pairwise_euclidean(x, y)
+    keep, _ = ref.screened_hit_tile(jnp.ones(d.shape, bool), sx, sy, s2t,
+                                    y.shape[0] if num_valid is None
+                                    else num_valid)
+    cand = jnp.sum(keep.astype(jnp.int32), axis=1)
+    d_scr = jnp.where(keep, d, jnp.inf)
+    lens, cols, dvals = ref.eps_compact_tile(d_scr, eps, cap)
+    return lens, cols, dvals, cand
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "cosine"))
+def screened_eps_count(x, y, sx, sy, eps, s2t, weights, num_valid=None,
+                       use_pallas: bool = False, cosine: bool = False):
+    """Projection-pruned weighted |N_eps| counts; returns
+    ``(counts, cand)``.  Counts are bit-identical to the unscreened path
+    (the screen mask is a superset of the hit plane by the lower-bound
+    contract)."""
+    del use_pallas  # counts are bandwidth-trivial; oracle path everywhere
+    d = ref.cosine_distance(x, y) if cosine else ref.pairwise_euclidean(x, y)
+    keep, _ = ref.screened_hit_tile(jnp.ones(d.shape, bool), sx, sy, s2t,
+                                    y.shape[0] if num_valid is None
+                                    else num_valid)
+    cand = jnp.sum(keep.astype(jnp.int32), axis=1)
+    w = weights[None, :].astype(jnp.float32)
+    counts = jnp.where((d <= eps) & keep, w, 0.0).sum(-1)
+    return counts, cand
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))

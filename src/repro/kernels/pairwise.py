@@ -73,57 +73,156 @@ def pairwise_euclidean_pallas(x: jax.Array, y: jax.Array,
     return out[:m, :n]
 
 
-def _count_kernel(n_valid, tn, x_ref, y_ref, eps_ref, w_ref, o_ref):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+def _euclidean_tile(x_ref, y_ref):
+    """Exact euclidean distance tile from two VMEM row blocks."""
     x = x_ref[...].astype(jnp.float32)
     y = y_ref[...].astype(jnp.float32)
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)
     y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
     cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-    dist = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))    # (TM, TN)
+    return jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))    # (TM, TN)
+
+
+def _cosine_tile(x_ref, y_ref):
+    """Cosine distance tile over *augmented unit* rows
+    (``ref.cosine_normalize``): one MXU matmul + clip — the euclidean
+    tile machinery with the norm terms folded away."""
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    return jnp.clip(1.0 - cross, 0.0, 2.0)
+
+
+def _count_kernel(dist_fn, tn, x_ref, y_ref, eps_ref, nv_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dist = dist_fn(x_ref, y_ref)                                 # (TM, TN)
     col = j * tn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
     w = w_ref[...].astype(jnp.float32)                           # (1, TN)
-    hit = jnp.where((dist <= eps_ref[0, 0]) & (col < n_valid), w, 0.0)
+    hit = jnp.where((dist <= eps_ref[0, 0]) & (col < nv_ref[0, 0]), w, 0.0)
     o_ref[...] += jnp.sum(hit, axis=1, keepdims=True)
 
 
-def emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref):
-    """Shared in-kernel slot fill for the fused emit kernels.
+_SENTINEL = 2 ** 31 - 1      # int32 max: "no entry" key for the sort fill
 
-    Scatter-free: slots are filled by a chunked one-hot reduction over the
-    tile's column axis (VPU compare + select + sum — the (TM, TN, CC)
-    intermediate stays in VMEM).  Each slot is written by exactly one
-    (tile, column) across the whole corpus sweep, because the per-row
-    cursor advances monotonically, so ``+=`` composes the corpus tiles.
-    The per-row cursor in ``len_ref`` advances by the tile's TRUE hit
-    counts — overflow stays detectable.  Both metric kernels route
-    through this helper so their emit semantics cannot diverge.
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+def _lane_iota(shape):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+
+
+def _xor_partner(a, j):
+    """Value at index ``i ^ j`` along the last axis (j a power of two).
+
+    Bit j of i decides the direction, so two static rolls + a select
+    reproduce the XOR shuffle without gathers — VPU-friendly inside a
+    Pallas kernel body.
     """
+    left = jnp.roll(a, -j, axis=-1)
+    right = jnp.roll(a, j, axis=-1)
+    return jnp.where((_lane_iota(a.shape) & j) == 0, left, right)
+
+
+def _cmp_exchange(key, col, dist, j, asc):
+    """One bitonic substage: compare-exchange each element with its
+    ``i ^ j`` partner, co-moving the (col, dist) payload.  ``asc`` marks
+    the elements inside ascending blocks (scalar True for a merge)."""
+    kp = _xor_partner(key, j)
+    cp = _xor_partner(col, j)
+    dp = _xor_partner(dist, j)
+    lower = (_lane_iota(key.shape) & j) == 0
+    swap = jnp.where(lower == asc, key > kp, key < kp)
+    return (jnp.where(swap, kp, key), jnp.where(swap, cp, col),
+            jnp.where(swap, dp, dist))
+
+
+def _bitonic_sort(key, col, dist):
+    """Ascending sort along the (power-of-two) last axis."""
+    w = key.shape[-1]
+    k = 2
+    while k <= w:
+        asc = (_lane_iota(key.shape) & k) == 0
+        j = k // 2
+        while j >= 1:
+            key, col, dist = _cmp_exchange(key, col, dist, j, asc)
+            j //= 2
+        k *= 2
+    return key, col, dist
+
+
+def _bitonic_merge(key, col, dist):
+    """Ascending merge of a bitonic sequence along the last axis."""
+    j = key.shape[-1] // 2
+    while j >= 1:
+        key, col, dist = _cmp_exchange(key, col, dist, j, True)
+        j //= 2
+    return key, col, dist
+
+
+def emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref):
+    """Shared in-kernel slot fill for the fused emit kernels — sort-based.
+
+    Each surviving pair's target slot is ``cursor + rank − 1`` (ranks from
+    a row cumsum, so targets are contiguous from the cursor).  A bitonic
+    sort over the tile's TN columns compacts the survivors (key = target
+    slot, ``INT32_MAX`` sentinel otherwise), and one bitonic *merge*
+    folds them into the running cap-wide slot buffer: the buffer's live
+    keys 0..cursor−1 are already ascending, so
+    ``[buffer | sentinel pad | reversed new]`` is bitonic by
+    construction.  After the merge the live keys are exactly 0..count−1,
+    i.e. every entry sits at the slot its key names; sentinel lanes are
+    zeroed to preserve the empty-slot convention.  This is
+    O(TN·log²TN + W·logW) compare-exchanges per tile (W = the padded
+    cap+TN width) instead of the O(TM·TN·cap) one-hot fill it replaces.
+    The per-row cursor in ``len_ref`` still advances by the tile's TRUE
+    hit counts — overflow stays detectable.  Both metric kernels route
+    through this helper so their emit semantics cannot diverge.
+    ``cc`` (the old fill's chunk width) is retained for call-site
+    compatibility and unused.
+    """
+    del cc
+    tm, tn = hit.shape
+    sent = jnp.int32(_SENTINEL)
     cursor = len_ref[...]                                       # (TM, 1)
     incl = jnp.cumsum(hit.astype(jnp.int32), axis=1)
     pos = cursor + incl - 1           # target slot of each surviving pair
+    key_new = jnp.where(hit & (pos < cap), pos, sent)
+    key_new, col_new, dist_new = _bitonic_sort(key_new, col, dist)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (tm, cap), 1)
+    filled = slot < jnp.minimum(cursor, cap)
+    key_old = jnp.where(filled, slot, sent)
+    pad = _next_pow2(cap + tn) - cap - tn
 
-    def emit_chunk(k, _):
-        base = k * cc
-        slot = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, cc), 2)
-        oh = (pos[:, :, None] == slot) & hit[:, :, None]        # (TM,TN,CC)
-        col_ref[:, pl.ds(base, cc)] += jnp.sum(
-            jnp.where(oh, col[:, :, None], 0), axis=1)
-        dist_ref[:, pl.ds(base, cc)] += jnp.sum(
-            jnp.where(oh, dist[:, :, None], 0.0), axis=1)
-        return 0
+    def cat(old, new, fill):
+        parts = [old]
+        if pad:
+            parts.append(jnp.full((tm, pad), fill, old.dtype))
+        parts.append(jnp.flip(new, axis=1))
+        return jnp.concatenate(parts, axis=1)
 
-    jax.lax.fori_loop(0, cap // cc, emit_chunk, 0)
+    key_m, col_m, dist_m = _bitonic_merge(
+        cat(key_old, key_new, sent),
+        cat(col_ref[...], col_new, 0),
+        cat(dist_ref[...], dist_new, 0.0))
+    live = key_m[:, :cap] != sent
+    col_ref[...] = jnp.where(live, col_m[:, :cap], 0)
+    dist_ref[...] = jnp.where(live, dist_m[:, :cap], 0.0)
     len_ref[...] = cursor + incl[:, -1:]
 
 
-def _emit_kernel(n_valid, tn, cap, cc, x_ref, y_ref, eps_ref,
+def _emit_kernel(dist_fn, tn, cap, cc, x_ref, y_ref, eps_ref, nv_ref,
                  len_ref, col_ref, dist_ref):
     j = pl.program_id(1)
 
@@ -133,35 +232,57 @@ def _emit_kernel(n_valid, tn, cap, cc, x_ref, y_ref, eps_ref,
         col_ref[...] = jnp.zeros_like(col_ref)
         dist_ref[...] = jnp.zeros_like(dist_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    y = y_ref[...].astype(jnp.float32)
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
-    cross = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-    dist = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))    # (TM, TN)
+    dist = dist_fn(x_ref, y_ref)                                 # (TM, TN)
     col = j * tn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
-    hit = (dist <= eps_ref[0, 0]) & (col < n_valid)
+    hit = (dist <= eps_ref[0, 0]) & (col < nv_ref[0, 0])
     emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cap", "tm", "tn", "cc", "interpret"))
-def eps_emit_pallas(x: jax.Array, y: jax.Array, eps: jax.Array, cap: int,
-                    tm: int = 128, tn: int = 128, cc: int = 128,
-                    interpret: bool = False):
-    """Fused ε-threshold + emit: per-row compacted (col, dist) slots.
+def _screened_emit_kernel(dist_fn, tn, cap, cc, x_ref, y_ref, sx_ref, sy_ref,
+                          eps_ref, s2t_ref, nv_ref,
+                          len_ref, col_ref, dist_ref, cand_ref):
+    """Fused bound + screen + verify + emit (the tentpole kernel).
 
-    Returns ``(lens, cols, dvals)`` exactly as ``ref.eps_compact_tile``
-    over the full distance plane: lens (m,) int32 true hit counts (may
-    exceed ``cap``), cols (m, cap) int32 ascending neighbor ids, dvals
-    (m, cap) float32 distances.  The (TM × TN) distance tile never leaves
-    VMEM; traffic is O(m·d + n·d + m·cap) ≈ O(nnz) for a well-sized
-    capacity, vs O(m·n) for the dense plane.  ``cap`` must be a multiple
-    of the emit chunk ``cc``.  The slot fill is O(TM·TN·cap) VPU work per
-    tile pair — sized for capacity-capped sweeps (cap ≪ n); a sort-based
-    in-tile compaction would trade that for MXU-unfriendly data movement.
+    The *screen* tile — squared euclidean distances between the k-dim
+    projections — is a cheap MXU matmul; pairs above the (slack-inflated)
+    screen threshold provably cannot survive ε, so the expensive exact
+    distance tile is computed only under ``pl.when(alive)``: a
+    (rowblock × colblock) tile with no surviving candidate is skipped
+    before its distances exist.  Surviving tiles mask the exact hit plane
+    with the pair-level bound (a no-op on true hits by the lower-bound
+    contract) and emit through the shared sort-based slot fill.
+    ``cand_ref`` accumulates per-row candidate counts — the exactness-
+    preserving work the screen could not rule out.
     """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        len_ref[...] = jnp.zeros_like(len_ref)
+        col_ref[...] = jnp.zeros_like(col_ref)
+        dist_ref[...] = jnp.zeros_like(dist_ref)
+        cand_ref[...] = jnp.zeros_like(cand_ref)
+
+    sx = sx_ref[...].astype(jnp.float32)
+    sy = sy_ref[...].astype(jnp.float32)
+    sx2 = jnp.sum(sx * sx, axis=-1, keepdims=True)
+    sy2 = jnp.sum(sy * sy, axis=-1, keepdims=True).T
+    scross = jax.lax.dot_general(sx, sy, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    s2 = jnp.maximum(sx2 + sy2 - 2.0 * scross, 0.0)
+    col = j * tn + jax.lax.broadcasted_iota(jnp.int32, s2.shape, 1)
+    keep = (s2 <= s2t_ref[0, 0]) & (col < nv_ref[0, 0])
+    cand_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(jnp.any(keep))
+    def _verify():
+        dist = dist_fn(x_ref, y_ref)
+        hit = (dist <= eps_ref[0, 0]) & keep
+        emit_tile_slots(hit, col, dist, cap, cc, len_ref, col_ref, dist_ref)
+
+
+def _emit_call(dist_fn, x, y, eps, cap, tm, tn, cc, interpret, num_valid):
+    """Shared launch plumbing for the fused emit kernels (any tile metric)."""
     if cap % cc != 0:
         raise ValueError(f"cap ({cap}) must be a multiple of cc ({cc})")
     m, d = x.shape
@@ -169,13 +290,16 @@ def eps_emit_pallas(x: jax.Array, y: jax.Array, eps: jax.Array, cap: int,
     xp = _pad_to(x.astype(jnp.float32), tm, 0)
     yp = _pad_to(y.astype(jnp.float32), tn, 0)
     eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    nv = jnp.asarray(n if num_valid is None else num_valid,
+                     jnp.int32).reshape(1, 1)
     grid = (xp.shape[0] // tm, yp.shape[0] // tn)
-    kernel = functools.partial(_emit_kernel, n, tn, cap, cc)
+    kernel = functools.partial(_emit_kernel, dist_fn, tn, cap, cc)
     lens, cols, dvals = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
                   pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
         out_specs=[pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
                    pl.BlockSpec((tm, cap), lambda i, j: (i, 0)),
@@ -184,36 +308,152 @@ def eps_emit_pallas(x: jax.Array, y: jax.Array, eps: jax.Array, cap: int,
                    jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.int32),
                    jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.float32)],
         interpret=interpret,
-    )(xp, yp, eps_arr)
+    )(xp, yp, eps_arr, nv)
     return lens[:m, 0], cols[:m], dvals[:m]
 
 
-@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
-def eps_count_pallas(x: jax.Array, y: jax.Array, eps: jax.Array,
-                     weights: jax.Array, tm: int = 128, tn: int = 128,
-                     interpret: bool = False) -> jax.Array:
-    """Fused |N_ε| count: (m,) float32 weighted neighbor counts of x in y.
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "tm", "tn", "cc", "interpret"))
+def eps_emit_pallas(x: jax.Array, y: jax.Array, eps: jax.Array, cap: int,
+                    tm: int = 128, tn: int = 128, cc: int = 128,
+                    interpret: bool = False, num_valid=None):
+    """Fused ε-threshold + emit: per-row compacted (col, dist) slots.
 
-    The distance tile stays in VMEM; HBM traffic is O(m·d + n·d + m) instead
-    of O(m·n). ``weights`` are the paper's duplicate counts (§6).
+    Returns ``(lens, cols, dvals)`` exactly as ``ref.eps_compact_tile``
+    over the full distance plane: lens (m,) int32 true hit counts (may
+    exceed ``cap``), cols (m, cap) int32 ascending neighbor ids, dvals
+    (m, cap) float32 distances.  The (TM × TN) distance tile never leaves
+    VMEM; traffic is O(m·d + n·d + m·cap) ≈ O(nnz) for a well-sized
+    capacity, vs O(m·n) for the dense plane.  ``cap`` must be a multiple
+    of the legacy emit chunk ``cc`` (retained for call-site
+    compatibility; the sort-based slot fill ignores it).  ``num_valid``
+    masks padded columns — only column ids below it can hit (defaults to
+    the corpus extent).
     """
+    return _emit_call(_euclidean_tile, x, y, eps, cap, tm, tn, cc,
+                      interpret, num_valid)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "tm", "tn", "cc", "interpret"))
+def cosine_eps_emit_pallas(xa: jax.Array, ya: jax.Array, eps: jax.Array,
+                           cap: int, tm: int = 128, tn: int = 128,
+                           cc: int = 128, interpret: bool = False,
+                           num_valid=None):
+    """Fused cosine ε-threshold + emit over *augmented unit* rows
+    (``ref.cosine_normalize``'d inputs).  Same contract as
+    ``eps_emit_pallas``; the distance tile is one MXU matmul + clip."""
+    return _emit_call(_cosine_tile, xa, ya, eps, cap, tm, tn, cc,
+                      interpret, num_valid)
+
+
+def _count_call(dist_fn, x, y, eps, weights, tm, tn, interpret, num_valid):
+    """Shared launch plumbing for the fused count kernels."""
     m, d = x.shape
     n, _ = y.shape
     xp = _pad_to(x.astype(jnp.float32), tm, 0)
     yp = _pad_to(y.astype(jnp.float32), tn, 0)
     wp = _pad_to(weights.astype(jnp.float32)[None, :], tn, 1)
     eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    nv = jnp.asarray(n if num_valid is None else num_valid,
+                     jnp.int32).reshape(1, 1)
     grid = (xp.shape[0] // tm, yp.shape[0] // tn)
-    kernel = functools.partial(_count_kernel, n, tn)
+    kernel = functools.partial(_count_kernel, dist_fn, tn)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
                   pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
                   pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
                   pl.BlockSpec((1, tn), lambda i, j: (0, j))],
         out_specs=pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
         interpret=interpret,
-    )(xp, yp, eps_arr, wp)
+    )(xp, yp, eps_arr, nv, wp)
     return out[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def eps_count_pallas(x: jax.Array, y: jax.Array, eps: jax.Array,
+                     weights: jax.Array, tm: int = 128, tn: int = 128,
+                     interpret: bool = False, num_valid=None) -> jax.Array:
+    """Fused |N_ε| count: (m,) float32 weighted neighbor counts of x in y.
+
+    The distance tile stays in VMEM; HBM traffic is O(m·d + n·d + m) instead
+    of O(m·n). ``weights`` are the paper's duplicate counts (§6).
+    """
+    return _count_call(_euclidean_tile, x, y, eps, weights, tm, tn,
+                       interpret, num_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def cosine_eps_count_pallas(xa: jax.Array, ya: jax.Array, eps: jax.Array,
+                            weights: jax.Array, tm: int = 128, tn: int = 128,
+                            interpret: bool = False,
+                            num_valid=None) -> jax.Array:
+    """Fused cosine |N_ε| count over augmented unit rows
+    (``ref.cosine_normalize``'d inputs); contract of ``eps_count_pallas``."""
+    return _count_call(_cosine_tile, xa, ya, eps, weights, tm, tn,
+                       interpret, num_valid)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "tm", "tn", "cc", "interpret",
+                                    "cosine"))
+def screened_eps_emit_pallas(x: jax.Array, y: jax.Array,
+                             sx: jax.Array, sy: jax.Array,
+                             eps: jax.Array, s2t: jax.Array, cap: int,
+                             tm: int = 128, tn: int = 128, cc: int = 128,
+                             interpret: bool = False, num_valid=None,
+                             cosine: bool = False):
+    """Projection-pruned fused emit: bound tile → skip/mask → exact emit.
+
+    ``sx``/``sy`` are the k-dim screen embeddings of ``x``/``y`` and
+    ``s2t`` the slack-inflated squared screen threshold (see
+    ``NeighborEngine._screen_thresholds``).  Pairs whose squared screen
+    distance exceeds ``s2t`` provably cannot survive ε; tiles with no
+    surviving pair never compute their exact distances.  Returns
+    ``(lens, cols, dvals, cand)`` — the first three exactly as
+    ``eps_emit_pallas`` over the same rows, plus ``cand`` (m,) int32
+    per-row candidate counts the screen could not rule out.
+    """
+    if cap % cc != 0:
+        raise ValueError(f"cap ({cap}) must be a multiple of cc ({cc})")
+    m, d = x.shape
+    n, _ = y.shape
+    k = sx.shape[1]
+    xp = _pad_to(x.astype(jnp.float32), tm, 0)
+    yp = _pad_to(y.astype(jnp.float32), tn, 0)
+    # pad screen rows with a far-away sentinel so padded rows/cols can
+    # never pass the screen (they are also masked by num_valid)
+    sxp = _pad_to(sx.astype(jnp.float32), tm, 0)
+    syp = _pad_to(sy.astype(jnp.float32), tn, 0)
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1, 1)
+    s2t_arr = jnp.asarray(s2t, jnp.float32).reshape(1, 1)
+    nv = jnp.asarray(n if num_valid is None else num_valid,
+                     jnp.int32).reshape(1, 1)
+    grid = (xp.shape[0] // tm, yp.shape[0] // tn)
+    dist_fn = _cosine_tile if cosine else _euclidean_tile
+    kernel = functools.partial(_screened_emit_kernel, dist_fn, tn, cap, cc)
+    lens, cols, dvals, cand = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, cap), lambda i, j: (i, 0)),
+                   pl.BlockSpec((tm, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.int32),
+                   jax.ShapeDtypeStruct((xp.shape[0], cap), jnp.float32),
+                   jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.int32)],
+        interpret=interpret,
+    )(xp, yp, sxp, syp, eps_arr, s2t_arr, nv)
+    return lens[:m, 0], cols[:m], dvals[:m], cand[:m, 0]

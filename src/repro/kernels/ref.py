@@ -29,6 +29,56 @@ def pairwise_euclidean(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.sqrt(pairwise_sq_euclidean(x, y))
 
 
+def cosine_normalize(x: jax.Array) -> jax.Array:
+    """(n, d) vectors → (n, d+1) augmented unit rows for cosine distance.
+
+    Rows are L2-normalized and extended with a zero-row indicator
+    coordinate, so ``cosine_distance`` below is a single matmul:
+    zero·zero pairs dot to 1 (distance 0), zero·nonzero to 0 (distance
+    1), and vector pairs pick up an exact ``+0.0`` from the indicator —
+    the cosine convention of ``CosineMetric`` with euclidean-style tile
+    machinery.
+    """
+    x = x.astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    zero = nrm == 0.0
+    unit = jnp.where(zero, 0.0, x / jnp.where(zero, 1.0, nrm))
+    return jnp.concatenate([unit, zero.astype(jnp.float32)], axis=-1)
+
+
+def cosine_distance(xa: jax.Array, ya: jax.Array) -> jax.Array:
+    """Cosine distances between augmented unit rows (``cosine_normalize``):
+    clip(1 − xa·yaᵀ, 0, 2) — the oracle for the fused cosine kernels."""
+    sim = xa.astype(jnp.float32) @ ya.astype(jnp.float32).T
+    return jnp.clip(1.0 - sim, 0.0, 2.0).astype(jnp.float32)
+
+
+def screen_sq_tile(sx: jax.Array, sy: jax.Array) -> jax.Array:
+    """Squared euclidean distances between screen embeddings — the bound
+    plane of the projection-pruned sweep.  Same MXU expansion as
+    ``pairwise_sq_euclidean``; callers compare against a slack-inflated
+    threshold (see ``NeighborEngine``) so float32 error here can never
+    turn into a false prune."""
+    return pairwise_sq_euclidean(sx, sy)
+
+
+def screened_hit_tile(hit: jax.Array, sx: jax.Array, sy: jax.Array,
+                      s2_thresh: jax.Array, num_valid=None):
+    """Screen an exact hit plane: AND in the pair-level bound mask (pairs
+    whose squared screen distance exceeds ``s2_thresh`` provably cannot
+    survive ε — a no-op on true hits by the lower-bound contract) and the
+    padded-column mask.  Returns ``(hit', candidates)`` where
+    ``candidates`` is the number of pairs the screen could not rule out —
+    the work the exact kernel actually had to verify.  Oracle for the
+    fused screen+verify Pallas kernel (``pairwise.screened_eps_mask``).
+    """
+    keep = screen_sq_tile(sx, sy) <= s2_thresh
+    if num_valid is not None:
+        col = jax.lax.broadcasted_iota(jnp.int32, keep.shape, 1)
+        keep = keep & (col < num_valid)
+    return hit & keep, jnp.sum(keep.astype(jnp.int32))
+
+
 def jaccard_distance(bits_a: jax.Array, size_a: jax.Array,
                      bits_b: jax.Array, size_b: jax.Array) -> jax.Array:
     """Jaccard distances between packed-bitmap set rows.

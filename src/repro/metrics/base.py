@@ -166,6 +166,74 @@ class Metric:
             return jax.jit(f)
         return self._jit(("compact", cap), make)(q, c, eps)
 
+    def screened_eps_count(self, q: State, c: State, sq: jax.Array,
+                           sc: jax.Array, eps, s2t, weights: jax.Array,
+                           num_valid=None, use_pallas: bool = False):
+        """Projection-pruned ``eps_count``: AND the hit plane with the
+        screen bound plane (a superset of true hits by the lower-bound
+        contract, so counts are bit-identical) and report per-row
+        candidate counts.  ``sq``/``sc`` are float32 screen embeddings,
+        ``s2t`` the slack-inflated squared screen threshold;
+        ``num_valid`` masks pow2-padded corpus columns."""
+        def make():
+            def f(q, c, sq, sc, e, t, w, nv):
+                d = self.pairwise(q, c)
+                keep = ref.screened_hit_tile(
+                    jnp.ones(d.shape, bool), sq, sc, t, nv)[0]
+                cand = jnp.sum(keep.astype(jnp.int32), axis=1)
+                counts = jnp.where((d <= e) & keep,
+                                   w[None, :].astype(jnp.float32), 0.0).sum(-1)
+                return counts, cand
+            return jax.jit(f)
+        nv = jnp.int32(c[0].shape[0] if num_valid is None else num_valid)
+        return self._jit("scount", make)(q, c, sq, sc, eps, s2t, weights, nv)
+
+    def screened_eps_compact(self, q: State, c: State, sq: jax.Array,
+                             sc: jax.Array, eps, s2t, cap: int,
+                             num_valid=None, use_pallas: bool = False):
+        """Projection-pruned ``eps_compact``: screened-out pairs get an
+        ``inf`` distance before the slot emit, so the slots are
+        byte-identical to the unscreened sweep (the screen only removes
+        provable non-hits).  Returns ``(lens, cols, dvals, cand)``.
+        Metrics with fused Pallas kernels override this with the
+        tile-skipping screened emit kernel."""
+        def make():
+            def f(q, c, sq, sc, e, t, nv):
+                d = self.pairwise(q, c)
+                keep = ref.screened_hit_tile(
+                    jnp.ones(d.shape, bool), sq, sc, t, nv)[0]
+                cand = jnp.sum(keep.astype(jnp.int32), axis=1)
+                lens, cols, dvals = ref.eps_compact_tile(
+                    jnp.where(keep, d, jnp.inf), e, cap)
+                return lens, cols, dvals, cand
+            return jax.jit(f)
+        nv = jnp.int32(c[0].shape[0] if num_valid is None else num_valid)
+        return self._jit(("scompact", cap), make)(q, c, sq, sc, eps, s2t, nv)
+
+    # ------------------------------------------------------- prune screen
+    def project(self, canon: Tuple[np.ndarray, ...], k: int,
+                seed: int = 0) -> Optional[np.ndarray]:
+        """Host-side screen embedding: (n, k') float64 points E such that
+        ``lower_bound(||E(x) - E(y)||_2) <= pairwise(x, y)`` for every
+        pair — the contract behind the projection-pruned exact sweep.
+
+        Returning ``None`` (the default) declares "no bound": the engine
+        runs the unpruned full sweep, which is always correct.  The screen
+        space is *always* Euclidean — per-metric semantics live entirely
+        in the embedding and in :meth:`lower_bound` — so the engine's
+        bucket/ball machinery stays metric-oblivious.  The embedding runs
+        in float64 on the host; the exact device kernels never see it
+        (the screen can only *rule out* pairs, never admit false ones).
+        """
+        return None
+
+    def lower_bound(self, screen_dist: np.ndarray) -> np.ndarray:
+        """Monotone map from screen-space Euclidean distance to a true
+        distance lower bound.  Identity by default (correct whenever the
+        embedding is itself contractive, e.g. a JL/orthonormal projection
+        under euclidean or cityblock)."""
+        return screen_dist
+
 
 class CallableMetric(Metric):
     """User-defined distance callable behind the full kernel contract.
@@ -174,17 +242,27 @@ class CallableMetric(Metric):
     tuples and must return the (m, n) float32 distance tile in pure jnp
     ops (it is jit'd, swept tile-by-tile, and run inside ``shard_map`` on
     meshes). The dense fallback paths do the rest — no Pallas required.
+
+    Pruning is opt-in: pass ``project=`` (``(canon, k, seed) -> (n, k')
+    float64`` or ``None``) and optionally ``lower_bound=`` (monotone
+    screen-distance → true-distance lower bound, identity by default) to
+    let the engine's projection screen skip provably-empty tiles.  With
+    no ``project`` the metric rides the unpruned full sweep.
     """
 
     def __init__(self, name: str, pairwise_fn: Callable, *,
                  dtype=np.float32, arity: int = 1,
-                 synthesize: Optional[Callable] = None, **params):
+                 synthesize: Optional[Callable] = None,
+                 project: Optional[Callable] = None,
+                 lower_bound: Optional[Callable] = None, **params):
         super().__init__(**params)
         self.name = name
         self._fn = pairwise_fn
         self._dtypes = (np.dtype(dtype),) if arity == 1 else tuple(
             np.dtype(t) for t in dtype)
         self._synthesize = synthesize
+        self._project = project
+        self._lower_bound = lower_bound
 
     def canonicalize(self, data):
         arity = len(self._dtypes)
@@ -202,6 +280,35 @@ class CallableMetric(Metric):
             return self._synthesize(rng, n)
         return rng.normal(size=(n, d)).astype(self._dtypes[0]) \
             if len(self._dtypes) == 1 else super().synthesize(rng, n, d)
+
+    def project(self, canon, k, seed: int = 0):
+        if self._project is None:
+            return None
+        return self._project(canon, k, seed)
+
+    def lower_bound(self, screen_dist):
+        if self._lower_bound is None:
+            return screen_dist
+        return self._lower_bound(screen_dist)
+
+
+def orthonormal_projection(x: np.ndarray, k: int, seed: int = 0
+                           ) -> np.ndarray:
+    """(n, d) → (n, min(k, d)) float64 contractive screen embedding.
+
+    Columns of the projector are orthonormal (QR of a seeded gaussian),
+    so ``||P^T(x - y)||_2 <= ||x - y||_2`` holds *deterministically* —
+    unlike a raw JL sketch, whose distortion is only probabilistic and
+    could admit a false prune.  When ``d <= k`` the embedding is the
+    identity (the screen bound is then the exact euclidean distance).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    n, d = x.shape
+    if d <= k:
+        return np.ascontiguousarray(x)
+    g = np.random.default_rng(seed).standard_normal((d, k))
+    q, _ = np.linalg.qr(g)                       # (d, k), orthonormal cols
+    return x @ q
 
 
 # --------------------------------------------------------------- registry

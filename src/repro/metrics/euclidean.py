@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
-from repro.metrics.base import Metric, register_metric
+from repro.metrics.base import Metric, orthonormal_projection, register_metric
 
 
 def sq_threshold(eps) -> np.float32:
@@ -68,3 +68,20 @@ class EuclideanMetric(Metric):
 
     def eps_compact(self, q, c, eps, cap: int, use_pallas: bool = False):
         return ops.eps_compact(q[0], c[0], eps, cap, use_pallas=use_pallas)
+
+    def screened_eps_compact(self, q, c, sq, sc, eps, s2t, cap: int,
+                             num_valid=None, use_pallas: bool = False):
+        return ops.screened_eps_compact(q[0], c[0], sq, sc, eps, s2t, cap,
+                                        num_valid=num_valid,
+                                        use_pallas=use_pallas)
+
+    def screened_eps_count(self, q, c, sq, sc, eps, s2t, weights,
+                           num_valid=None, use_pallas: bool = False):
+        return ops.screened_eps_count(q[0], c[0], sq, sc, eps, s2t, weights,
+                                      num_valid=num_valid,
+                                      use_pallas=use_pallas)
+
+    def project(self, canon, k, seed: int = 0):
+        # orthonormal projection: ||P^T x - P^T y|| <= ||x - y|| holds
+        # deterministically, so the identity lower_bound is a true bound
+        return orthonormal_projection(canon[0], k, seed)

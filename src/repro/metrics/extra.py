@@ -1,25 +1,39 @@
 """Cosine and cityblock metrics — proof the registry seam carries metrics
 the seed never special-cased, with zero engine/emit changes.
 
-Both run entirely on the base class's derived kernel contract (jit'd
-dense tile, fused mask sweep, ``ref.eps_compact_tile`` slot emit), so
-they exercise exactly the code path a user-registered metric gets.
+Cityblock runs entirely on the base class's derived kernel contract
+(jit'd dense tile, fused mask sweep, ``ref.eps_compact_tile`` slot emit),
+so it exercises exactly the code path a user-registered metric gets.
+Cosine additionally carries fused Pallas count/emit kernels: the dataset
+is unit-normalized (with a zero-row indicator coordinate) once per
+sweep, after which cosine distance is a single MXU matmul away — the
+same tile machinery as euclidean.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.metrics.base import Metric, register_metric
+from repro.kernels import ops, ref
+from repro.metrics.base import Metric, orthonormal_projection, register_metric
 
 
 @register_metric
 class CosineMetric(Metric):
     """d(x, y) = 1 − x·y / (‖x‖‖y‖) over (n, d) float32 vectors.
 
+    Implemented over *augmented unit rows* (``ref.cosine_normalize``):
+    every row is normalized once and extended with a zero-row indicator
+    coordinate, after which the distance is ``clip(1 − x̂·ŷ, 0, 2)`` —
+    one matmul per tile, which is what lets the fused Pallas count/emit
+    kernels reuse the euclidean MXU machinery verbatim.
+
     Zero-vector convention mirrors Jaccard's empty-set handling: two zero
     vectors are identical (distance 0); zero vs non-zero is maximally
-    dissimilar (distance 1).
+    dissimilar (distance 1).  The indicator coordinate encodes exactly
+    that — zero rows become the unit vector on the extra axis, so
+    zero·zero = 1 (distance 0) and zero·nonzero = 0 (distance 1), while
+    nonzero pairs pick up an exact ``+0.0`` term.
     """
 
     name = "cosine"
@@ -30,15 +44,44 @@ class CosineMetric(Metric):
         return (np.ascontiguousarray(np.asarray(data, dtype=np.float32)),)
 
     def pairwise(self, q, c):
-        x = q[0].astype(jnp.float32)
-        y = c[0].astype(jnp.float32)
-        nx = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))     # (m, 1)
-        ny = jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True)).T   # (1, n)
-        denom = nx * ny
-        sim = jnp.where(denom > 0.0,
-                        (x @ y.T) / jnp.where(denom > 0.0, denom, 1.0),
-                        jnp.where((nx == 0.0) & (ny == 0.0), 1.0, 0.0))
-        return jnp.clip(1.0 - sim, 0.0, 2.0).astype(jnp.float32)
+        return ref.cosine_distance(ref.cosine_normalize(q[0]),
+                                   ref.cosine_normalize(c[0]))
+
+    def eps_count(self, q, c, eps, weights, use_pallas: bool = False):
+        return ops.cosine_eps_count(q[0], c[0], eps, weights,
+                                    use_pallas=use_pallas)
+
+    def eps_compact(self, q, c, eps, cap: int, use_pallas: bool = False):
+        return ops.cosine_eps_compact(q[0], c[0], eps, cap,
+                                      use_pallas=use_pallas)
+
+    def screened_eps_compact(self, q, c, sq, sc, eps, s2t, cap: int,
+                             num_valid=None, use_pallas: bool = False):
+        return ops.screened_eps_compact(
+            ref.cosine_normalize(q[0]), ref.cosine_normalize(c[0]),
+            sq, sc, eps, s2t, cap, num_valid=num_valid,
+            use_pallas=use_pallas, cosine=True)
+
+    def screened_eps_count(self, q, c, sq, sc, eps, s2t, weights,
+                           num_valid=None, use_pallas: bool = False):
+        return ops.screened_eps_count(
+            ref.cosine_normalize(q[0]), ref.cosine_normalize(c[0]),
+            sq, sc, eps, s2t, weights, num_valid=num_valid,
+            use_pallas=use_pallas, cosine=True)
+
+    def project(self, canon, k, seed: int = 0):
+        # the float64 mirror of ``ref.cosine_normalize``: screen distance
+        # s = ||x̂a − ŷa||₂ satisfies s²/2 = d_cos exactly (2 − 2·x̂·ŷ for
+        # vector pairs, and the indicator coordinate reproduces both
+        # zero-row conventions), so the bound below is tight
+        x = np.asarray(canon[0], dtype=np.float64)
+        nrm = np.sqrt(np.sum(x * x, axis=-1, keepdims=True))
+        zero = nrm == 0.0
+        unit = np.divide(x, np.where(zero, 1.0, nrm))
+        return np.concatenate([unit, zero.astype(np.float64)], axis=-1)
+
+    def lower_bound(self, screen_dist):
+        return np.square(screen_dist) * 0.5
 
 
 @register_metric
@@ -74,3 +117,9 @@ class CityblockMetric(Metric):
             acc = acc + jnp.abs(x[:, None, w0:w0 + dc]
                                 - y[None, :, w0:w0 + dc]).sum(-1)
         return acc
+
+    def project(self, canon, k, seed: int = 0):
+        # ||x − y||₂ <= ||x − y||₁ and the projection is contractive, so
+        # the euclidean screen distance lower-bounds the L1 distance with
+        # the identity lower_bound
+        return orthonormal_projection(canon[0], k, seed)

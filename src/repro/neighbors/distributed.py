@@ -37,7 +37,8 @@ except AttributeError:
 
 from repro.kernels import ref
 from repro.metrics import MetricLike, get_metric
-from repro.neighbors.engine import CSRNeighborhoods, fill_slot_rows
+from repro.neighbors.engine import (CSRNeighborhoods, fill_slot_rows,
+                                    screen_thresholds)
 from repro.sharding import dp_axes
 
 
@@ -124,7 +125,8 @@ def finex_dryrun_lowerable(mesh: Mesh, n: int = 1 << 20, d: int = 64,
 def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
                      cap: int, row_chunk: int = 2048,
                      num_valid: int | None = None,
-                     metric: MetricLike = "euclidean"):
+                     metric: MetricLike = "euclidean",
+                     screen=None):
     """Sharded ε-compacted CSR emit: per-shard slots, gathered along "model".
 
     Each device sweeps its (rowblock × colblock) shard in ``row_chunk``
@@ -141,6 +143,14 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
     c: corpus state, rows sharded over "model" (the corpus extent may be
        padded; ``num_valid`` masks the padding by global column id —
        padding *content* never matters, only the id mask).
+    screen: optional projection-prune triple ``(sq, sc, s2t)`` — float32
+       screen embeddings row-aligned with q and c plus the squared
+       screen-space pair threshold (see ``engine.screen_thresholds``).
+       Each (chunk × corpus-shard) tile then computes its pair-level
+       bound mask *first*: tiles the bound rules out entirely skip the
+       distance plane via ``lax.cond``, and surviving tiles emit with the
+       provably-impossible pairs masked to inf.  The slots stay
+       byte-identical to the unscreened emit (lower-bound contract).
     Returns (lens (M, nq) int32, cols (M, nq, cap) int32,
     dvals (M, nq, cap) float32) with M = the "model" axis size and rows
     sharded like q — shard m holding each row's survivors from corpus
@@ -152,12 +162,22 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
     q_parts = q if isinstance(q, tuple) else (q,)
     c_parts = c if isinstance(c, tuple) else (c,)
     nq_parts = len(q_parts)
+    nc_parts = len(c_parts)
     n_total = int(c_parts[0].shape[0]) if num_valid is None else int(num_valid)
+    if screen is not None:
+        # thread the screen embeddings through the same row-aligned
+        # plumbing as the dataset state arrays
+        sq, sc, s2t = screen
+        s2t = jnp.float32(s2t)
+        q_parts = q_parts + (jnp.asarray(sq, jnp.float32),)
+        c_parts = c_parts + (jnp.asarray(sc, jnp.float32),)
 
     def local(eps_s, *parts):
-        qb = parts[:nq_parts]
-        cb = parts[nq_parts:]
-        nc_l = cb[0].shape[0]
+        qb = parts[:len(q_parts)]
+        cb = parts[len(q_parts):]
+        cb_state, scb = (cb[:nc_parts], cb[-1]) if screen is not None \
+            else (cb, None)
+        nc_l = cb_state[0].shape[0]
         offset = jax.lax.axis_index("model") * nc_l
         rows = qb[0].shape[0]
         # pad the local rows up to whole chunks (padding rows sweep zero
@@ -173,9 +193,29 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
                    for a in qb)
 
         def chunk(qrow):
-            d = m.pairwise(qrow, cb)
-            return ref.eps_compact_tile(d, eps_s, cap, col_offset=offset,
-                                        num_valid=n_total)
+            if screen is None:
+                d = m.pairwise(qrow, cb_state)
+                return ref.eps_compact_tile(d, eps_s, cap,
+                                            col_offset=offset,
+                                            num_valid=n_total)
+            qs, sq_row = qrow[:nq_parts], qrow[-1]
+            keep = ref.screen_sq_tile(sq_row, scb) <= s2t
+
+            def emit(_):
+                d = m.pairwise(qs, cb_state)
+                return ref.eps_compact_tile(
+                    jnp.where(keep, d, jnp.inf), eps_s, cap,
+                    col_offset=offset, num_valid=n_total)
+
+            def skip(_):
+                # bound excluded the whole tile: the distance plane is
+                # never computed; zero slots are what eps_compact_tile
+                # emits for a hitless tile, so the gather stays identical
+                return (jnp.zeros((chunk_rows,), jnp.int32),
+                        jnp.zeros((chunk_rows, cap), jnp.int32),
+                        jnp.zeros((chunk_rows, cap), jnp.float32))
+
+            return jax.lax.cond(jnp.any(keep), emit, skip, 0)
 
         lens, cols, dvals = jax.lax.map(chunk, qc)
         lens = lens.reshape(-1)[:rows]
@@ -205,8 +245,9 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
 
 def sharded_csr_materialize(data, eps: float, mesh: Mesh, cap: int = 1024,
                             row_chunk: int = 2048,
-                            metric: MetricLike = "euclidean"
-                            ) -> CSRNeighborhoods:
+                            metric: MetricLike = "euclidean",
+                            prune: str = "auto",
+                            screen_k: int = 8) -> CSRNeighborhoods:
     """Multi-device materialize: sharded CSR-emit → host CSR assembly.
 
     Canonicalizes ``data`` through the metric, pads rows/corpus to the
@@ -215,6 +256,12 @@ def sharded_csr_materialize(data, eps: float, mesh: Mesh, cap: int = 1024,
     ``NeighborEngine.materialize`` on the same data — the sharded entry
     into ``FinexIndex.build(..., mesh=...)``, for every registered
     metric.
+
+    When the metric declares a projection bound (``Metric.project``) and
+    ``prune`` is not "off", the dataset is projected once on the host
+    and the emit runs projection-pruned: shard tiles whose pair bound
+    rules out every pair skip their distance plane entirely.  The CSR is
+    byte-identical either way.
 
     ``cap`` bounds each row's survivors *per corpus shard*; the function
     refuses (rather than silently truncates) when a row overflows it.
@@ -228,10 +275,26 @@ def sharded_csr_materialize(data, eps: float, mesh: Mesh, cap: int = 1024,
     nc_pad = n + (-n) % model
     xq = tuple(jnp.asarray(a) for a in _pad_rows(canon, nq_pad))
     yc = tuple(jnp.asarray(a) for a in _pad_rows(canon, nc_pad))
+    screen = None
+    if prune != "off":
+        E = m.project(canon, screen_k)
+        if E is not None:
+            E = np.asarray(E, dtype=np.float64)
+            E = E - (E.mean(axis=0, keepdims=True) if n else 0.0)
+            m2 = float(np.max(np.sum(E * E, axis=1))) if n else 0.0
+            _s_t, s2t = screen_thresholds(m, eps, 2.0 * np.sqrt(m2) + 1.0,
+                                          m2)
+            E32 = np.ascontiguousarray(E, dtype=np.float32)
+            # padding embeddings are zeros: padded *queries* can only add
+            # slots past row n (sliced off), padded *corpus* hits are
+            # masked by num_valid inside the emit
+            screen = (_pad_rows((E32,), nq_pad)[0],
+                      _pad_rows((E32,), nc_pad)[0], s2t)
     with mesh:
         lens_g, cols_g, dvals_g = sharded_csr_emit(
             xq, yc, jnp.float32(eps), mesh,
-            cap=cap, row_chunk=row_chunk, num_valid=n, metric=m)
+            cap=cap, row_chunk=row_chunk, num_valid=n, metric=m,
+            screen=screen)
     lens = np.asarray(lens_g)[:, :n].astype(np.int64)     # (M, n)
     if (lens > cap).any():
         raise ValueError(

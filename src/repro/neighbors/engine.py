@@ -90,6 +90,42 @@ def fill_slot_rows(indices: np.ndarray, dists: np.ndarray, base: np.ndarray,
     dists[dst] = dvals[valid]
 
 
+def screen_thresholds(metric: Metric, eps: float, diam: float, m2: float
+                      ) -> Tuple[float, np.float32]:
+    """(s_t, s2t): screen-space distance threshold + its float32 squared
+    pair-test twin, for a screen of diameter bound ``diam`` and max
+    squared embedding norm ``m2``.
+
+    ``s_t = sup{s : metric.lower_bound(s) <= eps}`` by host float64
+    bisection — any pair with true distance <= eps has screen distance
+    <= s_t (lower_bound is monotone), so pruning above s_t is provably
+    safe.  Both thresholds are slack-inflated past their computation's
+    float error (bucket tests run in float64, the pair test in float32
+    on device), so rounding can cost a false *candidate*, never a false
+    *prune*.  Shared by the single-device engine and the sharded emit.
+    """
+    def lb(s):
+        return float(np.asarray(metric.lower_bound(
+            np.asarray(s, dtype=np.float64))))
+    eps = float(eps)
+    hi = float(diam)
+    if lb(hi) <= eps:
+        s_t = hi
+    elif lb(0.0) > eps:
+        s_t = 0.0
+    else:
+        lo_s, hi_s = 0.0, hi
+        for _ in range(80):
+            mid = 0.5 * (lo_s + hi_s)
+            if lb(mid) <= eps:
+                lo_s = mid
+            else:
+                hi_s = mid
+        s_t = hi_s            # upper end: >= the true sup by construction
+    s2t = np.float32(s_t * s_t + 1e-4 * (m2 + 1.0))
+    return s_t + 1e-9 * (1.0 + hi), s2t
+
+
 def _pow2_pad(size: int, floor: int = 1 << 14) -> int:
     """Pad gather sizes to powers of two so the surviving-pair gather jit
     compiles a handful of shapes per dataset instead of one per tile."""
@@ -172,10 +208,15 @@ class NeighborEngine:
     def __init__(self, data, metric: MetricLike = "euclidean",
                  weights: Optional[np.ndarray] = None,
                  batch_rows: int = 256, use_pallas: bool = False,
-                 emit: str = "auto", slot_cap: int = 256):
+                 emit: str = "auto", slot_cap: int = 256,
+                 prune: str = "auto", screen_k: int = 8,
+                 screen_bucket: int = 8):
         if emit not in ("auto", "slots", "mask"):
             raise ValueError(f"emit must be 'auto', 'slots' or 'mask', "
                              f"got {emit!r}")
+        if prune not in ("auto", "on", "off"):
+            raise ValueError(f"prune must be 'auto', 'on' or 'off', "
+                             f"got {prune!r}")
         self.metric: Metric = get_metric(metric)
         self.use_pallas = use_pallas
         # ε-compacted emit strategy: "slots" = fused per-row capacity
@@ -211,6 +252,16 @@ class NeighborEngine:
         self.batch_rows = batch_rows
         self.distance_rows_computed = 0  # instrumentation: #row-neighborhoods
         self._fingerprint: Optional[str] = None
+        # projection-prune screen: "on" forces it whenever the metric
+        # declares a bound (``Metric.project``), "off" disables it, "auto"
+        # engages it above ~2k rows (below that the unpruned sweep is a
+        # couple of dispatches and the screen build dominates).  The built
+        # structure is cached per dataset state; False memoizes "metric
+        # has no bound" so project() is probed once.
+        self.prune = prune
+        self.screen_k = int(screen_k)
+        self.screen_bucket = max(8, int(screen_bucket))
+        self._screen = None
 
     @property
     def metric_name(self) -> str:
@@ -280,6 +331,362 @@ class NeighborEngine:
         """Device state of the sweep tile's query rows [s, e)."""
         return self.metric.take(self._state, slice(s, e))
 
+    # ------------------------------------------------------- prune screen
+    def _screen_get(self):
+        """The cached projection-prune screen, or None when pruning is off
+        / the metric declares no bound (``project() is None``) / the
+        dataset is too small for "auto"."""
+        if self.prune == "off" or \
+                (self.prune == "auto" and self.n < 2048):
+            return None
+        if self._screen is None:
+            self._screen = self._screen_build() or False
+        return self._screen or None
+
+    def _screen_build(self):
+        """Build the screen structure: one host float64 projection of the
+        dataset (``Metric.project``), kd-median buckets over it, and the
+        ε-independent tile→bucket-center distance minima.
+
+        Everything here is *bound side* only — the exact device kernels
+        never see the screen, so a bug in the projection can at worst
+        cost pruning, never exactness... except a violated lower-bound
+        contract, which the property suite pins per metric.
+        """
+        canon = tuple(np.asarray(a) for a in self._state)
+        E = self.metric.project(canon, self.screen_k)
+        if E is None:
+            return None
+        E = np.asarray(E, dtype=np.float64)
+        if E.ndim != 2 or E.shape[0] != self.n:
+            raise ValueError(
+                f"Metric.project must return (n, k') points; got shape "
+                f"{E.shape} for n={self.n}")
+        # centering is a translation (screen distances are invariant) but
+        # shrinks the float32 magnitudes the device screen works with
+        mean = E.mean(axis=0, keepdims=True) if self.n else np.zeros((1, 1))
+        E = E - mean
+        # kd-median buckets: contiguous segments of ``order``, split on
+        # the widest screen dimension until <= screen_bucket points.
+        # Small leaves matter: the ball bound prunes nothing once bucket
+        # radii dwarf the screen threshold (high-dim kd cells grow fast)
+        order = np.arange(self.n, dtype=np.int64)
+        bounds = []
+        stack = [(0, self.n)]
+        while stack:
+            lo, hi = stack.pop()
+            if hi - lo <= self.screen_bucket:
+                bounds.append((lo, hi))
+                continue
+            seg = order[lo:hi]
+            pts = E[seg]
+            dim = int(np.argmax(pts.max(axis=0) - pts.min(axis=0)))
+            mid = (hi - lo) // 2
+            order[lo:hi] = seg[np.argpartition(pts[:, dim], mid)]
+            stack.append((lo, lo + mid))
+            stack.append((lo + mid, hi))
+        bounds.sort()
+        nb = len(bounds)
+        starts = np.array([lo for lo, hi in bounds], dtype=np.int64)
+        sizes = np.array([hi - lo for lo, hi in bounds], dtype=np.int64)
+        Eo = E[order]
+        centers = np.add.reduceat(Eo, starts, axis=0) / sizes[:, None]
+        lab = np.repeat(np.arange(nb, dtype=np.int32), sizes)
+        d2row = np.sum((Eo - centers[lab]) ** 2, axis=1)
+        radii = np.sqrt(np.maximum.reduceat(d2row, starts))
+        # bucket id per ORIGINAL row id: the per-tile sub-corpus is then
+        # one O(n) ``flatnonzero(surviving[bid])`` — ascending global ids,
+        # so screened CSR rows come out ascending like the full sweep
+        bid = np.empty(self.n, dtype=np.int32)
+        bid[order] = lab
+        tb = self.batch_rows
+        tiles = [(s, min(s + tb, self.n)) for s in range(0, self.n, tb)]
+        m2 = float(np.max(np.sum(E * E, axis=1))) if self.n else 0.0
+        E32 = np.ascontiguousarray(E, dtype=np.float32)
+        return {
+            "E32": E32,
+            # the dataset re-uploaded in bucket order: sweep tiles then
+            # take their query rows by *slice* instead of a per-tile
+            # device gather (the corpus stays the original-order state)
+            "state_perm": self.metric.take(
+                self._state, jnp.asarray(order.astype(np.int32))),
+            "E32o": np.ascontiguousarray(E32[order]),
+            # float64 bucket-order projection, kept for the lazy Dmin
+            # build below (the bound side must stay float64: float32
+            # rounding there could exceed the threshold slack)
+            "Eo64": Eo,
+            "order": order, "bid": bid, "tiles": tiles, "Dmin": None,
+            "centers": centers, "radii": radii,
+            "m2": m2, "diam": 2.0 * np.sqrt(m2) + 1.0, "mean": mean,
+        }
+
+    def _screen_dmin(self, scr) -> np.ndarray:
+        """The ε-independent (ntiles, nb) tile→bucket-center distance
+        minima, built on first *full-sweep* use and cached on the screen.
+
+        Lazy on purpose: insert strips bound their own query rows against
+        the bucket centers directly and never read this plane, so a
+        mutation-heavy workload (screen rebuilt after every
+        ``append_rows``/``keep_rows``) skips its O(n·nb) cost entirely.
+        Tile-by-tile so the (n, nb) plane never materializes.
+        """
+        if scr["Dmin"] is None:
+            tiles, centers, Eo = scr["tiles"], scr["centers"], scr["Eo64"]
+            Dmin = np.empty((len(tiles), centers.shape[0]))
+            for t, (s, e) in enumerate(tiles):
+                Dmin[t] = self._center_dmin(Eo[s:e], centers)
+            scr["Dmin"] = Dmin
+        return scr["Dmin"]
+
+    @staticmethod
+    def _center_dmin(pts: np.ndarray, centers: np.ndarray) -> np.ndarray:
+        """Per-center minimum distance from ``pts`` (m, k) to ``centers``
+        (nb, k): the row-min is taken in *squared* space so only the
+        (nb,) minima pay a sqrt, not the whole (m, nb) plane."""
+        d2 = (np.sum(pts * pts, axis=1)[:, None]
+              + np.sum(centers * centers, axis=1)[None, :]
+              - 2.0 * (pts @ centers.T))
+        return np.sqrt(np.maximum(d2.min(axis=0), 0.0))
+
+    def _screen_thresholds(self, eps: float, scr):
+        """(s_t, s2t) for this engine's screen — see
+        :func:`screen_thresholds`."""
+        return screen_thresholds(self.metric, eps, scr["diam"], scr["m2"])
+
+    @staticmethod
+    def _screen_cols(scr, dmin: np.ndarray, s_t: float
+                     ) -> Tuple[np.ndarray, int]:
+        """Surviving sub-corpus for a query tile: bucket b survives iff
+        ``dmin[b] - r_b <= s_t`` (triangle inequality in screen space,
+        ``dmin`` the tile's min row→center distances).  Returns
+        (ascending member ids, #surviving buckets) — membership is one
+        O(n) mask lookup through the per-row bucket ids."""
+        surv = (dmin - scr["radii"]) <= s_t
+        k = int(np.count_nonzero(surv))
+        if k == 0:
+            return np.zeros(0, np.int32), 0
+        return np.flatnonzero(surv[scr["bid"]]).astype(np.int32), k
+
+    @staticmethod
+    def _pad_ids(idx: np.ndarray) -> np.ndarray:
+        """Pad a gathered sub-corpus to an eighth-pow2 grid (repeat id 0):
+        a handful of compiled shapes per dataset like ``_bucket``, but
+        ≤ 12.5% padded columns where pure pow2 padding can waste ~2×."""
+        n = len(idx)
+        p = 1 << max(0, (n - 1)).bit_length()
+        q = p >> 3
+        if q:
+            p = min(p, ((n + q - 1) // q) * q)
+        target = max(p, 8)
+        if target == n:
+            return idx
+        return np.concatenate([idx, np.zeros(target - n, idx.dtype)])
+
+    def _perm_csr_to_original(self, order: np.ndarray, lens_perm: np.ndarray,
+                              tiles: list, ind_chunks: list,
+                              dist_chunks: list):
+        """Scatter a bucket-permuted sweep's per-tile CSR chunks straight
+        into original-row-order arrays — one O(nnz) pass, no intermediate
+        permuted CSR, no gather.  Chunks are released as they are
+        consumed.  Returns ``(lens, [indices], [dists])`` with the single
+        chunk already final (``materialize`` adopts it without copying).
+        """
+        n = self.n
+        lens = np.zeros(n, dtype=np.int64)
+        lens[order] = lens_perm
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(lens, out=indptr[1:])
+        nnz = int(indptr[-1])
+        gdt = np.int32 if nnz < 2 ** 31 else np.int64
+        starts_perm = indptr[:-1][order]   # destination start, permuted rows
+        indices = np.empty(nnz, dtype=np.int32)
+        dists = np.empty(nnz, dtype=np.float32)
+        for i, (s, e) in enumerate(tiles):
+            ci, cd = ind_chunks[i], dist_chunks[i]
+            if ci.size:
+                tl = lens_perm[s:e]
+                local = np.zeros(e - s, dtype=np.int64)
+                np.cumsum(tl[:-1], out=local[1:])   # chunk-local row starts
+                dst = (np.repeat((starts_perm[s:e] - local).astype(gdt), tl)
+                       + np.arange(ci.size, dtype=gdt))
+                indices[dst] = ci
+                dists[dst] = cd
+            ind_chunks[i] = dist_chunks[i] = None
+        return lens, [indices], [dists]
+
+    def _sweep_screened(self, eps: float, scr, use_slots: bool):
+        """Projection-pruned compacted sweep — the tentpole path.
+
+        Rows are swept in bucket order (spatially coherent tiles in
+        screen space), each tile's corpus shrinks to the union of
+        surviving buckets' members, and the surviving (tile × bucket)
+        work runs through the usual emit machinery — the pair-level
+        screen additionally masks inside surviving tiles on the slot
+        path.  Both prune levels only remove *provable* non-hits
+        (lower-bound contract + float slack), so the emitted CSR is
+        byte-identical to the unpruned sweep; the final row reorder is
+        O(nnz).
+
+        Tiles where the screen barely bites (surviving sub-corpus close
+        to the whole dataset) escape to a plain full-corpus tile — same
+        entries, none of the gather/padding overhead — so a hostile
+        geometry costs at most the screen build, never a slower sweep.
+        """
+        n = self.n
+        order = scr["order"]
+        nb = len(scr["radii"])
+        s_t, s2t = self._screen_thresholds(eps, scr)
+        eps_dev = jnp.float32(eps)
+        thresh = self.metric.mask_threshold(eps)
+        tiles = scr["tiles"]
+        tiles_skipped = 0
+        tile_subs = []
+        dmin = self._screen_dmin(scr)
+        for t in range(len(tiles)):
+            sub, k = self._screen_cols(scr, dmin[t], s_t)
+            tiles_skipped += nb - k
+            # hybrid escape: pruning under ~30% is not worth the gather
+            tile_subs.append(None if sub.size > 0.7 * n else sub)
+        lens_perm = np.zeros(n, dtype=np.int64)
+        ind_chunks: list = []
+        dist_chunks: list = []
+        pending_gather: list = []
+        host_bytes = 0
+        fallback_rows = 0
+        cand_pairs = 0
+        tb = max((e - s) for s, e in tiles) if tiles else 1
+        flat_dtype = (np.int32 if tb * _pow2_pad(n, 1) < 2 ** 31
+                      else np.int64)
+
+        def dispatch(i):
+            s, e = tiles[i]
+            sub = tile_subs[i]
+            if sub is not None and sub.size == 0:
+                return None
+            q_state = self.metric.take(scr["state_perm"], slice(s, e))
+            cap = self._slot_cap              # pinned at dispatch time: the
+            # pipeline runs one tile ahead, so an overflow-triggered cap
+            # growth must not change how the in-flight tile is decoded
+            if sub is None:                   # full-corpus escape tile
+                if use_slots:
+                    out = self.metric.eps_compact(
+                        q_state, self._state, eps_dev, cap,
+                        use_pallas=self.use_pallas)
+                else:
+                    out = self.metric.mask_tile(q_state, self._state, thresh)
+                return None, None, out, cap
+            sub_p = self._pad_ids(sub)
+            c_state = self.metric.take(self._state, jnp.asarray(sub_p))
+            if use_slots:
+                sq = jnp.asarray(scr["E32o"][s:e])
+                sc = jnp.asarray(scr["E32"][sub_p])
+                out = self.metric.screened_eps_compact(
+                    q_state, c_state, sq, sc, eps_dev, s2t, cap,
+                    num_valid=int(sub.size), use_pallas=self.use_pallas)
+            else:
+                out = self.metric.mask_tile(q_state, c_state, thresh)
+            return sub, sub_p, out, cap
+
+        pend = dispatch(0) if tiles else None
+        for i, (s, e) in enumerate(tiles):
+            got = pend
+            if i + 1 < len(tiles):
+                pend = dispatch(i + 1)        # overlaps this tile's host work
+            self.distance_rows_computed += e - s
+            if got is None:                   # every bucket pruned
+                ind_chunks.append(np.zeros(0, np.int32))
+                dist_chunks.append(np.zeros(0, np.float32))
+                continue
+            sub, sub_p, out, cap = got
+            if use_slots:
+                if sub is None:
+                    tl, tc, td = out
+                    cand_pairs += (e - s) * n
+                else:
+                    tl, tc, td, cd = out
+                    cand_pairs += int(np.asarray(cd).sum())
+                tl = np.asarray(tl).astype(np.int64)
+                tc, td = np.asarray(tc), np.asarray(td)
+                host_bytes += tl.nbytes + tc.nbytes + td.nbytes
+                lens_perm[s:e] = tl
+                over = tl > cap
+                if over.any():
+                    # dense fallback against the FULL corpus: overflow
+                    # rows re-extract their whole (global) row, exactly
+                    # like the unpruned slot sweep
+                    fallback_rows += int(over.sum())
+                    grows = order[s:e][over].astype(np.int32)
+                    d_over = np.asarray(self._dist_block(
+                        jnp.asarray(self._bucket(grows))))[:len(grows)]
+                    host_bytes += d_over.nbytes
+                    oflat = np.flatnonzero(d_over <= np.float32(eps))
+                    ocols = (oflat % n).astype(np.int32)
+                    odists = d_over.ravel()[oflat]
+                    osplit = np.searchsorted(
+                        oflat, np.arange(1, len(grows), dtype=np.int64) * n)
+                    while self._slot_cap < int(tl.max()):
+                        self._slot_cap <<= 1
+                tile_nnz = int(tl.sum())
+                t_indptr = np.zeros(e - s + 1, dtype=np.int64)
+                np.cumsum(tl, out=t_indptr[1:])
+                t_ind = np.empty(tile_nnz, dtype=np.int32)
+                t_dist = np.empty(tile_nnz, dtype=np.float32)
+                # slot cols are local sub-corpus ids (ascending members,
+                # so the gather preserves CSR ordering) — or already
+                # global on escape tiles
+                fill_slot_rows(t_ind, t_dist, t_indptr[:-1],
+                               np.where(over, 0, tl),
+                               tc if sub is None else sub[tc], td)
+                if over.any():
+                    obase = np.repeat(t_indptr[:-1][over],
+                                      np.diff(np.concatenate(
+                                          ([0], osplit, [len(oflat)]))))
+                    odst = obase + np.arange(len(oflat)) - np.repeat(
+                        np.concatenate(([0], osplit)),
+                        np.diff(np.concatenate(([0], osplit, [len(oflat)]))))
+                    t_ind[odst] = ocols
+                    t_dist[odst] = odists
+                ind_chunks.append(t_ind)
+                dist_chunks.append(t_dist)
+            else:
+                hit, payload = out
+                if sub is None:
+                    cand_pairs += (e - s) * n
+                    tl, cols, dv, k, nbytes = self._mask_extract(
+                        hit, payload, n, flat_dtype)
+                    ind_chunks.append(cols)    # already global ids
+                else:
+                    cand_pairs += (e - s) * int(sub.size)
+                    tl, cols, dv, k, nbytes = self._mask_extract(
+                        hit, payload, int(sub_p.size), flat_dtype,
+                        num_valid=int(sub.size))
+                    ind_chunks.append(sub[cols])  # local → global ids
+                lens_perm[s:e] = tl
+                pending_gather.append((len(ind_chunks) - 1, k, dv))
+                host_bytes += nbytes
+        if not use_slots:
+            dist_at = {i: np.asarray(dv)[:k] for i, k, dv in pending_gather}
+            dist_chunks = [dist_at.get(i, np.zeros(0, np.float32))
+                           for i in range(len(ind_chunks))]
+        lens, ind_chunks, dist_chunks = self._perm_csr_to_original(
+            order, lens_perm, tiles, ind_chunks, dist_chunks)
+        self.last_materialize = {
+            "mode": "slots" if use_slots else "mask",
+            "metric": self.metric.name,
+            "tiles": len(tiles),
+            "cap": self._slot_cap if use_slots else None,
+            "fallback_rows": fallback_rows, "host_bytes": host_bytes,
+            "host_bytes_dense": self._dense_sweep_bytes(),
+            "pruning": {
+                "screened": True, "screen_k": int(scr["E32"].shape[1]),
+                "buckets": nb, "tiles_total": nb * len(tiles),
+                "tiles_skipped": int(tiles_skipped),
+                "candidate_pairs": int(cand_pairs),
+                "candidate_fraction": float(cand_pairs) / max(1, n * n),
+            },
+        }
+        return lens, ind_chunks, dist_chunks
+
     def materialize(self, eps: float) -> Tuple[np.ndarray, CSRNeighborhoods]:
         """Weighted counts |N_ε| and CSR neighbor lists for every object.
 
@@ -294,7 +701,11 @@ class NeighborEngine:
         """
         use_slots = self.emit == "slots" or (self.emit == "auto"
                                              and self.use_pallas)
-        if use_slots:
+        scr = self._screen_get()
+        if scr is not None:
+            lens, ind_chunks, dist_chunks = self._sweep_screened(
+                eps, scr, use_slots)
+        elif use_slots:
             lens, ind_chunks, dist_chunks = self._sweep_slots(eps)
         else:
             lens, ind_chunks, dist_chunks = self._sweep_mask(eps)
@@ -302,17 +713,22 @@ class NeighborEngine:
         indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.cumsum(lens, out=indptr[1:])
         nnz = int(indptr[-1])
-        # preallocate once, fill chunk by chunk (chunks are freed as they
-        # are consumed — no concatenate holding chunks + result at peak)
-        indices = np.empty(nnz, dtype=np.int32)
-        dists = np.empty(nnz, dtype=np.float32)
-        off = 0
-        for i in range(len(ind_chunks)):
-            k = ind_chunks[i].size
-            indices[off:off + k] = ind_chunks[i]
-            dists[off:off + k] = dist_chunks[i]
-            ind_chunks[i] = dist_chunks[i] = None
-            off += k
+        if len(ind_chunks) == 1 and ind_chunks[0].size == nnz:
+            # the screened sweep scatters into final arrays itself
+            indices, dists = ind_chunks[0], dist_chunks[0]
+        else:
+            # preallocate once, fill chunk by chunk (chunks are freed as
+            # they are consumed — no concatenate holding chunks + result
+            # at peak)
+            indices = np.empty(nnz, dtype=np.int32)
+            dists = np.empty(nnz, dtype=np.float32)
+            off = 0
+            for i in range(len(ind_chunks)):
+                k = ind_chunks[i].size
+                indices[off:off + k] = ind_chunks[i]
+                dists[off:off + k] = dist_chunks[i]
+                ind_chunks[i] = dist_chunks[i] = None
+                off += k
         csr = CSRNeighborhoods(indptr=indptr, indices=indices, dists=dists,
                                eps=float(eps))
         if self.unit_weights:
@@ -325,23 +741,32 @@ class NeighborEngine:
                 minlength=self.n).astype(np.int64)
         return counts, csr
 
-    def _mask_extract(self, hit, payload, nc: int, flat_dtype):
+    def _mask_extract(self, hit, payload, nc: int, flat_dtype,
+                      num_valid: Optional[int] = None):
         """One tile of the mask path: bool hit plane -> (per-row lens,
         sorted cols, in-flight distance gather, #survivors, host bytes).
 
-        Shared by the full sweep and ``strip_materialize`` — the two are
-        required to produce byte-identical entries for the incremental
-        insert contract, so the extraction must be one piece of code.
+        Shared by the full sweep, the screened sweep and
+        ``strip_materialize`` — all are required to produce byte-identical
+        entries for the incremental insert contract, so the extraction
+        must be one piece of code.  ``num_valid`` masks the pow2-padding
+        columns of a gathered sub-corpus (screened sweeps only).
         """
         mask = np.asarray(hit)
         flat = np.flatnonzero(mask)
+        cols = (flat % nc).astype(np.int32)
+        if num_valid is not None and num_valid < nc:
+            # padded columns repeat row 0 and can hit: drop them from the
+            # flat ids (an O(hits) filter — the mask is never copied)
+            keep = cols < num_valid
+            flat = flat[keep]
+            cols = cols[keep]
         lens = np.diff(np.searchsorted(
             flat, np.arange(mask.shape[0] + 1, dtype=np.int64) * nc))
         pad = _pow2_pad(flat.size)
         fpad = np.zeros(pad, dtype=flat_dtype)
         fpad[:flat.size] = flat
         dv = self.metric.gather_pairs(payload, jnp.asarray(fpad))
-        cols = (flat % nc).astype(np.int32)
         return lens, cols, dv, flat.size, mask.nbytes + fpad.nbytes + pad * 4
 
     def _sweep_mask(self, eps: float):
@@ -380,6 +805,7 @@ class NeighborEngine:
             "tiles": len(tiles), "cap": None,
             "fallback_rows": 0, "host_bytes": host_bytes,
             "host_bytes_dense": self._dense_sweep_bytes(),
+            "pruning": {"screened": False},
         }
         return lens, ind_chunks, dist_chunks
 
@@ -450,6 +876,7 @@ class NeighborEngine:
             "cap": self._slot_cap, "fallback_rows": fallback_rows,
             "host_bytes": host_bytes,
             "host_bytes_dense": self._dense_sweep_bytes(),
+            "pruning": {"screened": False},
         }
         return lens, ind_chunks, dist_chunks
 
@@ -469,7 +896,24 @@ class NeighborEngine:
         Returns ``(lens, cols, dists)``: per-query-row survivor counts
         plus the flat row-major (col, dist) pairs, cols ascending within
         each row (the CSR ordering).
+
+        When the projection screen is active and the corpus is the
+        engine's own dataset, the strip reuses it: the query rows are
+        projected with the *same* deterministic projector
+        (``Metric.project`` is seeded) and centered by the corpus screen
+        mean, and each strip tile sweeps only its surviving buckets'
+        members — entries stay byte-identical by the usual superset
+        argument.
         """
+        E_q = None
+        if corpus is None:
+            scr = self._screen_get()
+            if scr is not None:
+                E_q = self.metric.project(
+                    tuple(np.asarray(a) for a in rows_state), self.screen_k)
+                if E_q is not None:
+                    E_q = np.asarray(E_q, dtype=np.float64) - scr["mean"]
+                    s_t, s2t = self._screen_thresholds(eps, scr)
         corpus = self._state if corpus is None else corpus
         nc = int(corpus[0].shape[0])
         nq = int(rows_state[0].shape[0])
@@ -482,14 +926,36 @@ class NeighborEngine:
         lens = np.zeros(nq, dtype=np.int64)
         cols_chunks: list = []
         dist_chunks: list = []
-        flat_dtype = np.int32 if batch_rows * nc < 2 ** 31 else np.int64
+        flat_dtype = (np.int32 if batch_rows * _pow2_pad(nc, 1) < 2 ** 31
+                      else np.int64)
         for s in range(0, nq, batch_rows):
             e = min(s + batch_rows, nq)
             self.distance_rows_computed += e - s
-            hit, payload = self.metric.mask_tile(
-                self.metric.take(rows_state, slice(s, e)), corpus, thresh)
-            tl, cols, dv, k, _ = self._mask_extract(
-                hit, payload, nc, flat_dtype)
+            sub = None
+            if E_q is not None:
+                dmin = self._center_dmin(E_q[s:e], scr["centers"])
+                sub, _ = self._screen_cols(scr, dmin, s_t)
+                if sub.size == 0:
+                    cols_chunks.append(np.zeros(0, np.int32))
+                    dist_chunks.append(np.zeros(0, np.float32))
+                    continue
+                if sub.size > 0.7 * nc:       # hybrid full-corpus escape
+                    sub = None
+            if sub is not None:
+                sub_p = self._pad_ids(sub)
+                hit, payload = self.metric.mask_tile(
+                    self.metric.take(rows_state, slice(s, e)),
+                    self.metric.take(self._state, jnp.asarray(sub_p)),
+                    thresh)
+                tl, cols, dv, k, _ = self._mask_extract(
+                    hit, payload, int(sub_p.size), flat_dtype,
+                    num_valid=int(sub.size))
+                cols = sub[cols]
+            else:
+                hit, payload = self.metric.mask_tile(
+                    self.metric.take(rows_state, slice(s, e)), corpus, thresh)
+                tl, cols, dv, k, _ = self._mask_extract(
+                    hit, payload, nc, flat_dtype)
             lens[s:e] = tl
             cols_chunks.append(cols)
             dist_chunks.append(np.asarray(dv)[:k])
@@ -506,11 +972,11 @@ class NeighborEngine:
         midway, so the engine can never end up holding a different row
         set than the ordering it is attached to."""
         return (self._state, self.weights, self.n, self.unit_weights,
-                self._w_dev, self._fingerprint)
+                self._w_dev, self._fingerprint, self._screen)
 
     def state_restore(self, snap) -> None:
         (self._state, self.weights, self.n, self.unit_weights,
-         self._w_dev, self._fingerprint) = snap
+         self._w_dev, self._fingerprint, self._screen) = snap
 
     def append_rows(self, data, weights: Optional[np.ndarray] = None) -> int:
         """Extend the dataset with new rows (incremental insert support).
@@ -553,6 +1019,7 @@ class NeighborEngine:
         self.unit_weights = bool(np.all(self.weights == 1))
         self._w_dev = jnp.asarray(self.weights.astype(np.float32))
         self._fingerprint = None
+        self._screen = None
         return m
 
     def keep_rows(self, keep: np.ndarray) -> None:
@@ -572,6 +1039,7 @@ class NeighborEngine:
         self.unit_weights = bool(np.all(self.weights == 1))
         self._w_dev = jnp.asarray(self.weights.astype(np.float32))
         self._fingerprint = None
+        self._screen = None
 
     def _dense_sweep_bytes(self) -> int:
         """What the pre-compaction sweep moved to the host: a float32
@@ -597,10 +1065,39 @@ class NeighborEngine:
         Routed through the metric's fused ``eps_count`` kernel: the
         distance tile is reduced to per-row counts on device (in VMEM on
         TPU), so only O(rows) floats cross to the host per tile — no
-        dense plane, no list storage.
+        dense plane, no list storage.  When the projection screen is
+        active the count kernel sees only each tile's surviving
+        sub-corpus (``screened_eps_count``) — counts stay bit-identical
+        because the screen mask is a superset of the hit plane.
         """
         counts = np.zeros(self.n, dtype=np.int64)
         eps_dev = jnp.float32(eps)
+        scr = self._screen_get()
+        if scr is not None:
+            order = scr["order"]
+            s_t, s2t = self._screen_thresholds(eps, scr)
+            dmin_all = self._screen_dmin(scr)
+            for t, (s, e) in enumerate(scr["tiles"]):
+                self.distance_rows_computed += e - s
+                sub, _ = self._screen_cols(scr, dmin_all[t], s_t)
+                if sub.size == 0:
+                    continue
+                q_state = self.metric.take(scr["state_perm"], slice(s, e))
+                if sub.size > 0.7 * self.n:   # hybrid full-corpus escape
+                    c = self.metric.eps_count(
+                        q_state, self._state,
+                        eps_dev, self._w_dev, use_pallas=self.use_pallas)
+                else:
+                    sub_p = self._pad_ids(sub)
+                    c, _cand = self.metric.screened_eps_count(
+                        q_state,
+                        self.metric.take(self._state, jnp.asarray(sub_p)),
+                        jnp.asarray(scr["E32o"][s:e]),
+                        jnp.asarray(scr["E32"][sub_p]),
+                        eps_dev, s2t, self._w_dev[jnp.asarray(sub_p)],
+                        num_valid=int(sub.size), use_pallas=self.use_pallas)
+                counts[order[s:e]] = np.asarray(c).astype(np.int64)
+            return counts
         for s, e in self._tile_bounds():
             self.distance_rows_computed += e - s
             c = self.metric.eps_count(self._rows(s, e), self._state, eps_dev,

@@ -1,0 +1,167 @@
+"""Property suite for the projection-pruned exact sweep.
+
+The screen's one contract: pruning only ever removes *provable* non-hits,
+so the pruned sweep must be byte-identical — CSR indices, CSR distance
+bits, counts — to the unpruned sweep, for every registered metric, every
+geometry, every emit path, on one device and on a mesh.  These tests
+randomize over metrics, adversarial geometries (everything-hits,
+far-separated blobs, exact duplicates) and the incremental insert strip,
+always comparing ``prune="on"`` against ``prune="off"`` bit for bit.
+
+Engines here use small ``batch_rows``/``screen_bucket`` so the true
+sub-corpus screened path (not just the hybrid full-tile escape) engages
+at test-sized n.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import FinexIndex
+from repro.metrics import CallableMetric, get_metric, registered_metrics
+from repro.neighbors.engine import NeighborEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ALL_METRICS = registered_metrics()
+
+# engine kwargs that force the genuinely screened path at small n:
+# prune="on" bypasses the auto size gate, small tiles/buckets give the
+# kd-screen enough granularity to produce partial (sub-corpus) tiles
+PRUNED = dict(prune="on", batch_rows=48, screen_bucket=8)
+
+
+def _assert_same_sweep(data, metric, eps_list, **unpruned_kw):
+    """Pruned and unpruned engines must agree bit-for-bit on counts and
+    CSR at every eps; returns the pruned engine for further checks."""
+    on = NeighborEngine(data, metric=metric, **PRUNED)
+    off = NeighborEngine(data, metric=metric, prune="off",
+                         batch_rows=48, **unpruned_kw)
+    for eps in eps_list:
+        c_on, csr_on = on.materialize(eps)
+        c_off, csr_off = off.materialize(eps)
+        np.testing.assert_array_equal(c_on, c_off)
+        np.testing.assert_array_equal(csr_on.indptr, csr_off.indptr)
+        np.testing.assert_array_equal(csr_on.indices, csr_off.indices)
+        np.testing.assert_array_equal(csr_on.dists, csr_off.dists)
+        np.testing.assert_array_equal(on.counts_only(eps),
+                                      off.counts_only(eps))
+    return on
+
+
+@pytest.mark.parametrize("name", ALL_METRICS)
+def test_pruned_byte_identical_every_metric(name):
+    m = get_metric(name)
+    rng = np.random.default_rng(11)
+    data = m.synthesize(rng, 230)
+    eng = NeighborEngine(data, metric=m, batch_rows=48)
+    dense = eng.distances_from(np.arange(eng.n))
+    off = dense[~np.eye(eng.n, dtype=bool)]
+    eps_list = [float(np.quantile(off, q)) for q in (0.02, 0.2, 0.6)]
+    on = _assert_same_sweep(data, m, eps_list)
+    pr = on.last_materialize["pruning"]
+    # screened iff the metric publishes a projection/lower-bound pair
+    assert pr["screened"] == (
+        m.project(m.canonicalize(data), 8) is not None)
+
+
+def test_adversarial_everything_hits():
+    """eps covering the whole dataset: no tile may be skipped into a
+    wrong answer — the hybrid escape sweeps full tiles and the result
+    still matches bit-for-bit."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(scale=0.05, size=(300, 6)).astype(np.float32)
+    on = _assert_same_sweep(x, "euclidean", [10.0, 1.0])
+    assert on.last_materialize["pruning"]["screened"]
+
+
+def test_adversarial_far_blobs_skip_tiles():
+    """Well-separated blobs at small eps: the screen must actually skip
+    cross-blob tiles (the point of the tentpole), exactly."""
+    rng = np.random.default_rng(7)
+    centers = rng.normal(scale=200.0, size=(5, 6))
+    x = np.concatenate([c + rng.normal(size=(70, 6)) for c in centers]
+                       ).astype(np.float32)
+    on = _assert_same_sweep(x, "euclidean", [1.5])
+    pr = on.last_materialize["pruning"]
+    assert pr["screened"] and pr["tiles_skipped"] > 0
+    assert pr["candidate_fraction"] < 0.7
+
+
+def test_adversarial_duplicates_and_zero_rows():
+    """Exact duplicates (zero screen distance, ties everywhere) and
+    all-zero rows (the cosine indicator-coordinate convention) survive
+    pruning bit-for-bit."""
+    rng = np.random.default_rng(9)
+    base = rng.normal(size=(60, 5)).astype(np.float32)
+    x = np.concatenate([base, base, base[:30],
+                        np.zeros((20, 5), np.float32)])
+    _assert_same_sweep(x, "euclidean", [0.0, 0.8])
+    _assert_same_sweep(x, "cosine", [0.0, 0.3, 1.0])
+
+
+def test_no_lower_bound_metric_falls_back_unscreened():
+    """A user CallableMetric has no projection: prune='on' must degrade
+    to the plain sweep (screened=False), not crash or mis-prune."""
+    def linf(x, y):
+        import jax.numpy as jnp
+        return jnp.abs(x[:, None, :] - y[None, :, :]).max(-1)
+
+    m = CallableMetric("linf-prop", linf)
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(160, 4)).astype(np.float32)
+    on = _assert_same_sweep(x, m, [0.6])
+    assert on.last_materialize["pruning"] == {"screened": False}
+
+
+def test_insert_strip_reuses_screen_exactly():
+    """Incremental inserts ride the screened strip: the mutated index
+    must stay byte-identical to a fresh pruned AND a fresh unpruned
+    build over the concatenated dataset."""
+    rng = np.random.default_rng(17)
+    centers = rng.normal(scale=40.0, size=(4, 6))
+    x = np.concatenate([c + rng.normal(size=(90, 6)) for c in centers]
+                       ).astype(np.float32)
+    eng = NeighborEngine(x[:330], **PRUNED)
+    idx = FinexIndex.from_engine(eng, eps=1.4, minpts=6)
+    idx.insert(x[330:])
+    ref = FinexIndex.build(x, eps=1.4, minpts=6, batch_rows=48)
+    np.testing.assert_array_equal(idx.csr.indptr, ref.csr.indptr)
+    np.testing.assert_array_equal(idx.csr.indices, ref.csr.indices)
+    np.testing.assert_array_equal(idx.csr.dists, ref.csr.dists)
+    np.testing.assert_array_equal(idx.ordering.order, ref.ordering.order)
+    assert idx.stats()["pruning"]["screened"]
+
+
+def test_mesh_pruned_build_byte_identical():
+    """Sharded screened emit on an 8-device host mesh == unpruned
+    single-device CSR, divisible and ragged n, with skipping geometry."""
+    code = """
+    import numpy as np
+    from repro.launch.mesh import make_host_mesh
+    from repro.neighbors.distributed import sharded_csr_materialize
+    from repro.neighbors.engine import NeighborEngine
+
+    rng = np.random.default_rng(21)
+    mesh = make_host_mesh(2, 4)
+    centers = rng.normal(scale=60.0, size=(4, 6))
+    for n in (512, 500):
+        x = np.concatenate([c + rng.normal(size=(n // 4, 6))
+                            for c in centers]).astype(np.float32)
+        csr = sharded_csr_materialize(x, 1.2, mesh, cap=256, row_chunk=64)
+        _, ref = NeighborEngine(x, prune="off").materialize(1.2)
+        np.testing.assert_array_equal(csr.indptr, ref.indptr)
+        np.testing.assert_array_equal(csr.indices, ref.indices)
+        np.testing.assert_array_equal(csr.dists, ref.dists)
+    print("MESH-PRUNED-OK")
+    """
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=900)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr[-4000:]}"
+    assert "MESH-PRUNED-OK" in p.stdout
