@@ -46,9 +46,14 @@ def mixed_settings(eps: float, minpts: int, k: int = 16):
 def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         k: int = 16, seed: int = 0, requests: int = 24, sweep_k: int = 6,
         out_path: str | None = None) -> dict:
+    from repro import obs
     from repro.data.synthetic import gaussian_mixture
     from repro.service import (ClusterRequest, ClusterService, IndexStore,
                                SweepPlanner, SweepRequest)
+
+    # timed sections measure disabled-mode cost; the telemetry section
+    # at the end re-enables tracing explicitly
+    obs.configure(enabled=False)
 
     x = gaussian_mixture(n, d=d, k=12, noise_frac=0.1, seed=seed)
     settings = mixed_settings(eps, minpts, k)
@@ -120,6 +125,28 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         "batched_sweeps": st["batched_sweeps"],
         "coalesced_settings": st["coalesced_settings"],
         "store": st["store"],
+    }
+
+    # ------------------------------------------------- telemetry section
+    # tracing-enabled request stream against the warm service: the labels
+    # must match the untraced planner sweep byte-for-byte, and the span
+    # rollup / counters / rolling windows land in the artifact (the
+    # serving-side /stats payload, captured at bench time)
+    obs.reset()
+    obs.enable()
+    traced_labels = planner.sweep(settings)
+    svc.run([SweepRequest(data=x, eps=eps, minpts=minpts,
+                          settings=settings)
+             for _ in range(4)])
+    snap = obs.snapshot()
+    obs.disable()
+    obs.reset()
+    report["telemetry"] = {
+        "identical_with_tracing": bool(
+            np.array_equal(traced_labels, sweep_labels)),
+        "span_rollup": snap["spans"],
+        "counters": snap["counters"],
+        "windows": snap["windows"],
     }
 
     if out_path:

@@ -20,6 +20,15 @@ MODE="smoke"
 if [ "${1:-}" = "--full" ]; then
     MODE="full"
     OUT_DIR="."
+    # disabled-mode overhead gate: remember the committed end-to-end
+    # build figure BEFORE the run overwrites the artifact — the fresh
+    # run (tracing disabled) must stay within 2% of it
+    PREV_E2E="$(python - <<'PY' 2>/dev/null || true
+import json
+print(json.load(open("BENCH_index.json"))["vectorized"]["end_to_end_build_s"])
+PY
+)"
+    export PREV_E2E
     python benchmarks/index_bench.py --out "$OUT_DIR/BENCH_index.json"
     python benchmarks/service_bench.py --out "$OUT_DIR/BENCH_service.json"
 else
@@ -39,7 +48,7 @@ else
 fi
 
 python - "$OUT_DIR" "$MODE" <<'EOF'
-import json, math, sys
+import json, math, os, sys
 
 out_dir, mode = sys.argv[1], sys.argv[2]
 failures = []
@@ -53,10 +62,15 @@ EXACT_FLAGS = {
     # must (a) actually engage at bench scale and (b) stay byte-identical
     # to the unpruned sweep — a wrong prune is a correctness bug, not a
     # perf regression
+    # telemetry.identical_with_tracing: a tracing-enabled re-run must
+    # reproduce the untraced outputs byte-for-byte — observability that
+    # perturbs the computation is a correctness bug
     "BENCH_index.json": ["identical_outputs", "incremental.identical",
-                         "pruning.identical_outputs", "pruning.screened"],
+                         "pruning.identical_outputs", "pruning.screened",
+                         "telemetry.identical_with_tracing"],
     "BENCH_service.json": ["sweep_identical_to_sequential",
-                           "hit_zero_distance_rows"],
+                           "hit_zero_distance_rows",
+                           "telemetry.identical_with_tracing"],
 }
 FLOORS = {
     "smoke": {
@@ -106,7 +120,7 @@ CEILINGS = {
 }
 
 
-def check(path, required, ratio_keys, metric_keys=()):
+def check(path, required, ratio_keys, metric_keys=(), rollup_keys=()):
     with open(f"{out_dir}/{path}") as f:
         r = json.load(f)
     flat = {}
@@ -117,6 +131,13 @@ def check(path, required, ratio_keys, metric_keys=()):
             if isinstance(v, dict):
                 walk(v, f"{prefix}{k}.")
     walk(r)
+    for k in rollup_keys:
+        # the telemetry span rollup must actually contain spans — an
+        # empty dict means the tracer silently stopped recording
+        v = flat.get(k)
+        if not isinstance(v, dict) or not v:
+            failures.append(f"{path}: {k!r} must be a non-empty span "
+                            f"rollup dict (got {v!r})")
     for k in required:
         if k not in flat:
             failures.append(f"{path}: missing key {k!r}")
@@ -173,23 +194,50 @@ check("BENCH_index.json",
                 "pruning.speedup_vs_unpruned", "pruning.screen_build_s",
                 "pruning.identical_outputs",
                 "build.speedup_end_to_end", "build.speedup_host_pipeline",
-                "build.speedup_finex_build", "build.speedup_materialize"],
+                "build.speedup_finex_build", "build.speedup_materialize",
+                "telemetry.identical_with_tracing",
+                "telemetry.tracing_overhead_ratio",
+                "telemetry.span_rollup", "telemetry.counters"],
       ratio_keys=["build.speedup_end_to_end", "build.speedup_host_pipeline",
                   "build.speedup_finex_build", "build.speedup_eps_star",
                   "build.speedup_minpts_star", "build.speedup_materialize",
                   "materialize.transfer_reduction",
                   "incremental.speedup_vs_rebuild",
                   "incremental.delete_speedup_vs_rebuild",
-                  "pruning.speedup_vs_unpruned"],
-      metric_keys=["metric", "materialize.metric"])
+                  "pruning.speedup_vs_unpruned",
+                  "telemetry.tracing_overhead_ratio"],
+      metric_keys=["metric", "materialize.metric"],
+      rollup_keys=["telemetry.span_rollup"])
 check("BENCH_service.json",
       required=["n", "eps", "minpts", "k", "build_s", "hit_s",
                 "hit_zero_distance_rows", "sweep_s", "sequential_s",
                 "sweep_identical_to_sequential",
                 "service.settings_per_s", "service.batched_sweeps",
-                "service.store"],
+                "service.store",
+                "telemetry.identical_with_tracing",
+                "telemetry.counters", "telemetry.windows"],
       ratio_keys=["cache_hit_speedup", "sweep_vs_sequential",
-                  "service.settings_per_s"])
+                  "service.settings_per_s"],
+      rollup_keys=["telemetry.span_rollup"])
+
+# disabled-mode overhead gate (full mode only): the fresh tracing-off
+# end-to-end build must stay within 2% of the committed figure captured
+# before this run overwrote the artifact. Wall-clock on one host — the
+# smoke/CI lanes skip it (shared-runner noise), the committed artifacts
+# enforce it where they are produced.
+prev = os.environ.get("PREV_E2E", "").strip()
+if mode == "full" and prev:
+    with open(f"{out_dir}/BENCH_index.json") as f:
+        new_e2e = json.load(f)["vectorized"]["end_to_end_build_s"]
+    ratio = new_e2e / float(prev)
+    if ratio > 1.02:
+        failures.append(
+            f"BENCH_index.json: disabled-mode end_to_end_build_s "
+            f"{new_e2e} is {ratio:.3f}x the committed {prev} "
+            f"(> 1.02 overhead ceiling)")
+    else:
+        print(f"disabled-mode overhead OK: end_to_end_build_s {new_e2e} "
+              f"vs committed {prev} ({ratio:.3f}x <= 1.02)")
 
 if failures:
     print(f"BENCH regression guard FAILED ({mode} floors):")

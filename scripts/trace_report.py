@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Offline reader for REPRO_TRACE JSONL span exports.
+
+Usage::
+
+    python scripts/trace_report.py trace.jsonl [--top N] [--json]
+
+Validates the span schema strictly (every record must carry the full
+key set, ids must be unique, parents must exist in the same thread one
+nesting level up) and exits non-zero on any malformed line — CI runs
+this as a smoke step over the unit-lane trace artifact, so a schema
+drift in ``repro.obs.trace`` fails the build instead of shipping an
+unreadable artifact. On success prints the top-N spans by self-time and
+a per-name rollup table (count / total / self / device seconds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_KEYS = {
+    "name": str,
+    "id": int,
+    "parent": (int, type(None)),
+    "depth": int,
+    "thread": int,
+    "ts": (int, float),
+    "wall_s": (int, float),
+    "self_s": (int, float),
+    "device_s": (int, float),
+    "attrs": dict,
+}
+
+
+def load_spans(path):
+    """Parse and validate a JSONL trace. Returns the span list; raises
+    ``ValueError`` naming the offending line on any malformed record."""
+    spans = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"line {lineno}: not valid JSON ({e})")
+            if not isinstance(rec, dict):
+                raise ValueError(f"line {lineno}: record is not an object")
+            for key, typ in REQUIRED_KEYS.items():
+                if key not in rec:
+                    raise ValueError(f"line {lineno}: missing key {key!r}")
+                if not isinstance(rec[key], typ):
+                    raise ValueError(
+                        f"line {lineno}: key {key!r} has type "
+                        f"{type(rec[key]).__name__}, expected {typ}"
+                    )
+            if isinstance(rec["wall_s"], bool) or rec["wall_s"] < 0:
+                raise ValueError(f"line {lineno}: wall_s must be >= 0")
+            spans.append(rec)
+    by_id = {}
+    for rec in spans:
+        if rec["id"] in by_id:
+            raise ValueError(f"duplicate span id {rec['id']}")
+        by_id[rec["id"]] = rec
+    # spans are emitted on exit, so children precede their parents in
+    # the file — validate nesting over the full id map
+    for rec in spans:
+        parent = rec["parent"]
+        if parent is None:
+            if rec["depth"] != 0:
+                raise ValueError(
+                    f"span {rec['id']} ({rec['name']!r}) has no parent "
+                    f"but depth {rec['depth']}"
+                )
+            continue
+        if parent not in by_id:
+            raise ValueError(
+                f"span {rec['id']} ({rec['name']!r}) references missing "
+                f"parent {parent}"
+            )
+        p = by_id[parent]
+        if rec["depth"] != p["depth"] + 1:
+            raise ValueError(
+                f"span {rec['id']} ({rec['name']!r}) depth {rec['depth']}"
+                f" != parent depth {p['depth']} + 1"
+            )
+        if rec["thread"] != p["thread"]:
+            raise ValueError(
+                f"span {rec['id']} ({rec['name']!r}) crosses threads: "
+                f"{rec['thread']} vs parent {p['thread']}"
+            )
+    return spans
+
+
+def rollup(spans):
+    """Per-name aggregate: {name: {count, total_s, self_s, device_s}}."""
+    agg = {}
+    for rec in spans:
+        a = agg.setdefault(
+            rec["name"],
+            {"count": 0, "total_s": 0.0, "self_s": 0.0, "device_s": 0.0},
+        )
+        a["count"] += 1
+        a["total_s"] += rec["wall_s"]
+        a["self_s"] += rec["self_s"]
+        a["device_s"] += rec["device_s"]
+    return agg
+
+
+def report(spans, top=10):
+    """Human-readable report string: top-N by self-time + rollup table."""
+    lines = [f"{len(spans)} spans, {len({s['name'] for s in spans})} names"]
+    lines.append("")
+    lines.append(f"top {top} spans by self-time:")
+    lines.append(f"  {'self_s':>10}  {'wall_s':>10}  {'device_s':>10}  span")
+    for rec in sorted(spans, key=lambda r: -r["self_s"])[:top]:
+        attrs = ", ".join(f"{k}={v}" for k, v in sorted(rec["attrs"].items()))
+        label = rec["name"] + (f" [{attrs}]" if attrs else "")
+        lines.append(
+            f"  {rec['self_s']:>10.4f}  {rec['wall_s']:>10.4f}  "
+            f"{rec['device_s']:>10.4f}  {label}"
+        )
+    lines.append("")
+    lines.append("per-phase rollup:")
+    lines.append(
+        f"  {'count':>6}  {'total_s':>10}  {'self_s':>10}  "
+        f"{'device_s':>10}  phase"
+    )
+    agg = rollup(spans)
+    for name, a in sorted(agg.items(), key=lambda kv: -kv[1]["self_s"]):
+        lines.append(
+            f"  {a['count']:>6}  {a['total_s']:>10.4f}  "
+            f"{a['self_s']:>10.4f}  {a['device_s']:>10.4f}  {name}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="JSONL span export (REPRO_TRACE output)")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument(
+        "--json",
+        action="store_true",
+        help="emit the per-phase rollup as JSON instead of the tables",
+    )
+    args = ap.parse_args(argv)
+    try:
+        spans = load_spans(args.trace)
+    except ValueError as e:
+        print(f"malformed trace {args.trace}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    if args.json:
+        print(json.dumps(rollup(spans), indent=2, sort_keys=True))
+    else:
+        print(report(spans, top=args.top))
+
+
+if __name__ == "__main__":
+    main()

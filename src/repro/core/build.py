@@ -35,6 +35,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.ordering import ClusterOrdering, FinexOrdering
 from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
 
@@ -197,6 +198,15 @@ def finex_sweep(counts: np.ndarray, csr: CSRNeighborhoods, C: np.ndarray,
                      outer-loop run that finally emitted it, -1 if none
       run_triggers — per run, its outer-loop trigger object id
     """
+    with obs.span("build.finex_sweep", n=int(counts.shape[0]),
+                  active=(-1 if active is None else len(active))) as sp:
+        sweep = _finex_sweep_impl(counts, csr, C, active)
+        sp.annot(runs=int(sweep["run_triggers"].shape[0]))
+    return sweep
+
+
+def _finex_sweep_impl(counts, csr, C, active=None) -> dict:
+    # untraced body of :func:`finex_sweep`
     n = counts.shape[0]
     R = np.full(n, np.inf, dtype=np.float64)
     N = counts.astype(np.int64)               # o.N — weighted |N_ε(o)|
@@ -284,6 +294,13 @@ def finex_build(engine: NeighborEngine, eps: float, minpts: int,
     lets ``FinexIndex.insert``/``delete`` stitch unaffected run
     subsequences instead of re-sweeping the whole dataset.
     """
+    with obs.span("build.finex_build", n=engine.n, eps=float(eps),
+                  minpts=int(minpts), metric=engine.metric_name):
+        return _finex_build_impl(engine, eps, minpts, csr, run_meta)
+
+
+def _finex_build_impl(engine, eps, minpts, csr=None, run_meta=None):
+    # untraced body of :func:`finex_build`
     n = engine.n
     counts, csr, C = _prepare(engine, eps, minpts, csr)
     sweep = finex_sweep(counts, csr, C)

@@ -37,15 +37,34 @@ the (always exact) full-rebuild path instead.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
 from scipy import sparse
 from scipy.sparse.csgraph import connected_components
 
+from repro import obs
 from repro.neighbors.engine import CSRNeighborhoods
 
 
+def _traced(name):
+    """Wrap a delta primitive in an obs span (a no-op branch while
+    tracing is disabled — the primitives run once per mutation, never
+    per pair)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with obs.span(name):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+    return deco
+
+
+@_traced("delta.core_components")
 def core_components(
     csr: CSRNeighborhoods,
     core: np.ndarray,
@@ -212,6 +231,7 @@ def merge_insert_components(
     return np.concatenate([labels_out[row_nodes], labels_out[k:]])
 
 
+@_traced("delta.splice_insert")
 def splice_insert(
     csr: CSRNeighborhoods,
     add_lens: np.ndarray,
@@ -267,6 +287,7 @@ def splice_insert(
     )
 
 
+@_traced("delta.splice_delete")
 def splice_delete(
     csr: CSRNeighborhoods,
     keep: np.ndarray,
@@ -316,6 +337,7 @@ def splice_delete(
     return csr_new, removed_w, min_removed
 
 
+@_traced("delta.stitch")
 def stitch(
     n: int,
     clean: np.ndarray,

@@ -28,6 +28,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.build import finex_build, finex_sweep
 from repro.core.delta import (core_components, merge_insert_components,
                               splice_delete, splice_insert, stitch,
@@ -178,16 +179,21 @@ class FinexIndex:
                 "ε*-queries need the distance engine for verification; "
                 "load the index with its raw data (FinexIndex.load(..., "
                 "data=...)) or use minpts_star/clustering")
-        return eps_star_query(self.ordering, self.engine, eps_star,
-                              stats=stats if stats is not None
-                              else self.query_stats)
+        with obs.span("index.eps_star", eps_star=float(eps_star),
+                      n=self.n):
+            return eps_star_query(self.ordering, self.engine, eps_star,
+                                  stats=stats if stats is not None
+                                  else self.query_stats)
 
     def minpts_star(self, minpts_star: int,
                     stats: Optional[QueryStats] = None) -> np.ndarray:
         """Exact labels at (ε, MinPts* ≥ MinPts) — §5.4, zero distances."""
-        return minpts_star_query(self.ordering, self.csr, minpts_star,
-                                 stats=stats if stats is not None
-                                 else self.query_stats)
+        with obs.span("index.minpts_star", minpts_star=int(minpts_star),
+                      n=self.n):
+            return minpts_star_query(self.ordering, self.csr,
+                                     minpts_star,
+                                     stats=stats if stats is not None
+                                     else self.query_stats)
 
     # ---------------------------------------------- incremental updates
     def insert(self, points, *, weights: Optional[np.ndarray] = None,
@@ -234,12 +240,22 @@ class FinexIndex:
         # (bad weights, a non-bit-symmetric user metric tripping the
         # component-closure check, ...) leaves the whole index untouched
         snap = eng.state_snapshot()
-        try:
-            return self._insert_impl(canon_new, weights, m, n_old,
-                                     was_core, rebuild_threshold)
-        except BaseException:
-            eng.state_restore(snap)
-            raise
+        with obs.span("index.insert", count=m, n=n_old,
+                      metric=self.metric) as sp:
+            try:
+                report = self._insert_impl(canon_new, weights, m, n_old,
+                                           was_core, rebuild_threshold)
+            except BaseException:
+                eng.state_restore(snap)
+                raise
+            sp.annot(mode=report["mode"],
+                     affected=report["affected"])
+            if obs.enabled():
+                obs.count("delta.inserts")
+                obs.count(f"delta.mode.{report['mode']}")
+                obs.observe("delta.affected_frac",
+                            report["affected_frac"])
+            return report
 
     def _insert_impl(self, canon_new, weights, m: int, n_old: int,
                      was_core: np.ndarray,
@@ -371,11 +387,21 @@ class FinexIndex:
         if ids.size >= self.n:
             raise ValueError("cannot delete every object in the index")
         snap = self.engine.state_snapshot()
-        try:
-            return self._delete_impl(ids, rebuild_threshold)
-        except BaseException:
-            self.engine.state_restore(snap)
-            raise
+        with obs.span("index.delete", count=int(ids.size), n=self.n,
+                      metric=self.metric) as sp:
+            try:
+                report = self._delete_impl(ids, rebuild_threshold)
+            except BaseException:
+                self.engine.state_restore(snap)
+                raise
+            sp.annot(mode=report["mode"],
+                     affected=report["affected"])
+            if obs.enabled():
+                obs.count("delta.deletes")
+                obs.count(f"delta.mode.{report['mode']}")
+                obs.observe("delta.affected_frac",
+                            report["affected_frac"])
+            return report
 
     def _delete_impl(self, ids: np.ndarray,
                      rebuild_threshold: float) -> dict:
@@ -529,12 +555,17 @@ class FinexIndex:
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
         cores = int(np.isfinite(self.ordering.C).sum())
-        # prune rates of the engine's most recent sweep (the build, or
-        # the last strip/verification batch) — absent for engine-less
-        # indexes and sweeps that ran unscreened
+        # prune rates of the engine's most recent FULL sweep — mutations
+        # run strip sweeps, but those report separately (``strip``
+        # below), so post-insert pruning stats keep describing the build
+        # sweep. Absent for engine-less indexes / unscreened sweeps.
         pruning = None
+        strip = None
         if self.engine is not None:
-            pruning = (self.engine.last_materialize or {}).get("pruning")
+            full = (self.engine.last_full_materialize
+                    or self.engine.last_materialize or {})
+            pruning = full.get("pruning")
+            strip = self.engine.last_strip or None
         return {
             "n": self.n,
             "eps": self.eps,
@@ -549,8 +580,13 @@ class FinexIndex:
             "query_candidates": self.query_stats.candidates,
             "query_verification_pairs": self.query_stats.verification_pairs,
             "pruning": pruning,
+            "strip": strip,
             "version": self.version,
             "mutations": len(self.delta_log),
+            # the process-wide observability snapshot (documented schema:
+            # repro.obs.telemetry) — {"enabled": False, ...} empties
+            # while tracing is off
+            "telemetry": obs.snapshot(),
         }
 
     # ----------------------------------------------------------- persist

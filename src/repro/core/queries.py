@@ -31,6 +31,7 @@ import numpy as np
 from scipy.sparse import csr_matrix
 from scipy.sparse.csgraph import connected_components
 
+from repro import obs
 from repro.core.extract import (cluster_spans, query_clustering,
                                 query_clustering_batch)
 from repro.core.ordering import FinexOrdering
@@ -254,6 +255,22 @@ def eps_star_batch(index: FinexOrdering, engine: NeighborEngine,
     """
     if stats is None:
         stats = QueryStats()
+    with obs.span("queries.eps_star_batch", n=index.n,
+                  k=int(np.atleast_1d(eps_stars).size)) as sp:
+        labels = _eps_star_batch_impl(index, engine, eps_stars, stats,
+                                      verify_batch)
+        sp.annot(candidates=stats.candidates,
+                 verification_pairs=stats.verification_pairs)
+        if obs.enabled():
+            obs.count("queries.eps_star_batches")
+            obs.count("queries.verification_pairs",
+                      stats.verification_pairs)
+    return labels
+
+
+def _eps_star_batch_impl(index, engine, eps_stars, stats,
+                         verify_batch=4096):
+    # untraced body of :func:`eps_star_batch`
     es = np.asarray([float(np.float32(e)) for e in np.atleast_1d(eps_stars)],
                     dtype=np.float64)
     eps_gen = float(np.float32(index.eps))
@@ -349,6 +366,17 @@ def minpts_star_batch(index: FinexOrdering, csr: CSRNeighborhoods,
     """
     if stats is None:
         stats = QueryStats()
+    with obs.span("queries.minpts_star_batch", n=index.n,
+                  k=int(np.atleast_1d(minpts_stars).size)) as sp:
+        out = _minpts_star_batch_impl(index, csr, minpts_stars, stats)
+        sp.annot(fast_path=stats.fast_path)
+        if obs.enabled():
+            obs.count("queries.minpts_star_batches")
+    return out
+
+
+def _minpts_star_batch_impl(index, csr, minpts_stars, stats):
+    # untraced body of :func:`minpts_star_batch`
     ms = [int(m) for m in np.atleast_1d(minpts_stars)]
     if any(m < index.minpts for m in ms):
         raise ValueError("MinPts* must be >= generating MinPts")

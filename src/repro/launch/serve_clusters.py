@@ -14,10 +14,12 @@ keeps indexes warm across requests (spilling LRU victims to disk when
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.data.synthetic import gaussian_mixture
 from repro.service import (BuildRequest, ClusterRequest, ClusterService,
                            IndexStore, StatsRequest, SweepRequest)
@@ -66,9 +68,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny datasets / few requests")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump the final Telemetry.snapshot() (plus the "
+                         "service counters) to PATH on exit; implies "
+                         "tracing on")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="log a service stats line every N served "
+                         "requests (0 = off); implies tracing on")
     args = ap.parse_args(argv)
     if args.smoke:
         args.n, args.requests, args.datasets = 800, 8, 2
+    if args.stats_json or args.stats_every:
+        # observability requested: turn the tracer on (REPRO_TRACE may
+        # already have enabled it, with a JSONL sink attached)
+        obs.enable()
 
     rng = np.random.default_rng(args.seed)
     datasets = [gaussian_mixture(args.n, d=args.d, k=8, seed=args.seed + i)
@@ -79,7 +92,8 @@ def main(argv=None) -> dict:
         manager = CheckpointManager(args.store_dir)
     svc = ClusterService(store=IndexStore(capacity=args.capacity,
                                           manager=manager),
-                         slots=args.slots)
+                         slots=args.slots,
+                         stats_every=args.stats_every)
     reqs = _request_stream(datasets, args.eps, args.minpts, args.requests,
                            args.sweep_k, rng)
 
@@ -95,6 +109,12 @@ def main(argv=None) -> dict:
     print(f"  planner batches: {st['batched_sweeps']} "
           f"(coalesced {st['coalesced_settings']} settings)")
     print(f"  store: {st['store']}")
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump({"seconds": dt, "settings_per_s": qps, **st},
+                      f, indent=2, default=str)
+        print(f"  stats snapshot -> {args.stats_json}")
+    obs.flush()
     return {"seconds": dt, "settings_per_s": qps, **st}
 
 

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.metrics import MetricLike, get_metric
 # re-exported for backwards compatibility: these lived here before the
 # metric registry (PR 4) pulled everything metric-specific into
@@ -229,8 +230,15 @@ class NeighborEngine:
         # upward when rows overflow
         self._slot_cap = 1 << max(7, (int(slot_cap) - 1).bit_length())
         # instrumentation for benchmarks: what did the last materialize
-        # sweep actually move host<->device, and which path did it take
+        # sweep actually move host<->device, and which path did it take.
+        # ``last_materialize`` tracks the most recent *full* sweep (and
+        # stays the back-compat name); ``last_full_materialize`` is its
+        # explicit alias and ``last_strip`` the most recent incremental
+        # strip sweep — kept in separate fields so a post-insert
+        # ``stats()["pruning"]`` still reflects the last full sweep
         self.last_materialize: dict = {}
+        self.last_full_materialize: dict = {}
+        self.last_strip: dict = {}
         self._state = self.metric.device_state(self.metric.canonicalize(data))
         self.n = int(self._state[0].shape[0])
         if weights is None:
@@ -340,7 +348,11 @@ class NeighborEngine:
                 (self.prune == "auto" and self.n < 2048):
             return None
         if self._screen is None:
-            self._screen = self._screen_build() or False
+            with obs.span("engine.screen_build", n=self.n,
+                          metric=self.metric.name):
+                self._screen = self._screen_build() or False
+            if self._screen is not False and obs.enabled():
+                obs.count("engine.screen_builds")
         return self._screen or None
 
     def _screen_build(self):
@@ -685,6 +697,7 @@ class NeighborEngine:
                 "candidate_fraction": float(cand_pairs) / max(1, n * n),
             },
         }
+        self.last_full_materialize = self.last_materialize
         return lens, ind_chunks, dist_chunks
 
     def materialize(self, eps: float) -> Tuple[np.ndarray, CSRNeighborhoods]:
@@ -699,6 +712,30 @@ class NeighborEngine:
         the result is byte-identical to the dense reference
         (``repro.core.reference.reference_materialize``).
         """
+        with obs.span("engine.materialize", n=self.n, eps=float(eps),
+                      metric=self.metric.name) as sp:
+            counts, csr = self._materialize_impl(eps)
+            if obs.enabled():
+                rep = self.last_full_materialize
+                nnz = int(csr.indptr[-1])
+                sp.annot(mode=rep.get("mode"), nnz=nnz,
+                         host_bytes=rep.get("host_bytes"))
+                obs.count("engine.materializes")
+                obs.count("engine.host_bytes",
+                          int(rep.get("host_bytes") or 0))
+                obs.observe("engine.csr_nnz", nnz)
+                pruning = rep.get("pruning") or {}
+                if pruning.get("screened"):
+                    obs.count("engine.tiles_skipped",
+                              int(pruning.get("tiles_skipped") or 0))
+                    obs.observe(
+                        "engine.candidate_fraction",
+                        float(pruning.get("candidate_fraction") or 0.0))
+        return counts, csr
+
+    def _materialize_impl(self, eps: float
+                          ) -> Tuple[np.ndarray, CSRNeighborhoods]:
+        # untraced body of :meth:`materialize`
         use_slots = self.emit == "slots" or (self.emit == "auto"
                                              and self.use_pallas)
         scr = self._screen_get()
@@ -807,6 +844,7 @@ class NeighborEngine:
             "host_bytes_dense": self._dense_sweep_bytes(),
             "pruning": {"screened": False},
         }
+        self.last_full_materialize = self.last_materialize
         return lens, ind_chunks, dist_chunks
 
     def _sweep_slots(self, eps: float):
@@ -878,6 +916,7 @@ class NeighborEngine:
             "host_bytes_dense": self._dense_sweep_bytes(),
             "pruning": {"screened": False},
         }
+        self.last_full_materialize = self.last_materialize
         return lens, ind_chunks, dist_chunks
 
     def strip_materialize(self, rows_state, eps: float, corpus=None,
@@ -905,6 +944,31 @@ class NeighborEngine:
         members — entries stay byte-identical by the usual superset
         argument.
         """
+        nq = int(rows_state[0].shape[0])
+        with obs.span("engine.strip", rows=nq, eps=float(eps),
+                      metric=self.metric.name) as sp:
+            lens, cols, dists = self._strip_impl(
+                rows_state, eps, corpus=corpus, batch_rows=batch_rows)
+        # the strip records its own report — it must NOT clobber
+        # ``last_materialize``/``last_full_materialize``, so post-insert
+        # stats keep describing the last full sweep
+        self.last_strip = {
+            "mode": "strip", "metric": self.metric.name,
+            "rows": nq, "eps": float(eps),
+            "corpus": (self.n if corpus is None
+                       else int(corpus[0].shape[0])),
+            "nnz": int(cols.size),
+            "screened": bool(corpus is None and self._screen),
+        }
+        sp.annot(nnz=int(cols.size))
+        if obs.enabled():
+            obs.count("engine.strips")
+        return lens, cols, dists
+
+    def _strip_impl(self, rows_state, eps: float, corpus=None,
+                    batch_rows: Optional[int] = None
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        # untraced body of :meth:`strip_materialize`
         E_q = None
         if corpus is None:
             scr = self._screen_get()

@@ -1,0 +1,90 @@
+"""Observability layer: span tracing + counters/gauges + rolling stats.
+
+Zero-overhead when disabled: the whole subsystem is guarded by ONE
+module-level flag (``repro.obs.trace.ENABLED``). Instrumented call
+sites throughout the engine / core / service layers call ``obs.span``,
+``obs.count``, ``obs.gauge`` and ``obs.observe``; with the flag off each
+of those is a single boolean check and a no-op, and every computation's
+output is byte-identical either way.
+
+Quickstart::
+
+    from repro import obs
+
+    obs.enable(sink="trace.jsonl")       # or REPRO_TRACE=trace.jsonl env
+    idx = FinexIndex.build(data, eps=0.4, minpts=8)
+    idx.stats()["telemetry"]             # counters/windows/span rollups
+    obs.snapshot()                       # same schema, process-wide
+    obs.disable()                        # flushes the JSONL sink
+
+then ``python scripts/trace_report.py trace.jsonl`` for a top-N
+self-time table and per-phase rollup.
+"""
+
+from repro.obs import trace
+from repro.obs.rolling import RollingWindow, quantile
+from repro.obs.telemetry import ObsWarning, Telemetry, telemetry
+from repro.obs.trace import (
+    Span,
+    configure,
+    disable,
+    enable,
+    enabled,
+    flush,
+    span,
+)
+
+
+def count(name, delta=1):
+    """Increment counter ``name`` (no-op while tracing is disabled)."""
+    telemetry.count(name, delta)
+
+
+def gauge(name, value):
+    """Set gauge ``name`` to ``value`` (no-op while disabled)."""
+    telemetry.gauge(name, value)
+
+
+def observe(name, value):
+    """Push ``value`` into rolling window ``name`` (no-op while
+    disabled); fires the window's threshold warning on breach."""
+    telemetry.observe(name, value)
+
+
+def set_threshold(name, limit, stat="median"):
+    """Register an early-warning limit on window ``name``."""
+    telemetry.set_threshold(name, limit, stat)
+
+
+def snapshot():
+    """The process-wide telemetry snapshot (documented schema in
+    ``repro.obs.telemetry``)."""
+    return telemetry.snapshot()
+
+
+def reset():
+    """Clear all counters/gauges/windows/span rollups."""
+    telemetry.reset()
+
+
+__all__ = [
+    "ObsWarning",
+    "RollingWindow",
+    "Span",
+    "Telemetry",
+    "configure",
+    "count",
+    "disable",
+    "enable",
+    "enabled",
+    "flush",
+    "gauge",
+    "observe",
+    "quantile",
+    "reset",
+    "set_threshold",
+    "snapshot",
+    "span",
+    "telemetry",
+    "trace",
+]

@@ -1,0 +1,100 @@
+"""Fixed-size rolling windows with order-statistic summaries.
+
+A ``RollingWindow`` keeps the last ``size`` observations of one series
+(a span's wall time, a queue depth, a candidate fraction, ...) and
+answers median / p95 / arbitrary quantiles over that window with
+numpy-style linear interpolation — without importing numpy, so the
+window math stays dependency-free and usable from the serving loop.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+
+
+def quantile(values, q):
+    """Linear-interpolation quantile of ``values`` (numpy default
+    method). ``q`` in [0, 1]. Raises ``ValueError`` on empty input."""
+    if not values:
+        raise ValueError("quantile of empty sequence")
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q!r}")
+    data = sorted(values)
+    pos = q * (len(data) - 1)
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    if lo == hi:
+        return float(data[lo])
+    frac = pos - lo
+    return float(data[lo]) * (1.0 - frac) + float(data[hi]) * frac
+
+
+class RollingWindow:
+    """Last-``size`` observations of one scalar series."""
+
+    __slots__ = ("size", "_buf", "count", "total")
+
+    def __init__(self, size=256):
+        if size < 1:
+            raise ValueError(f"window size must be >= 1, got {size!r}")
+        self.size = size
+        self._buf = deque(maxlen=size)
+        # lifetime (not window-limited) count / sum, for rate math
+        self.count = 0
+        self.total = 0.0
+
+    def push(self, value):
+        value = float(value)
+        self._buf.append(value)
+        self.count += 1
+        self.total += value
+
+    def __len__(self):
+        return len(self._buf)
+
+    def values(self):
+        return list(self._buf)
+
+    def last(self):
+        return self._buf[-1] if self._buf else None
+
+    def median(self):
+        return quantile(self._buf, 0.5) if self._buf else None
+
+    def p95(self):
+        return quantile(self._buf, 0.95) if self._buf else None
+
+    def stat(self, name):
+        """Named statistic over the current window: ``last`` | ``mean``
+        | ``median`` | ``p95`` | ``max`` | ``min``."""
+        if not self._buf:
+            return None
+        if name == "last":
+            return self._buf[-1]
+        if name == "mean":
+            return sum(self._buf) / len(self._buf)
+        if name == "median":
+            return self.median()
+        if name == "p95":
+            return self.p95()
+        if name == "max":
+            return max(self._buf)
+        if name == "min":
+            return min(self._buf)
+        raise ValueError(f"unknown window statistic {name!r}")
+
+    def summary(self):
+        """Snapshot dict for ``Telemetry.snapshot()``."""
+        if not self._buf:
+            return {"count": self.count, "window": 0}
+        return {
+            "count": self.count,
+            "window": len(self._buf),
+            "last": self._buf[-1],
+            "mean": sum(self._buf) / len(self._buf),
+            "median": self.median(),
+            "p95": self.p95(),
+            "max": max(self._buf),
+            "min": min(self._buf),
+        }

@@ -1,0 +1,196 @@
+"""Typed counter/gauge registry + span rollups + early-warning thresholds.
+
+One process-wide ``Telemetry`` instance (``telemetry`` below, reachable
+as ``repro.obs.telemetry``) aggregates everything the tracer and the
+instrumented call sites report:
+
+  * counters   — monotonically increasing ints (``count("store.hits")``)
+  * gauges     — last-value scalars (``gauge("service.queue_depth", 3)``)
+  * windows    — rolling series with median/p95 (``observe(name, v)``);
+                 every span's wall time is auto-fed into the
+                 ``span.<name>`` window, so latency percentiles come for
+                 free wherever spans are wired
+  * spans      — per-name rollup {count, total_s, self_s, device_s}
+  * thresholds — early-warning limits on window statistics; a breach
+                 fires ``warnings.warn(ObsWarning)`` once and stays
+                 latched until the statistic recovers below the limit
+
+Every mutating entry point checks ``trace.ENABLED`` (the subsystem's one
+module-level flag) and returns immediately when tracing is off, so the
+disabled-mode cost at a call site is one attribute load and one branch.
+
+``snapshot()`` is the documented read API — the same dict is returned by
+the ``ClusterService`` Stats verb (``stats()["telemetry"]``) and by
+``FinexIndex.stats()["telemetry"]``::
+
+    {
+        "enabled": bool,
+        "counters": {name: int},
+        "gauges": {name: float},
+        "windows": {name: {count, window, last, mean, median, p95,
+                           max, min}},
+        "spans": {name: {count, total_s, self_s, device_s}},
+        "thresholds": {name: {limit, stat, window, breached, breaches,
+                              value}},
+    }
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+from repro.obs import trace
+from repro.obs.rolling import RollingWindow
+
+
+class ObsWarning(UserWarning):
+    """Raised (via ``warnings.warn``) when a telemetry threshold is
+    breached."""
+
+
+class _Threshold:
+    __slots__ = ("window", "limit", "stat", "breached", "breaches")
+
+    def __init__(self, window, limit, stat):
+        self.window = window
+        self.limit = limit
+        self.stat = stat
+        self.breached = False
+        self.breaches = 0
+
+
+class Telemetry:
+    """Process-wide registry; all methods are thread-safe."""
+
+    def __init__(self, window_size=256):
+        self.window_size = window_size
+        self._lock = threading.Lock()
+        self._counters = {}
+        self._gauges = {}
+        self._windows = {}
+        self._spans = {}
+        self._thresholds = {}
+
+    # -- write side -----------------------------------------------------
+
+    def count(self, name, delta=1):
+        if not trace.ENABLED:
+            return
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + delta
+
+    def gauge(self, name, value):
+        if not trace.ENABLED:
+            return
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name, value):
+        """Push one observation into the ``name`` rolling window and
+        re-check any threshold registered on it."""
+        if not trace.ENABLED:
+            return
+        with self._lock:
+            window = self._windows.get(name)
+            if window is None:
+                window = self._windows[name] = RollingWindow(self.window_size)
+            window.push(value)
+            warn_msg = self._check_threshold(name)
+        if warn_msg is not None:
+            warnings.warn(warn_msg, ObsWarning, stacklevel=2)
+
+    def record_span(self, span):
+        """Called by ``trace.Span.__exit__``; rolls the span into the
+        per-name aggregate and its latency window."""
+        if not trace.ENABLED:
+            return
+        with self._lock:
+            agg = self._spans.get(span.name)
+            if agg is None:
+                agg = self._spans[span.name] = {
+                    "count": 0,
+                    "total_s": 0.0,
+                    "self_s": 0.0,
+                    "device_s": 0.0,
+                }
+            agg["count"] += 1
+            agg["total_s"] += span.wall_s
+            agg["self_s"] += span.self_s
+            agg["device_s"] += span.device_s
+        self.observe(f"span.{span.name}", span.wall_s)
+
+    # -- thresholds -----------------------------------------------------
+
+    def set_threshold(self, name, limit, stat="median"):
+        """Early-warning limit on window ``name``: whenever
+        ``stat(window) > limit`` the first breach warns (``ObsWarning``)
+        and latches; the latch resets once the statistic recovers, so a
+        sustained breach warns once, not once per observation."""
+        with self._lock:
+            window = self._windows.get(name)
+            if window is None:
+                window = self._windows[name] = RollingWindow(self.window_size)
+            self._thresholds[name] = _Threshold(window, float(limit), stat)
+
+    def _check_threshold(self, name):
+        # caller holds self._lock; returns a warning message or None
+        th = self._thresholds.get(name)
+        if th is None:
+            return None
+        value = th.window.stat(th.stat)
+        if value is None:
+            return None
+        if value > th.limit:
+            if not th.breached:
+                th.breached = True
+                th.breaches += 1
+                return (
+                    f"telemetry threshold breached: {name} {th.stat}="
+                    f"{value:.6g} > limit {th.limit:.6g}"
+                )
+        else:
+            th.breached = False
+        return None
+
+    # -- read side ------------------------------------------------------
+
+    def snapshot(self):
+        """The documented telemetry snapshot (see module docstring)."""
+        with self._lock:
+            return {
+                "enabled": trace.ENABLED,
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "windows": {n: w.summary() for n, w in self._windows.items()},
+                "spans": {n: dict(agg) for n, agg in self._spans.items()},
+                "thresholds": {
+                    name: {
+                        "limit": th.limit,
+                        "stat": th.stat,
+                        "window": len(th.window),
+                        "breached": th.breached,
+                        "breaches": th.breaches,
+                        "value": th.window.stat(th.stat),
+                    }
+                    for name, th in self._thresholds.items()
+                },
+            }
+
+    def reset(self):
+        """Drop all aggregates (thresholds keep their limits but lose
+        their windows' contents)."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._spans.clear()
+            self._windows.clear()
+            for name, th in self._thresholds.items():
+                window = RollingWindow(self.window_size)
+                self._windows[name] = window
+                th.window = window
+                th.breached = False
+                th.breaches = 0
+
+
+telemetry = Telemetry()

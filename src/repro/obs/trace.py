@@ -1,0 +1,248 @@
+"""Structured span tracer — zero overhead when disabled.
+
+One module-level flag (``ENABLED``) guards the entire observability
+subsystem: with it off, ``span()`` returns a shared no-op object and the
+telemetry registry drops every update, so instrumented hot paths pay one
+boolean check per call site and nothing else (byte-identical outputs
+either way — spans never touch the computation, they only time it).
+
+Enabled, ``span("materialize", n=..., metric=...)`` context managers
+record wall time (``time.perf_counter``), nest through a thread-local
+stack (children subtract from the parent's self-time), can attribute
+device wait explicitly via ``Span.fence(x)`` (a ``jax.block_until_ready``
+whose duration lands in ``device_s``), and on exit feed both the
+in-process rollup (``repro.obs.telemetry``) and, when a sink is
+configured, a JSONL export — one JSON object per line with enough
+``id``/``parent``/``depth`` structure to reconstruct the span tree
+offline (``scripts/trace_report.py``).
+
+Activation:
+  * ``REPRO_TRACE=/path/to/trace.jsonl`` in the environment enables
+    tracing at import time with a JSONL sink at that path.
+  * ``trace.configure(sink=..., enabled=True)`` / ``trace.enable()`` /
+    ``trace.disable()`` at runtime; ``sink`` accepts a path or any
+    file-like object with ``write``.
+"""
+
+from __future__ import annotations
+
+import atexit
+import itertools
+import json
+import os
+import threading
+import time
+
+# THE flag. Every obs entry point (span creation, counter/gauge/window
+# updates) checks this one module-level boolean and no-ops when False.
+ENABLED = False
+
+_UNSET = object()
+_SINK = None
+_SINK_OWNED = False
+_LOCK = threading.Lock()
+_TLS = threading.local()
+_NEXT_ID = itertools.count(1)
+_TELEMETRY = None
+
+
+def _get_telemetry():
+    # imported lazily: telemetry imports this module for the flag
+    global _TELEMETRY
+    if _TELEMETRY is None:
+        from repro.obs.telemetry import telemetry
+
+        _TELEMETRY = telemetry
+    return _TELEMETRY
+
+
+def _jsonable(obj):
+    """JSON fallback for span attributes: numpy scalars -> Python
+    scalars, anything else -> repr (a trace line must never fail to
+    serialize mid-request)."""
+    item = getattr(obj, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except (TypeError, ValueError):
+            pass
+    return repr(obj)
+
+
+class _NullSpan:
+    """The shared disabled-mode span: every method is a no-op."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+    def annot(self, **attrs):
+        return self
+
+    def fence(self, value):
+        return value
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """One timed region. Use through ``span(...)``, not directly."""
+
+    __slots__ = (
+        "name",
+        "attrs",
+        "span_id",
+        "parent_id",
+        "depth",
+        "t0",
+        "wall_s",
+        "child_s",
+        "device_s",
+    )
+
+    def __init__(self, name, attrs):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        stack = getattr(_TLS, "stack", None)
+        if stack is None:
+            stack = _TLS.stack = []
+        self.span_id = next(_NEXT_ID)
+        self.parent_id = stack[-1].span_id if stack else None
+        self.depth = len(stack)
+        self.wall_s = 0.0
+        self.child_s = 0.0
+        self.device_s = 0.0
+        stack.append(self)
+        self.t0 = time.perf_counter()
+        return self
+
+    def annot(self, **attrs):
+        """Attach result-side attributes (nnz, bytes, mode, ...) to the
+        span record."""
+        self.attrs.update(attrs)
+        return self
+
+    def fence(self, value):
+        """Block until ``value``'s device computation is done and charge
+        the wait to this span's ``device_s``. Returns ``value``
+        unchanged, so call sites can wrap expressions in place."""
+        import jax
+
+        t0 = time.perf_counter()
+        jax.block_until_ready(value)
+        self.device_s += time.perf_counter() - t0
+        return value
+
+    def __exit__(self, exc_type, exc, tb):
+        self.wall_s = time.perf_counter() - self.t0
+        stack = _TLS.stack
+        if stack and stack[-1] is self:
+            stack.pop()
+        if stack:
+            stack[-1].child_s += self.wall_s
+        _get_telemetry().record_span(self)
+        if _SINK is not None:
+            _emit(self)
+        return False
+
+    @property
+    def self_s(self):
+        return max(self.wall_s - self.child_s, 0.0)
+
+
+def _emit(span):
+    rec = {
+        "name": span.name,
+        "id": span.span_id,
+        "parent": span.parent_id,
+        "depth": span.depth,
+        "thread": threading.get_ident(),
+        "ts": span.t0,
+        "wall_s": span.wall_s,
+        "self_s": span.self_s,
+        "device_s": span.device_s,
+        "attrs": span.attrs,
+    }
+    line = json.dumps(rec, default=_jsonable)
+    with _LOCK:
+        if _SINK is not None:
+            _SINK.write(line + "\n")
+
+
+def span(name, **attrs):
+    """Start a traced region: ``with span("materialize", n=n) as sp:``.
+
+    Disabled mode returns the shared no-op span (one flag check, zero
+    allocation). Keyword arguments become the span's attributes; add
+    result-side attributes later with ``sp.annot(...)``.
+    """
+    if not ENABLED:
+        return _NULL_SPAN
+    return Span(name, attrs)
+
+
+def configure(sink=_UNSET, enabled=None):
+    """Reconfigure the tracer.
+
+    ``sink``: a path (opened for write, owned and closed by the tracer),
+    a file-like object (borrowed), or ``None`` to detach the current
+    sink. Omit to leave the sink unchanged. ``enabled``: set the module
+    flag; omit to leave it unchanged.
+    """
+    global _SINK, _SINK_OWNED, ENABLED
+    if sink is not _UNSET:
+        with _LOCK:
+            if _SINK is not None and _SINK_OWNED:
+                _SINK.close()
+            if sink is None:
+                _SINK, _SINK_OWNED = None, False
+            elif isinstance(sink, (str, os.PathLike)):
+                _SINK, _SINK_OWNED = open(sink, "w"), True
+            else:
+                _SINK, _SINK_OWNED = sink, False
+    if enabled is not None:
+        ENABLED = bool(enabled)
+
+
+def enable(sink=_UNSET):
+    """Turn tracing on (optionally wiring a sink in the same call)."""
+    configure(sink=sink, enabled=True)
+
+
+def disable():
+    """Turn tracing off and flush any sink (the sink stays attached)."""
+    configure(enabled=False)
+    flush()
+
+
+def enabled():
+    return ENABLED
+
+
+def flush():
+    with _LOCK:
+        if _SINK is not None:
+            _SINK.flush()
+
+
+@atexit.register
+def _close_sink():
+    global _SINK, _SINK_OWNED
+    with _LOCK:
+        if _SINK is not None:
+            _SINK.flush()
+            if _SINK_OWNED:
+                _SINK.close()
+            _SINK, _SINK_OWNED = None, False
+
+
+_env_sink = os.environ.get("REPRO_TRACE")
+if _env_sink:
+    enable(sink=_env_sink)

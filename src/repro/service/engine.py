@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.metrics import MetricLike
 from repro.service.planner import Setting, SweepPlanner
 from repro.service.store import IndexKey, IndexStore
@@ -82,7 +83,8 @@ class ClusterService:
     """Fixed-slot batched clustering engine over an ``IndexStore``."""
 
     def __init__(self, store: Optional[IndexStore] = None,
-                 slots: int = 8, capacity: int = 4, manager=None):
+                 slots: int = 8, capacity: int = 4, manager=None,
+                 stats_every: int = 0, stats_log=print):
         self.store = store if store is not None else IndexStore(
             capacity=capacity, manager=manager)
         self.slots = slots
@@ -90,17 +92,46 @@ class ClusterService:
         self.settings_answered = 0
         self.batched_sweeps = 0        # planner batches actually executed
         self.coalesced_settings = 0    # settings that rode a shared batch
+        # periodic stats line: every N served requests, one
+        # ``stats_log(...)`` call summarizing the counters (0 = off)
+        self.stats_every = int(stats_every)
+        self.stats_log = stats_log
+        self._next_stats_at = self.stats_every or None
 
     # ------------------------------------------------------------- loop
     def run(self, requests: Sequence[ServiceRequest]
             ) -> Sequence[ServiceRequest]:
         """Serve all requests to completion (slot window = batch)."""
         queue = list(requests)
-        while queue:
-            active = queue[:self.slots]
-            queue = queue[len(active):]
-            self._serve_window(active)
+        with obs.span("service.run", requests=len(queue)):
+            while queue:
+                if obs.enabled():
+                    obs.gauge("service.queue_depth", len(queue))
+                    obs.observe("service.queue_depth", len(queue))
+                active = queue[:self.slots]
+                queue = queue[len(active):]
+                with obs.span("service.window", size=len(active)):
+                    self._serve_window(active)
+                self._maybe_log_stats()
         return requests
+
+    def _maybe_log_stats(self) -> None:
+        """Emit the periodic stats line once per ``stats_every`` served
+        requests (crossing possibly several boundaries in one window)."""
+        if not self.stats_every or self.stats_log is None:
+            return
+        if self.requests_served >= self._next_stats_at:
+            while self._next_stats_at <= self.requests_served:
+                self._next_stats_at += self.stats_every
+            s = self.stats()
+            st = s["store"]
+            self.stats_log(
+                f"[cluster-service] served={s['requests_served']} "
+                f"settings={s['settings_answered']} "
+                f"sweeps={s['batched_sweeps']} "
+                f"coalesced={s['coalesced_settings']} "
+                f"store hits={st['hits']} builds={st['builds']} "
+                f"reloads={st['reloads']} spills={st['spills']}")
 
     def _serve_window(self, active: List[ServiceRequest]) -> None:
         # resolve indexes first: builds happen once per key per window
@@ -165,4 +196,8 @@ class ClusterService:
             "batched_sweeps": self.batched_sweeps,
             "coalesced_settings": self.coalesced_settings,
             "store": self.store.stats(),
+            # the process-wide observability snapshot (documented schema:
+            # repro.obs.telemetry) — this is the service's Stats verb
+            # payload, so a StatsRequest doubles as a /stats endpoint
+            "telemetry": obs.snapshot(),
         }

@@ -19,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.index import FinexIndex
 from repro.core.queries import QueryStats, eps_star_batch, minpts_star_batch
 
@@ -41,6 +42,12 @@ class SweepPlanner:
     def sweep(self, settings: Sequence[Setting],
               stats: Optional[QueryStats] = None) -> np.ndarray:
         """(K, n) exact labels for the K settings, in request order."""
+        with obs.span("planner.sweep", k=len(settings),
+                      n=self.index.n):
+            return self._sweep_impl(settings, stats)
+
+    def _sweep_impl(self, settings, stats=None) -> np.ndarray:
+        # untraced body of :meth:`sweep`
         if stats is None:
             stats = self.index.query_stats
         eps_pos, eps_vals = [], []

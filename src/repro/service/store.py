@@ -29,6 +29,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.index import FinexIndex
 from repro.metrics import MetricLike, get_metric
 from repro.neighbors.engine import dataset_fingerprint
@@ -110,7 +111,9 @@ class IndexStore:
         return None
 
     def _reload(self, key: IndexKey, data) -> FinexIndex:
-        idx = self.manager.restore_index(self._spilled[key], data=data)
+        with obs.span("store.reload", eps=key.eps, minpts=key.minpts):
+            idx = self.manager.restore_index(self._spilled[key],
+                                             data=data)
         self.reloads += 1
         self._admit(key, idx)
         return idx
@@ -125,6 +128,22 @@ class IndexStore:
         zero distance computations), "reload" (spilled npz re-read) or
         "build" (full materialize + ordering sweep).
         """
+        with obs.span("store.get_or_build", eps=float(eps),
+                      minpts=int(minpts)) as sp:
+            index, outcome = self._get_or_build_impl(
+                data, eps, minpts, metric=metric, weights=weights,
+                **build_kw)
+            sp.annot(outcome=outcome)
+            if obs.enabled():
+                obs.count(f"store.{outcome}s")
+                if outcome != "hit":
+                    obs.count("store.misses")
+        return index, outcome
+
+    def _get_or_build_impl(self, data, eps, minpts, *,
+                           metric="euclidean", weights=None,
+                           **build_kw):
+        # untraced body of :meth:`get_or_build`
         key = IndexKey(self._fingerprint_of(data, metric, weights),
                        float(np.float32(eps)), int(minpts))
         idx = self._resident.get(key)
@@ -205,6 +224,8 @@ class IndexStore:
     def _evict(self, key: IndexKey, index: FinexIndex) -> None:
         if self.manager is None:
             self.drops += 1
+            if obs.enabled():
+                obs.count("store.drops")
             return
         fp = index.fingerprint()
         if fp is not None and IndexKey.of_index(index) != key:
@@ -215,15 +236,21 @@ class IndexStore:
             # of rebuilding) — drop it; the caller still holds the object
             # and can rekey() it back in
             self.drops += 1
+            if obs.enabled():
+                obs.count("store.drops")
             return
         if key not in self._spilled:
             # allocate the step from the manager's live listing: the step
             # namespace is shared with training checkpoints, so a number
             # reserved at construction time could since have been taken
             step = max(self.manager.all_steps(), default=-1) + 1
-            self.manager.save_index(step, index)
+            with obs.span("store.spill", eps=key.eps,
+                          minpts=key.minpts):
+                self.manager.save_index(step, index)
             self._spilled[key] = step
             self.spills += 1
+            if obs.enabled():
+                obs.count("store.spills")
         # else: an identical snapshot is already durable — nothing to write
 
     # ------------------------------------------------------------- stats

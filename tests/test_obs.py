@@ -1,0 +1,325 @@
+"""Observability suite: the tracing layer must never change a result.
+
+Covers the ``repro.obs`` subsystem end to end — rolling-window order
+statistics against numpy, latched threshold warnings, the JSONL span
+sink round-tripped through ``scripts/trace_report.py``'s strict loader,
+disabled-mode no-op guarantees, and (the load-bearing property) byte
+identity of build / insert / delete / ε* / MinPts* outputs with tracing
+on vs off for euclidean, jaccard, and a ``register_metric`` user metric.
+"""
+
+import importlib.util
+import json
+import pathlib
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import FinexIndex
+from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
+from repro.metrics import register_metric
+from repro.neighbors.bitset import pack_sets
+from repro.obs.rolling import RollingWindow, quantile
+from repro.obs.telemetry import ObsWarning, Telemetry
+from repro.service import ClusterService, IndexStore, StatsRequest, SweepRequest
+
+_REPORT_PY = pathlib.Path(__file__).resolve().parents[1] / "scripts"
+_spec = importlib.util.spec_from_file_location(
+    "trace_report", _REPORT_PY / "trace_report.py"
+)
+trace_report = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(trace_report)
+
+
+def _chebyshev(q, c):
+    return jnp.max(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+
+
+try:
+    register_metric("obs-cheb", _chebyshev)
+except ValueError:
+    pass  # already registered by a previous import of this module
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends with the tracer off, no sink, and a
+    clean registry — the singleton must not leak state across tests."""
+    obs.configure(sink=None, enabled=False)
+    obs.reset()
+    yield
+    obs.configure(sink=None, enabled=False)
+    obs.reset()
+
+
+# ---------------------------------------------------------------- rolling
+
+
+def test_quantile_matches_numpy():
+    rng = np.random.default_rng(0)
+    values = rng.standard_normal(37).tolist()
+    for q in (0.0, 0.05, 0.5, 0.83, 0.95, 1.0):
+        assert quantile(values, q) == pytest.approx(
+            float(np.quantile(values, q)), abs=1e-12
+        )
+    with pytest.raises(ValueError):
+        quantile([], 0.5)
+    with pytest.raises(ValueError):
+        quantile([1.0], 1.5)
+
+
+def test_rolling_window_median_p95_and_eviction():
+    w = RollingWindow(size=8)
+    assert w.summary() == {"count": 0, "window": 0}
+    assert w.median() is None and w.p95() is None
+    rng = np.random.default_rng(1)
+    series = rng.uniform(0.0, 10.0, 30)
+    for v in series:
+        w.push(v)
+    tail = series[-8:]
+    assert w.values() == pytest.approx(list(tail))
+    assert w.median() == pytest.approx(float(np.quantile(tail, 0.5)))
+    assert w.p95() == pytest.approx(float(np.quantile(tail, 0.95)))
+    s = w.summary()
+    assert s["count"] == 30 and s["window"] == 8
+    assert s["max"] == pytest.approx(tail.max())
+    assert w.stat("mean") == pytest.approx(tail.mean())
+    with pytest.raises(ValueError):
+        w.stat("p99")
+
+
+def test_threshold_warns_once_per_breach_and_rearms():
+    obs.enable()
+    t = Telemetry(window_size=16)
+    t.set_threshold("lat", limit=1.0, stat="last")
+
+    def observed_warnings(value):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            t.observe("lat", value)
+        return [w for w in caught if issubclass(w.category, ObsWarning)]
+
+    assert observed_warnings(0.5) == []
+    first = observed_warnings(2.0)
+    assert len(first) == 1 and "lat" in str(first[0].message)
+    # sustained breach stays latched: no second warning
+    assert observed_warnings(3.0) == []
+    # recovery re-arms the latch, the next breach warns again
+    assert observed_warnings(0.2) == []
+    assert len(observed_warnings(5.0)) == 1
+    th = t.snapshot()["thresholds"]["lat"]
+    assert th["breaches"] == 2 and th["breached"] is True
+    assert th["limit"] == 1.0 and th["stat"] == "last"
+
+
+# --------------------------------------------------------- disabled mode
+
+
+def test_disabled_mode_is_a_shared_noop():
+    assert not obs.enabled()
+    # the disabled span is one shared singleton, not a per-call object
+    assert obs.span("a", n=1) is obs.span("b", m=2)
+    with obs.span("nothing", k=3) as sp:
+        assert sp.annot(extra=1) is sp
+        assert sp.fence([1, 2, 3]) == [1, 2, 3]
+    obs.count("c")
+    obs.gauge("g", 7.0)
+    obs.observe("w", 1.0)
+    snap = obs.snapshot()
+    assert snap["enabled"] is False
+    assert snap["counters"] == {} and snap["gauges"] == {}
+    assert snap["windows"] == {} and snap["spans"] == {}
+
+
+# ------------------------------------------------------- JSONL round-trip
+
+
+def test_jsonl_sink_round_trips_through_trace_report(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    obs.enable(sink=str(path))
+    with obs.span("outer", phase="test") as outer:
+        outer.fence(jnp.arange(4) * 2)
+        with obs.span("inner", n=3) as inner:
+            inner.annot(nnz=7)
+        with obs.span("inner", n=4):
+            pass
+    obs.disable()
+    obs.configure(sink=None)  # close so the file is fully written
+
+    spans = trace_report.load_spans(str(path))
+    assert [s["name"] for s in spans] == ["inner", "inner", "outer"]
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s["name"], []).append(s)
+    out = by_name["outer"][0]
+    assert out["parent"] is None and out["depth"] == 0
+    assert out["attrs"] == {"phase": "test"}
+    assert out["device_s"] > 0.0
+    for s in by_name["inner"]:
+        assert s["parent"] == out["id"] and s["depth"] == 1
+    assert by_name["inner"][0]["attrs"] == {"n": 3, "nnz": 7}
+    # children subtract from the parent's self-time
+    child_wall = sum(s["wall_s"] for s in by_name["inner"])
+    assert out["self_s"] == pytest.approx(out["wall_s"] - child_wall)
+    agg = trace_report.rollup(spans)
+    assert agg["inner"]["count"] == 2 and agg["outer"]["count"] == 1
+    assert "inner" in trace_report.report(spans)
+
+    # the strict loader refuses malformed records
+    bad = tmp_path / "bad.jsonl"
+    rec = dict(spans[-1])
+    del rec["wall_s"]
+    bad.write_text(json.dumps(rec) + "\n")
+    with pytest.raises(ValueError, match="wall_s"):
+        trace_report.load_spans(str(bad))
+    orphan = tmp_path / "orphan.jsonl"
+    rec = dict(spans[0])
+    rec["parent"] = 999999
+    orphan.write_text(json.dumps(rec) + "\n")
+    with pytest.raises(ValueError, match="parent"):
+        trace_report.load_spans(str(orphan))
+
+
+# ----------------------------------------------- tracing on/off identity
+
+
+def _vectors(n, seed):
+    return gaussian_mixture(n, d=4, k=5, seed=seed), None
+
+
+def _sets(n, seed):
+    sets, w = heavy_tail_sets(n, seed=seed)
+    return pack_sets(sets, universe=512), w
+
+
+CASES = [
+    ("euclidean", _vectors, 0.35, 8),
+    ("jaccard", _sets, 0.4, 8),
+    ("obs-cheb", _vectors, 0.3, 6),
+]
+
+
+def _take_rows(data, sel):
+    if isinstance(data, tuple):
+        return tuple(a[sel] for a in data)
+    return data[sel]
+
+
+def _lifecycle(data, weights, metric, eps, minpts, extra, extra_w):
+    """build -> ε*/MinPts* -> insert -> delete -> ε* again; returns every
+    array output the caller will compare byte-for-byte."""
+    idx = FinexIndex.build(data, eps=eps, minpts=minpts, metric=metric, weights=weights)
+    out = [idx.clustering(), idx.eps_star(eps * 0.6), idx.minpts_star(minpts * 2)]
+    idx.insert(extra, weights=extra_w)
+    idx.delete([0, 3])
+    out += [idx.clustering(), idx.eps_star(eps * 0.5)]
+    o, csr = idx.ordering, idx.csr
+    out += [getattr(o, f) for f in ("order", "pos", "C", "R", "N", "F")]
+    out += [np.asarray(csr.indptr), np.asarray(csr.indices), np.asarray(csr.dists)]
+    return out
+
+
+@pytest.mark.parametrize(
+    ("metric", "factory", "eps", "minpts"), CASES, ids=[c[0] for c in CASES]
+)
+def test_tracing_does_not_change_outputs(tmp_path, metric, factory, eps, minpts):
+    all_data, all_w = factory(220, seed=3)
+    n = (all_data[0] if isinstance(all_data, tuple) else all_data).shape[0]
+    head, tail = np.arange(n) < n - 10, np.arange(n) >= n - 10
+    data = _take_rows(all_data, head)
+    w = None if all_w is None else all_w[head]
+    extra = _take_rows(all_data, tail)
+    extra_w = None if all_w is None else all_w[tail]
+
+    baseline = _lifecycle(data, w, metric, eps, minpts, extra, extra_w)
+
+    obs.enable(sink=str(tmp_path / "trace.jsonl"))
+    traced = _lifecycle(data, w, metric, eps, minpts, extra, extra_w)
+    snap = obs.snapshot()
+    obs.disable()
+    obs.configure(sink=None)
+
+    assert len(baseline) == len(traced)
+    for i, (a, b) in enumerate(zip(baseline, traced)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), i
+    # the traced run actually recorded the instrumented phases
+    phases = (
+        "engine.materialize",
+        "build.finex_build",
+        "index.insert",
+        "index.delete",
+        "index.eps_star",
+        "index.minpts_star",
+    )
+    for name in phases:
+        assert snap["spans"][name]["count"] >= 1, name
+    assert snap["counters"]["delta.inserts"] == 1
+    assert snap["counters"]["delta.deletes"] == 1
+    assert "span.engine.materialize" in snap["windows"]
+    # and the sink is a valid trace
+    spans = trace_report.load_spans(str(tmp_path / "trace.jsonl"))
+    assert {s["name"] for s in spans} >= {"engine.materialize", "build.finex_sweep"}
+
+
+# ------------------------------------------------ stats()/Stats surfaces
+
+
+def test_index_stats_surfaces_telemetry_and_strip_report():
+    data, _ = _vectors(200, seed=5)
+    obs.enable()
+    idx = FinexIndex.build(data, eps=0.35, minpts=8)
+    st = idx.stats()
+    snap = st["telemetry"]
+    expected = {"enabled", "counters", "gauges", "windows", "spans", "thresholds"}
+    assert set(snap) == expected
+    assert snap["enabled"] is True
+    assert snap["spans"]["engine.materialize"]["count"] == 1
+    assert st["strip"] is None  # no mutation yet -> no strip sweep ran
+
+    full_report = dict(idx.engine.last_full_materialize)
+    extra, _ = _vectors(210, seed=5)
+    idx.insert(_take_rows(extra, np.arange(200, 210)))
+    st = idx.stats()
+    # satellite fix: the insert's strip sweep reports separately and the
+    # full-sweep report (pruning included) is NOT clobbered
+    assert st["strip"] is not None and st["strip"]["mode"] == "strip"
+    assert st["strip"]["rows"] == 10
+    assert idx.engine.last_full_materialize == full_report
+    obs.disable()
+
+
+def test_service_stats_verb_and_periodic_log():
+    data, _ = _vectors(240, seed=9)
+    settings = [("eps", 0.2), ("minpts", 16)]
+    lines = []
+    obs.enable()
+    svc = ClusterService(
+        store=IndexStore(capacity=2), slots=4, stats_every=2, stats_log=lines.append
+    )
+    reqs = [
+        SweepRequest(data=data, eps=0.35, minpts=8, settings=settings)
+        for _ in range(3)
+    ]
+    stats_req = StatsRequest()
+    svc.run(reqs + [stats_req])
+    final = svc.stats()["telemetry"]
+    obs.disable()
+
+    assert stats_req.done and stats_req.result is not None
+    snap = stats_req.result["telemetry"]
+    # the Stats verb answers from inside the still-open service.run span,
+    # so its snapshot carries the work spans that already closed ...
+    assert snap["spans"]["planner.sweep"]["count"] >= 1
+    assert snap["counters"]["store.builds"] == 1
+    assert snap["counters"]["store.hits"] >= 1
+    assert "service.queue_depth" in snap["windows"]
+    # ... and the post-run snapshot carries the loop spans themselves
+    assert final["spans"]["service.run"]["count"] == 1
+    assert final["spans"]["service.window"]["count"] >= 1
+    # the periodic stats line fired on the served-request boundary
+    assert lines and all(line.startswith("[cluster-service]") for line in lines)
+    assert "store hits=" in lines[0]
