@@ -103,9 +103,19 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
     report["device_sweep_s"] = round(t_dev, 4)
 
     # ---------------------------------------------------- vectorized path
-    (counts, csr), t_mat = _timed(lambda: eng.materialize(eps))
-    index, t_build = _timed(
-        lambda: FinexIndex.from_engine(eng, eps, minpts, csr=csr))
+    # median of 3 on the two figures the cross-commit overhead gate
+    # reads: single-shot wall clock on this container swings with
+    # scheduler windows (same spirit as the incremental section below)
+    counts = csr = index = None
+    t_mat, t_build = [], []
+    for _ in range(3):
+        (counts, csr), t = _timed(lambda: eng.materialize(eps))
+        t_mat.append(t)
+        index, t = _timed(
+            lambda: FinexIndex.from_engine(eng, eps, minpts, csr=csr))
+        t_build.append(t)
+    t_mat = float(np.median(t_mat))
+    t_build = float(np.median(t_build))
     lab_eps, t_eps = _timed(lambda: index.eps_star(eps * 0.6))
     lab_mp, t_mp = _timed(lambda: index.minpts_star(minpts * 4))
     report["vectorized"] = {
@@ -158,7 +168,69 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         "screen_build_s": round(t_screen, 4),
         "identical_outputs": bool(pruned_same),
     }
-    del eng_off, fresh, c_off, csr_off
+
+    # ---------------------------------------------- screened ε* section
+    # the ε*-verifier consults the same screen before computing any
+    # verification distance: labels must match the unscreened engine
+    # bit-for-bit (hard gate) while verification_pairs strictly drops
+    from repro.core.queries import QueryStats, eps_star_batch
+    idx_off = FinexIndex.from_engine(eng_off, eps, minpts, csr=csr_off)
+    stars = [eps * f for f in (0.4, 0.6, 0.8)]
+    q_on, q_off = QueryStats(), QueryStats()
+    lab_on = eps_star_batch(index.ordering, index.engine, stars,
+                            stats=q_on)
+    lab_off = eps_star_batch(idx_off.ordering, idx_off.engine, stars,
+                             stats=q_off)
+    report["queries"] = {
+        "eps_stars": [round(s, 4) for s in stars],
+        "identical_labels": bool(np.array_equal(lab_on, lab_off)),
+        "verification_pairs_screened": int(q_on.verification_pairs),
+        "verification_pairs_unscreened": int(q_off.verification_pairs),
+        "screened_pairs": int(q_on.screened_pairs),
+        "verification_pairs_reduction": round(
+            q_off.verification_pairs / max(q_on.verification_pairs, 1),
+            2),
+    }
+    del eng_off, fresh, c_off, csr_off, idx_off
+
+    # -------------------------------------------- jaccard pruning section
+    # the minhash/bitset-sketch screen (set data): token-block clusters
+    # give the projection real structure to separate; the pruned sweep
+    # must stay byte-identical to the unpruned one while ruling out a
+    # real fraction of the candidate plane
+    from repro.neighbors.bitset import pack_sets
+    j_eps, universe, kc, block = 0.3, 512, 20, 512 // 20
+    rngj = np.random.default_rng(seed + 7)
+    cl = rngj.integers(kc, size=n)
+    j_sets = []
+    for i in range(n):
+        toks = np.flatnonzero(rngj.random(block) < 0.85) + cl[i] * block
+        extras = rngj.integers(universe, size=2)
+        j_sets.append(np.unique(np.concatenate([toks, extras])))
+    j_data = pack_sets(j_sets, universe=universe)
+    eng_j = NeighborEngine(j_data, metric="jaccard", prune="on")
+    eng_j.materialize(j_eps)                                  # warm
+    (cj_on, csrj_on), t_j_on = _timed(lambda: eng_j.materialize(j_eps))
+    eng_j_off = NeighborEngine(j_data, metric="jaccard", prune="off")
+    eng_j_off.materialize(j_eps)                              # warm
+    (cj_off, csrj_off), t_j_off = _timed(
+        lambda: eng_j_off.materialize(j_eps))
+    j_same = (np.array_equal(cj_on, cj_off)
+              and np.array_equal(csrj_on.indptr, csrj_off.indptr)
+              and np.array_equal(csrj_on.indices, csrj_off.indices)
+              and np.array_equal(csrj_on.dists, csrj_off.dists))
+    prj = dict(eng_j.last_materialize.get("pruning") or {})
+    report["pruning_jaccard"] = {
+        **prj,
+        "eps": j_eps,
+        "universe": universe,
+        "clusters": kc,
+        "pruned_materialize_s": round(t_j_on, 4),
+        "unpruned_materialize_s": round(t_j_off, 4),
+        "speedup_vs_unpruned": round(t_j_off / max(t_j_on, 1e-9), 2),
+        "identical_outputs": bool(j_same),
+    }
+    del eng_j, eng_j_off, cj_on, cj_off, csrj_on, csrj_off, j_sets, j_data
 
     # ------------------------------------------------ incremental section
     # insert/delete deltas vs full rebuilds — the serving story of
@@ -190,7 +262,12 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
     # steady-state maintenance latency: the component labels are lazy,
     # so one warm insert+delete cycle (exact — it restores the original
     # index bytes) materializes them and the strip jit shapes before
-    # timing; each repetition restores the base the same way
+    # timing; each repetition restores the base the same way. NOTE:
+    # deletes defer their component relabel to the next mutation, so
+    # each timed insert below also pays the relabel the restoring
+    # delete put off — the honest steady-state figure for this
+    # alternating workload, but NOT pure insert latency (a build-then-
+    # insert measures ~3x lower)
     base = FinexIndex.build(x, eps=eps, minpts=minpts)
     base.insert(point)
     base.delete(np.array([n]))

@@ -44,6 +44,14 @@ def run(rows: List[str]) -> None:
         us_sc = _bench(lambda: ops.screened_eps_count(
             x, x, e, e, 1.0, s2t, w))
         rows.append(f"kernel,screened_eps_count,n={n},d={d},us={us_sc:.0f}")
+        # device-side bucket-bound plane (PR 8): per-center min squared
+        # screen distance over a query tile + the per-ε survival compare
+        # — the host never sees the (ntiles, nb) float plane, only the
+        # bool survival row
+        c = jnp.asarray(rng.normal(size=(256, 8)), jnp.float32)
+        thr = jnp.full((256,), 4.0, jnp.float32)
+        us_b = _bench(lambda: ops.bound_survive(ops.bound_min2(e, c), thr))
+        rows.append(f"kernel,bound_min2_survive,n={n},nb=256,us={us_b:.0f}")
     sets = [set(rng.choice(512, size=12, replace=False)) for _ in range(2048)]
     bits, sizes = pack_sets(sets, 512)
     b = jnp.asarray(bits)

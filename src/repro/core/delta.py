@@ -303,34 +303,41 @@ def splice_delete(
     No distance is ever recomputed — the surviving pairs keep the bits
     the original sweep produced.
     """
-    n_old = keep.shape[0]
     idmap = np.cumsum(keep, dtype=np.int64) - 1
-    row_ids = csr.row_ids()
-    keep_row = keep[row_ids]
-    keep_col = keep[csr.indices]
+    lens = np.diff(csr.indptr)
+    keep_row = np.repeat(keep, lens)     # bool segment flags — the int64
+    keep_col = keep[csr.indices]         # row-id array is never built
     sel = keep_row & keep_col
     indices = idmap[csr.indices[sel]].astype(np.int32)
     dists = csr.dists[sel]
-    kept_lens = np.bincount(row_ids[sel], minlength=n_old)[keep]
+    # per-row tallies by prefix-sum differencing at the old row
+    # boundaries (one O(nnz) cumsum each, reused buffer), instead of
+    # bincount scans keyed by materialized row ids; empty rows fall out
+    # as zero-width windows for free
+    cs = np.empty(csr.indices.size + 1, dtype=np.int64)
+    cs[0] = 0
+    np.cumsum(sel, out=cs[1:])
+    kept_lens = (cs[csr.indptr[1:]] - cs[csr.indptr[:-1]])[keep]
     indptr = np.zeros(kept_lens.shape[0] + 1, dtype=np.int64)
     np.cumsum(kept_lens, out=indptr[1:])
     removed = keep_row & ~keep_col
-    removed_counts = np.bincount(
-        row_ids[removed],
-        weights=weights[csr.indices[removed]].astype(np.float64),
-        minlength=n_old,
-    )
-    removed_w = removed_counts.astype(np.int64)[keep]
-    min_removed = np.full(removed_w.shape[0], np.inf, dtype=np.float32)
+    np.cumsum(removed, out=cs[1:])
+    rem_counts = (cs[csr.indptr[1:]] - cs[csr.indptr[:-1]])[keep]
+    removed_w = np.zeros(rem_counts.shape[0], dtype=np.int64)
+    min_removed = np.full(rem_counts.shape[0], np.inf, dtype=np.float32)
     # segment by STRUCTURAL removal counts: every row that lost an entry
     # owns a reduceat window, whatever the entry's weight — segmenting by
-    # removed_w would misalign all later windows if a weight were ever 0
-    rem_counts = np.bincount(row_ids[removed], minlength=n_old)[keep]
+    # removed weight would misalign all later windows if a weight were
+    # ever 0. The same windows serve both the lost-weight sums and the
+    # smallest-lost-distance mins.
     lost = np.flatnonzero(rem_counts)
     if lost.size:
         starts = np.zeros(lost.size, dtype=np.int64)
         np.cumsum(rem_counts[lost][:-1], out=starts[1:])
-        min_removed[lost] = np.minimum.reduceat(csr.dists[removed], starts)
+        d_rem = csr.dists[removed]
+        removed_w[lost] = np.add.reduceat(
+            weights[csr.indices[removed]], starts)
+        min_removed[lost] = np.minimum.reduceat(d_rem, starts)
     csr_new = CSRNeighborhoods(
         indptr=indptr, indices=indices, dists=dists, eps=csr.eps
     )

@@ -459,7 +459,10 @@ class FinexIndex:
     def _ensure_comp(self) -> Optional[np.ndarray]:
         """Core-incidence component labels, computed on first use (one
         O(nnz) weak-connectivity pass — deferred so build-once indexes
-        never pay it) and maintained incrementally by every mutation."""
+        never pay it).  Inserts maintain the labels incrementally (their
+        contracted union-find relabel is cheap); deletes and resweep
+        fallbacks invalidate instead, and the next mutation recomputes
+        here lazily."""
         if self._comp is None:
             self._comp = core_components(
                 self.csr, np.isfinite(self.ordering.C))
@@ -504,7 +507,7 @@ class FinexIndex:
             order = sweep["order"]
             run_id, triggers = sweep["run_id"], sweep["run_triggers"]
             R, F = sweep["R"], sweep["F"]
-            comp = core_components(csr_new, is_core)
+            comp = None          # recomputed lazily by _ensure_comp
         else:
             sweep = finex_sweep(counts, csr_new, C32, active=affected)
             clean = np.ones(n_new, dtype=bool)
@@ -516,14 +519,20 @@ class FinexIndex:
             R[affected] = sweep["R"][affected]
             F = base["F"].copy()
             F[affected] = sweep["F"][affected]
-            comp = base["comp"].copy()
             if comp_affected is None:
-                # deletions can split a component: re-label the affected
-                # subgraph by traversal (inserts pass the contracted
-                # union-find result instead — merges only)
-                comp_affected = core_components(
-                    csr_new, is_core[affected], rows=affected)
-            comp[affected] = (int(comp.max()) + 1) + comp_affected
+                # deletions can split a component, which takes a subgraph
+                # re-traversal to re-label — and "affected components" is
+                # component-granular, so a scatter of deletes across every
+                # cluster makes that traversal a near-full O(nnz) pass.
+                # The labels are only read by the NEXT mutation's affected
+                # computation, so defer: _ensure_comp recomputes them
+                # lazily, exactly like the build path defers the initial
+                # labeling (inserts stay eager — their contracted
+                # union-find relabel is O(affected), merges only)
+                comp = None
+            else:
+                comp = base["comp"].copy()
+                comp[affected] = (int(comp.max()) + 1) + comp_affected
         pos = np.empty(n_new, dtype=np.int64)
         pos[order] = np.arange(n_new)
         self.ordering = FinexOrdering(
@@ -579,6 +588,7 @@ class FinexIndex:
                 if self.engine is not None else None,
             "query_candidates": self.query_stats.candidates,
             "query_verification_pairs": self.query_stats.verification_pairs,
+            "query_screened_pairs": self.query_stats.screened_pairs,
             "pruning": pruning,
             "strip": strip,
             "version": self.version,

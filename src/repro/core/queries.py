@@ -43,6 +43,7 @@ class QueryStats:
     """Instrumentation mirroring the paper's efficiency arguments."""
     candidates: int = 0
     verification_pairs: int = 0       # candidate×core distances computed
+    screened_pairs: int = 0           # pairs the projection screen skipped
     neighborhoods_computed: int = 0   # full-row neighborhood computations
     fast_path: bool = False
 
@@ -109,14 +110,30 @@ def eps_star_query(index: FinexOrdering, engine: NeighborEngine,
         for s in range(0, len(core_ids), verify_batch):
             blk = slice(s, s + verify_batch)
             sub = cand_arr[unassigned]
-            d = engine.pair_distances(sub, core_ids[blk])
+            cols_blk = core_ids[blk]
+            clus_blk = core_cluster[blk]
+            # projection screen over the verification sub-matrix: a core
+            # column no candidate admits provably holds no hit (the
+            # screen bound exceeds ε* ⇒ the true distance does), so it
+            # drops from the block before any distance is computed.
+            # Surviving columns keep their relative (cluster, id) order,
+            # so the masked-argmax first hit is unchanged.
+            admit = engine.screen_admit(sub, cols_blk, eps_star)
+            if admit is not None:
+                kpos = np.flatnonzero(admit.any(axis=0))
+                stats.screened_pairs += \
+                    int(sub.size) * (len(cols_blk) - kpos.size)
+                if kpos.size == 0:
+                    continue
+                cols_blk, clus_blk = cols_blk[kpos], clus_blk[kpos]
+            d = engine.pair_distances(sub, cols_blk)
             stats.verification_pairs += d.size
             # first hit per candidate row: masked argmax over the block
             ok = (d <= eps_star) & \
-                (first[core_cluster[blk]][None, :] > order_pos[sub][:, None])
+                (first[clus_blk][None, :] > order_pos[sub][:, None])
             got = ok.any(axis=1)
             hit = np.argmax(ok, axis=1)
-            labels[sub[got]] = core_cluster[blk][hit[got]]
+            labels[sub[got]] = clus_blk[hit[got]]
             unassigned = labels[cand_arr] < 0
             if not unassigned.any():       # cond. 4: everyone placed
                 break
@@ -260,11 +277,13 @@ def eps_star_batch(index: FinexOrdering, engine: NeighborEngine,
         labels = _eps_star_batch_impl(index, engine, eps_stars, stats,
                                       verify_batch)
         sp.annot(candidates=stats.candidates,
-                 verification_pairs=stats.verification_pairs)
+                 verification_pairs=stats.verification_pairs,
+                 screened_pairs=stats.screened_pairs)
         if obs.enabled():
             obs.count("queries.eps_star_batches")
             obs.count("queries.verification_pairs",
                       stats.verification_pairs)
+            obs.count("queries.screened_pairs", stats.screened_pairs)
     return labels
 
 
@@ -319,11 +338,29 @@ def _eps_star_batch_impl(index, engine, eps_stars, stats,
             ncols = int(np.searchsorted(Cgc, b, side="right"))
             if ncols == 0:
                 continue
-            stats.verification_pairs += rows_b.size * ncols
             for s in range(0, ncols, verify_batch):
                 e = min(s + verify_batch, ncols)
-                D[rows_b, s:e] = engine.pair_distances(
-                    cand_g[rows_b], core_gc[s:e])
+                cols_blk = core_gc[s:e]
+                # screen the staircase block at the row budget b: a pair
+                # not admitted at b is not admitted at any setting these
+                # rows serve (es[k] <= b), so its D entry may stay inf —
+                # every setting's ``sub <= es[k]`` test then rejects it
+                # exactly as the computed distance would have
+                admit = engine.screen_admit(cand_g[rows_b], cols_blk, b)
+                if admit is not None:
+                    kpos = np.flatnonzero(admit.any(axis=0))
+                    stats.screened_pairs += \
+                        rows_b.size * (cols_blk.size - kpos.size)
+                    if kpos.size == 0:
+                        continue
+                    stats.verification_pairs += rows_b.size * kpos.size
+                    D[rows_b[:, None], (s + kpos)[None, :]] = \
+                        engine.pair_distances(cand_g[rows_b],
+                                              cols_blk[kpos])
+                else:
+                    stats.verification_pairs += rows_b.size * (e - s)
+                    D[rows_b, s:e] = engine.pair_distances(
+                        cand_g[rows_b], cols_blk)
         for k in live:
             ck = cand_g[cand_masks[k][cand_g]]
             if ck.size == 0:

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the projection-screen bucket-bound plane.
+
+The projection-pruned sweep (``neighbors.engine``) decides per
+(query tile × kd-bucket) whether the bucket can possibly contain an
+ε-neighbor of any row in the tile: bucket b survives iff
+
+    min_q ||E(q) − c_b||²  <=  (s_t + r_b)² + slack
+
+with ``E`` the float32 screen embedding, ``c_b``/``r_b`` the bucket
+center/radius and ``s_t`` the bisected screen threshold.  The left-hand
+side is an (ntiles, nb) plane over the whole dataset — host numpy built
+it through PR 6, which the ROADMAP flags as the scaling ceiling for
+10M+ rows.  This kernel evaluates it on device: one MXU matmul per
+(tile × center block) with a row-min reduction, so only the (nb,)
+minima per tile (and later the bool survival plane) ever leave the
+accelerator.
+
+Numerical contract: the minima are float32 with MXU-expansion rounding,
+compared against thresholds inflated by the same ``1e-4·(m2+1)`` slack
+as the pair-level screen test (``screen_thresholds``), which dominates
+every rounding source (expansion, float64→float32 embedding
+quantization, threshold rounding).  Rounding can therefore only admit
+an extra bucket — never prune a true neighbor.  Padded query rows use a
+large-coordinate fill so they cannot lower any minimum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# padded query rows sit at distance ~1e16 from every real center: far
+# beyond any threshold, so padding never creates a surviving bucket
+_PAD_FILL = 1e8
+
+
+def _pad_to(a: jax.Array, mult: int, axis: int, value=0.0) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _bound_min2_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                       # (TM, k)
+    c = c_ref[...].astype(jnp.float32)                       # (TN, k)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)              # (TM, 1)
+    c2 = jnp.sum(c * c, axis=-1, keepdims=True).T            # (1, TN)
+    cross = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(x2 + c2 - 2.0 * cross, 0.0)             # (TM, TN)
+    o_ref[...] = jnp.min(d2, axis=0, keepdims=True)          # (1, TN)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "interpret"))
+def bound_min2_pallas(pts: jax.Array, centers: jax.Array,
+                      tm: int = 256, tn: int = 128,
+                      interpret: bool = False) -> jax.Array:
+    """(m, k) screen tile × (nb, k) bucket centers → (nb,) float32
+    per-center minimum squared distance over the tile's rows.
+
+    One sweep tile's row of the bucket-bound plane; the grid walks
+    center blocks while the (padded) query tile stays resident in VMEM.
+    """
+    nb, k = centers.shape
+    xp = _pad_to(pts.astype(jnp.float32), tm, 0, value=_PAD_FILL)
+    cp = _pad_to(centers.astype(jnp.float32), tn, 0)
+    grid = (cp.shape[0] // tn,)
+    out = pl.pallas_call(
+        _bound_min2_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((xp.shape[0], k), lambda j: (0, 0)),
+                  pl.BlockSpec((tn, k), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((1, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, cp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(xp, cp)
+    return out[0, :nb]

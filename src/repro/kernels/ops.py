@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bounds import bound_min2_pallas
 from repro.kernels.pairwise import (pairwise_euclidean_pallas,
                                     eps_count_pallas, eps_emit_pallas,
                                     cosine_eps_count_pallas,
@@ -151,6 +152,26 @@ def screened_eps_count(x, y, sx, sy, eps, s2t, weights, num_valid=None,
     w = weights[None, :].astype(jnp.float32)
     counts = jnp.where((d <= eps) & keep, w, 0.0).sum(-1)
     return counts, cand
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def bound_min2(pts, centers, use_pallas: bool = False):
+    """Device-side bucket-bound row: per-center min squared screen
+    distance over a sweep tile → (nb,) float32.  The (ntiles, nb) plane
+    the host used to build in numpy is now ``jnp.stack`` of these rows,
+    resident on device until the per-ε survival compare."""
+    if use_pallas:
+        return bound_min2_pallas(pts, centers, interpret=not _on_tpu())
+    return ref.bound_min2_tile(pts, centers)
+
+
+@jax.jit
+def bound_survive(min2, thresh):
+    """Per-ε bucket survival: compare the device-resident bound plane
+    against slack-inflated squared thresholds ``(s_t + r_b)² + slack``
+    (float64-bisected on host, one (nb,) float32 upload per ε).  Only
+    this bool plane crosses back to the host."""
+    return min2 <= thresh
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "use_pallas"))

@@ -62,6 +62,17 @@ def screen_sq_tile(sx: jax.Array, sy: jax.Array) -> jax.Array:
     return pairwise_sq_euclidean(sx, sy)
 
 
+def bound_min2_tile(pts: jax.Array, centers: jax.Array) -> jax.Array:
+    """Per-center minimum squared screen distance over a query tile:
+    ``min_q ||pts[q] − centers[b]||²`` → (nb,) float32.  The device-side
+    bucket-bound plane of the pruned sweep — one row per sweep tile,
+    compared against slack-inflated ``(s_t + r_b)²`` thresholds so
+    float32 expansion error can only admit an extra bucket, never prune
+    one that could hold a true neighbor.  Oracle for
+    ``bounds.bound_min2_pallas``."""
+    return jnp.min(pairwise_sq_euclidean(pts, centers), axis=0)
+
+
 def screened_hit_tile(hit: jax.Array, sx: jax.Array, sy: jax.Array,
                       s2_thresh: jax.Array, num_valid=None):
     """Screen an exact hit plane: AND in the pair-level bound mask (pairs

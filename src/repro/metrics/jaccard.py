@@ -1,4 +1,56 @@
-"""Jaccard metric over packed-bitmap set data (process-mining workloads)."""
+"""Jaccard metric over packed-bitmap set data (process-mining workloads).
+
+Prune-screen bound (why over-admission is the only possible failure mode)
+------------------------------------------------------------------------
+The projection screen needs an (n, k) embedding ``E`` with
+``lower_bound(||E(a) − E(b)||₂) <= d_J(a, b)`` for *every* pair — a
+deterministic inequality, not an estimate in expectation.  Classic
+minhash gives an unbiased Jaccard *estimator* whose two-sided error
+could under- as well as over-estimate the distance, so a screen built on
+raw minhash signatures could prune a true neighbor.  We instead keep the
+sketch but drop the estimator: a one-permutation *bucketed bitmap*
+sketch whose bound direction is provable.
+
+1.  Embed each set as its normalized indicator ``u_A = 1_A / √|A|``
+    (a unit vector).  Since ``|A ∪ B| >= √(|A||B|)``,
+
+        d_J(A,B) = 1 − |A∩B| / |A∪B|
+                 >= 1 − |A∩B| / √(|A||B|)
+                 = ½·||u_A − u_B||₂².
+
+2.  Reduce dimension with one seeded permutation of the universe's bit
+    positions into ``k'`` near-equal groups ``g_1..g_k'`` (the minhash
+    bucketing, minus the min).  Universes up to the embedding cap use
+    singleton groups — the embedding is then exactly ``u_A`` and the
+    only slack is step 1's; wider universes share groups, which shrinks
+    screen distances (admitting more) but never inflates them.  The
+    group indicators ``v_j = 1_{g_j} / √|g_j|`` are orthonormal (groups
+    are disjoint), and the sketch coordinate is the projection
+    coefficient
+
+        E(A)_j = ⟨u_A, v_j⟩ = |A ∩ g_j| / (√|g_j|·√|A|),
+
+    an exact popcount ratio — no hashing noise.  Orthogonal projection
+    is contractive (Cauchy–Schwarz/Bessel), so
+    ``||E(A) − E(B)||₂ <= ||u_A − u_B||₂`` holds *deterministically*
+    and the bound of step 1 survives:  ``lower_bound(s) = s²/2``.
+
+3.  Empty sets get an extra indicator coordinate (the cosine-metric
+    convention): ``E(∅) = (0,…,0,1)``, nonempty sets carry 0 there.
+    Then s(∅,∅) = 0 (bound 0 = d_J) and s(∅,A)² = ||E(A)||² + 1 <= 2,
+    i.e. bound <= 1 = d_J — tight exactly when the sketch captures all
+    of ``u_A``'s mass.
+
+Every remaining slack is one-sided by construction: coarser groups only
+*shrink* the screen distance (projection discards mass), which admits
+more candidates, never fewer true ones.  The engine's
+``screen_thresholds`` folds the float32 rounding slack on top: it
+bisects ``sup{s : s²/2 <= ε}`` in float64 and inflates the squared
+device threshold by an ulp-dominating margin, so every rounding
+direction — sketch, threshold, device float32 — can only over-admit.
+The exact device kernels then re-check every admitted pair, so the CSR
+stays byte-identical to the unpruned sweep.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -42,6 +94,45 @@ class JaccardMetric(Metric):
     def eps_compact(self, q, c, eps, cap: int, use_pallas: bool = False):
         return ops.jaccard_eps_compact(q[0], q[1], c[0], c[1], eps, cap,
                                        use_pallas=use_pallas)
+
+    def project(self, canon, k, seed: int = 0):
+        # the bucketed bitmap sketch from the module docstring: unpack
+        # the (n, W) uint32 bitmaps to per-bit indicators, assign each
+        # bit position to one of k near-equal groups by one seeded
+        # permutation, and keep the exact projection coefficient
+        # |A ∩ g_j| / (√|g_j|·√|A|) per group (plus the empty-set
+        # indicator coordinate). Content-only + seed-deterministic, so
+        # insert strips project identically to the full sweep.
+        bits, sizes = canon
+        n, w = bits.shape
+        universe = 32 * w
+        # below the cap the groups are singletons and the embedding is
+        # the exact normalized indicator u_A (the bound is then as tight
+        # as step 1 allows); grouping only kicks in for universes too
+        # wide to embed directly, where it trades tightness for memory
+        # (each shared group can only shrink the screen distance — still
+        # sound, just admits more)
+        k_eff = max(1, min(universe, max(int(k), 1024)))
+        # bit order within the uint8 view is irrelevant as long as it is
+        # a fixed bijection of positions — 'little' matches pack_sets
+        indic = np.unpackbits(
+            bits.view(np.uint8), axis=1, bitorder="little")
+        group = np.random.default_rng(seed).permutation(universe) % k_eff
+        onehot = np.zeros((universe, k_eff), dtype=np.float64)
+        onehot[np.arange(universe), group] = 1.0
+        gcount = indic.astype(np.float64) @ onehot        # |A ∩ g_j|
+        gsize = np.bincount(group, minlength=k_eff).astype(np.float64)
+        sz = sizes.astype(np.float64)
+        empty = sz == 0.0
+        denom = np.sqrt(np.maximum(gsize, 1.0))[None, :] \
+            * np.sqrt(np.where(empty, 1.0, sz))[:, None]
+        e = gcount / denom
+        e[empty] = 0.0
+        return np.concatenate([e, empty[:, None].astype(np.float64)],
+                              axis=-1)
+
+    def lower_bound(self, screen_dist):
+        return np.square(screen_dist) * 0.5
 
     @classmethod
     def synthesize(cls, rng, n, d=8):

@@ -146,9 +146,11 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
     screen: optional projection-prune triple ``(sq, sc, s2t)`` — float32
        screen embeddings row-aligned with q and c plus the squared
        screen-space pair threshold (see ``engine.screen_thresholds``).
-       Each (chunk × corpus-shard) tile then computes its pair-level
-       bound mask *first*: tiles the bound rules out entirely skip the
-       distance plane via ``lax.cond``, and surviving tiles emit with the
+       Each (chunk × corpus-shard) tile then evaluates the device bound
+       kernel (``ref.bound_min2_tile``) *first*: tiles whose min² screen
+       distance exceeds the threshold skip the distance plane via
+       ``lax.cond`` (the bound stays device-resident — only the scalar
+       predicate is consumed), and surviving tiles emit with the
        provably-impossible pairs masked to inf.  The slots stay
        byte-identical to the unscreened emit (lower-bound contract).
     Returns (lens (M, nq) int32, cols (M, nq, cap) int32,
@@ -199,9 +201,16 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
                                             col_offset=offset,
                                             num_valid=n_total)
             qs, sq_row = qrow[:nq_parts], qrow[-1]
-            keep = ref.screen_sq_tile(sq_row, scb) <= s2t
+            # skip decision through the shared device bound kernel: the
+            # tile's min² screen distance (stays device-resident — the
+            # scalar compare feeds lax.cond directly, nothing crosses to
+            # the host) against the slack-inflated pair threshold.
+            # ``min(plane) <= s2t`` admits exactly when ``any(plane <=
+            # s2t)`` does, so the emitted slots cannot change.
+            tile_min2 = jnp.min(ref.bound_min2_tile(sq_row, scb))
 
             def emit(_):
+                keep = ref.screen_sq_tile(sq_row, scb) <= s2t
                 d = m.pairwise(qs, cb_state)
                 return ref.eps_compact_tile(
                     jnp.where(keep, d, jnp.inf), eps_s, cap,
@@ -215,7 +224,7 @@ def sharded_csr_emit(q, c, eps: jax.Array, mesh: Mesh,
                         jnp.zeros((chunk_rows, cap), jnp.int32),
                         jnp.zeros((chunk_rows, cap), jnp.float32))
 
-            return jax.lax.cond(jnp.any(keep), emit, skip, 0)
+            return jax.lax.cond(tile_min2 <= s2t, emit, skip, 0)
 
         lens, cols, dvals = jax.lax.map(chunk, qc)
         lens = lens.reshape(-1)[:rows]

@@ -57,6 +57,7 @@ sizes then use weighted counts while only unique objects are materialized.
 from __future__ import annotations
 
 import hashlib
+import time as _time
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -65,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.kernels import ops
 from repro.metrics import MetricLike, get_metric
 # re-exported for backwards compatibility: these lived here before the
 # metric registry (PR 4) pulled everything metric-specific into
@@ -392,9 +394,30 @@ class NeighborEngine:
                 continue
             seg = order[lo:hi]
             pts = E[seg]
-            dim = int(np.argmax(pts.max(axis=0) - pts.min(axis=0)))
-            mid = (hi - lo) // 2
-            order[lo:hi] = seg[np.argpartition(pts[:, dim], mid)]
+            width = pts.max(axis=0) - pts.min(axis=0)
+            dim = int(np.argmax(width))
+            if width[dim] <= 0.0:
+                # duplicate rows: no dimension separates them — emit as
+                # one (radius-0) bucket whatever its size
+                bounds.append((lo, hi))
+                continue
+            vals = pts[:, dim]
+            m = hi - lo
+            srt = np.argsort(vals, kind="stable")
+            mid = m // 2
+            pivot = vals[srt[mid]]
+            lo_cnt = int(np.count_nonzero(vals < pivot))
+            if lo_cnt != mid:
+                # the median value is tied (mass-at-a-value dims — e.g.
+                # the mostly-zero coordinates of a sparse set embedding):
+                # a positional split would scatter equal values across
+                # both children, leaving them overlapping in space and
+                # their radii as wide as the parent.  Snap to the nearest
+                # tie boundary so the children are disjoint in value.
+                hi_cnt = int(np.count_nonzero(vals <= pivot))
+                cands = [c for c in (lo_cnt, hi_cnt) if 0 < c < m]
+                mid = min(cands, key=lambda c: abs(c - m // 2))
+            order[lo:hi] = seg[srt]
             stack.append((lo, lo + mid))
             stack.append((lo + mid, hi))
         bounds.sort()
@@ -423,61 +446,115 @@ class NeighborEngine:
             "state_perm": self.metric.take(
                 self._state, jnp.asarray(order.astype(np.int32))),
             "E32o": np.ascontiguousarray(E32[order]),
-            # float64 bucket-order projection, kept for the lazy Dmin
-            # build below (the bound side must stay float64: float32
-            # rounding there could exceed the threshold slack)
-            "Eo64": Eo,
-            "order": order, "bid": bid, "tiles": tiles, "Dmin": None,
-            "centers": centers, "radii": radii,
+            "order": order, "bid": bid, "tiles": tiles,
+            # lazy device-resident caches: the ε-independent (ntiles, nb)
+            # min² bound plane and the uploaded float32 bucket centers
+            "min2": None, "centers_dev": None,
+            "centers": centers, "radii": radii, "screen_eval_s": 0.0,
             "m2": m2, "diam": 2.0 * np.sqrt(m2) + 1.0, "mean": mean,
         }
 
-    def _screen_dmin(self, scr) -> np.ndarray:
-        """The ε-independent (ntiles, nb) tile→bucket-center distance
-        minima, built on first *full-sweep* use and cached on the screen.
+    def _screen_centers_dev(self, scr):
+        """The bucket centers as a device-resident float32 array (one
+        upload per screen build, shared by every bound evaluation)."""
+        if scr["centers_dev"] is None:
+            scr["centers_dev"] = jnp.asarray(
+                np.ascontiguousarray(scr["centers"], dtype=np.float32))
+        return scr["centers_dev"]
+
+    def _screen_min2(self, scr):
+        """The ε-independent (ntiles, nb) tile→bucket-center *squared*
+        distance minima, evaluated on device (``kernels.ops.bound_min2``)
+        on first full-sweep use and cached device-resident on the screen.
 
         Lazy on purpose: insert strips bound their own query rows against
         the bucket centers directly and never read this plane, so a
         mutation-heavy workload (screen rebuilt after every
         ``append_rows``/``keep_rows``) skips its O(n·nb) cost entirely.
-        Tile-by-tile so the (n, nb) plane never materializes.
+        Tile-by-tile so the (n, nb) float plane never materializes — on
+        host OR device; only per-ε bool survival rows cross back.
         """
-        if scr["Dmin"] is None:
-            tiles, centers, Eo = scr["tiles"], scr["centers"], scr["Eo64"]
-            Dmin = np.empty((len(tiles), centers.shape[0]))
-            for t, (s, e) in enumerate(tiles):
-                Dmin[t] = self._center_dmin(Eo[s:e], centers)
-            scr["Dmin"] = Dmin
-        return scr["Dmin"]
-
-    @staticmethod
-    def _center_dmin(pts: np.ndarray, centers: np.ndarray) -> np.ndarray:
-        """Per-center minimum distance from ``pts`` (m, k) to ``centers``
-        (nb, k): the row-min is taken in *squared* space so only the
-        (nb,) minima pay a sqrt, not the whole (m, nb) plane."""
-        d2 = (np.sum(pts * pts, axis=1)[:, None]
-              + np.sum(centers * centers, axis=1)[None, :]
-              - 2.0 * (pts @ centers.T))
-        return np.sqrt(np.maximum(d2.min(axis=0), 0.0))
+        if scr["min2"] is None:
+            t0 = _time.perf_counter()
+            centers = self._screen_centers_dev(scr)
+            rows = [ops.bound_min2(jnp.asarray(scr["E32o"][s:e]), centers,
+                                   use_pallas=self.use_pallas)
+                    for s, e in scr["tiles"]]
+            min2 = (jnp.stack(rows) if rows
+                    else jnp.zeros((0, len(scr["radii"])), jnp.float32))
+            min2.block_until_ready()
+            scr["min2"] = min2
+            scr["screen_eval_s"] += _time.perf_counter() - t0
+        return scr["min2"]
 
     def _screen_thresholds(self, eps: float, scr):
         """(s_t, s2t) for this engine's screen — see
         :func:`screen_thresholds`."""
         return screen_thresholds(self.metric, eps, scr["diam"], scr["m2"])
 
+    def _bucket_thresholds(self, s_t: float, scr) -> np.ndarray:
+        """Per-bucket squared survival thresholds ``(s_t + r_b)²``,
+        computed in host float64 and inflated by the same
+        ``1e-4·(m2 + 1)`` slack as the pair-level screen test before the
+        float32 cast — the margin dominates every float32 error in the
+        device bound evaluation (embedding quantization, MXU expansion,
+        the cast itself), so a device comparison against these can admit
+        an extra bucket but never prune one holding a true neighbor."""
+        r = np.asarray(scr["radii"], dtype=np.float64)
+        return ((r + float(s_t)) ** 2
+                + 1e-4 * (scr["m2"] + 1.0)).astype(np.float32)
+
+    def _screen_surv(self, eps: float, scr) -> Tuple[np.ndarray, float,
+                                                     np.float32]:
+        """Per-ε bucket survival plane: compare the device-resident min²
+        bounds against the slack-inflated bucket thresholds *on device*
+        and pull back only the (ntiles, nb) bool plane.  Returns
+        ``(surv, s_t, s2t)``."""
+        s_t, s2t = self._screen_thresholds(eps, scr)
+        min2 = self._screen_min2(scr)
+        t0 = _time.perf_counter()
+        surv = np.asarray(ops.bound_survive(
+            min2, jnp.asarray(self._bucket_thresholds(s_t, scr))))
+        scr["screen_eval_s"] += _time.perf_counter() - t0
+        return surv, s_t, s2t
+
     @staticmethod
-    def _screen_cols(scr, dmin: np.ndarray, s_t: float
-                     ) -> Tuple[np.ndarray, int]:
-        """Surviving sub-corpus for a query tile: bucket b survives iff
-        ``dmin[b] - r_b <= s_t`` (triangle inequality in screen space,
-        ``dmin`` the tile's min row→center distances).  Returns
-        (ascending member ids, #surviving buckets) — membership is one
-        O(n) mask lookup through the per-row bucket ids."""
-        surv = (dmin - scr["radii"]) <= s_t
+    def _screen_cols(scr, surv: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Surviving sub-corpus for a query tile from its bucket survival
+        row (bucket b survives iff ``min² <= (s_t + r_b)² + slack`` — the
+        triangle inequality in screen space, evaluated device-side by
+        ``_screen_surv``).  Returns (ascending member ids, #surviving
+        buckets) — membership is one O(n) mask lookup through the
+        per-row bucket ids."""
         k = int(np.count_nonzero(surv))
         if k == 0:
             return np.zeros(0, np.int32), 0
         return np.flatnonzero(surv[scr["bid"]]).astype(np.int32), k
+
+    def screen_admit(self, rows: np.ndarray, cols: np.ndarray,
+                     eps: float) -> Optional[np.ndarray]:
+        """Pair-level screen admission plane for an explicit
+        (rows × cols) verification sub-matrix — the ε*-query hook.
+
+        ``admit[i, j] == False`` certifies ``d(rows[i], cols[j]) > eps``
+        (lower-bound contract), so a verifier may skip those pairs
+        without computing their distance; ``None`` when no screen is
+        active for this engine/metric.  Evaluated host-side in float64
+        over the float32 screen embeddings against the same
+        slack-inflated squared threshold as the device pair test
+        (``screen_thresholds``), so embedding quantization and the
+        expansion's rounding can only over-admit — never hide a true
+        neighbor.
+        """
+        scr = self._screen_get()
+        if scr is None:
+            return None
+        _, s2t = self._screen_thresholds(eps, scr)
+        a = scr["E32"][np.asarray(rows, np.int64)].astype(np.float64)
+        b = scr["E32"][np.asarray(cols, np.int64)].astype(np.float64)
+        d2 = (np.sum(a * a, axis=1)[:, None]
+              + np.sum(b * b, axis=1)[None, :] - 2.0 * (a @ b.T))
+        return d2 <= float(s2t)
 
     @staticmethod
     def _pad_ids(idx: np.ndarray) -> np.ndarray:
@@ -547,15 +624,14 @@ class NeighborEngine:
         n = self.n
         order = scr["order"]
         nb = len(scr["radii"])
-        s_t, s2t = self._screen_thresholds(eps, scr)
+        surv, s_t, s2t = self._screen_surv(eps, scr)
         eps_dev = jnp.float32(eps)
         thresh = self.metric.mask_threshold(eps)
         tiles = scr["tiles"]
         tiles_skipped = 0
         tile_subs = []
-        dmin = self._screen_dmin(scr)
         for t in range(len(tiles)):
-            sub, k = self._screen_cols(scr, dmin[t], s_t)
+            sub, k = self._screen_cols(scr, surv[t])
             tiles_skipped += nb - k
             # hybrid escape: pruning under ~30% is not worth the gather
             tile_subs.append(None if sub.size > 0.7 * n else sub)
@@ -695,6 +771,11 @@ class NeighborEngine:
                 "tiles_skipped": int(tiles_skipped),
                 "candidate_pairs": int(cand_pairs),
                 "candidate_fraction": float(cand_pairs) / max(1, n * n),
+                # the bucket-bound plane + per-ε survival compare run on
+                # device (kernels.ops.bound_min2/bound_survive) — this is
+                # their cumulative wall-clock since the screen was built
+                "screen_eval_device": True,
+                "screen_eval_s": float(scr["screen_eval_s"]),
             },
         }
         self.last_full_materialize = self.last_materialize
@@ -976,8 +1057,16 @@ class NeighborEngine:
                 E_q = self.metric.project(
                     tuple(np.asarray(a) for a in rows_state), self.screen_k)
                 if E_q is not None:
-                    E_q = np.asarray(E_q, dtype=np.float64) - scr["mean"]
-                    s_t, s2t = self._screen_thresholds(eps, scr)
+                    E_q = np.ascontiguousarray(
+                        np.asarray(E_q, dtype=np.float64) - scr["mean"],
+                        dtype=np.float32)
+                    s_t, _ = self._screen_thresholds(eps, scr)
+                    # strips bound their own query rows against the bucket
+                    # centers through the same device kernel as the full
+                    # sweep; float32 quantization of the projected rows is
+                    # covered by the bucket thresholds' slack
+                    thr_dev = jnp.asarray(self._bucket_thresholds(s_t, scr))
+                    centers_dev = self._screen_centers_dev(scr)
         corpus = self._state if corpus is None else corpus
         nc = int(corpus[0].shape[0])
         nq = int(rows_state[0].shape[0])
@@ -997,8 +1086,12 @@ class NeighborEngine:
             self.distance_rows_computed += e - s
             sub = None
             if E_q is not None:
-                dmin = self._center_dmin(E_q[s:e], scr["centers"])
-                sub, _ = self._screen_cols(scr, dmin, s_t)
+                t0 = _time.perf_counter()
+                surv = np.asarray(ops.bound_survive(
+                    ops.bound_min2(jnp.asarray(E_q[s:e]), centers_dev,
+                                   use_pallas=self.use_pallas), thr_dev))
+                scr["screen_eval_s"] += _time.perf_counter() - t0
+                sub, _ = self._screen_cols(scr, surv)
                 if sub.size == 0:
                     cols_chunks.append(np.zeros(0, np.int32))
                     dist_chunks.append(np.zeros(0, np.float32))
@@ -1139,11 +1232,10 @@ class NeighborEngine:
         scr = self._screen_get()
         if scr is not None:
             order = scr["order"]
-            s_t, s2t = self._screen_thresholds(eps, scr)
-            dmin_all = self._screen_dmin(scr)
+            surv, s_t, s2t = self._screen_surv(eps, scr)
             for t, (s, e) in enumerate(scr["tiles"]):
                 self.distance_rows_computed += e - s
-                sub, _ = self._screen_cols(scr, dmin_all[t], s_t)
+                sub, _ = self._screen_cols(scr, surv[t])
                 if sub.size == 0:
                     continue
                 q_state = self.metric.take(scr["state_perm"], slice(s, e))

@@ -1,0 +1,230 @@
+"""Screened ε*-verification and screen-cache invalidation properties.
+
+The ε*-query verifier (``repro.core.queries``) now consults the engine's
+projection screen (``NeighborEngine.screen_admit``) before computing any
+verification distance: a core column no candidate admits provably holds
+no hit, so it drops from the block.  The contract mirrors the pruned
+sweep's — the screen only ever removes *provable* non-hits — so labels
+must be byte-identical with the screen on and off, for every registered
+metric (projection-less user metrics degrade to the unscreened path),
+and on the 8-device mesh lane; on prunable geometry the counted
+``verification_pairs`` must strictly drop.
+
+The second half pins cache hygiene: a screen (and its device-resident
+bucket-bound plane) built before an insert/delete must never survive the
+mutation — a stale plane could prune a bucket that now holds a true
+neighbor.  ``append_rows``/``keep_rows`` invalidate, and the mutated
+index stays byte-identical to fresh pruned AND unpruned builds.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import FinexIndex
+from repro.core.queries import QueryStats, eps_star_batch
+from repro.metrics import get_metric, register_metric, registered_metrics
+from repro.neighbors.engine import NeighborEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# force the genuinely screened path at test-sized n (see test_pruned_sweep)
+PRUNED = dict(prune="on", batch_rows=48, screen_bucket=8)
+
+
+def _chebyshev(q, c):
+    return jnp.max(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+
+
+try:
+    register_metric("scrq-cheb", _chebyshev)
+except ValueError:
+    pass  # already registered by a previous import of this module
+
+ALL_METRICS = registered_metrics()  # includes the user metric above
+
+
+def _index_pair(name, n=240, seed=3, minpts=5):
+    """(pruned index, unpruned index, generating eps) over one dataset."""
+    m = get_metric(name)
+    rng = np.random.default_rng(seed)
+    data = m.synthesize(rng, n)
+    probe = NeighborEngine(data, metric=get_metric(name), batch_rows=48)
+    dense = probe.distances_from(np.arange(probe.n))
+    off_diag = dense[~np.eye(probe.n, dtype=bool)]
+    eps = float(np.quantile(off_diag, 0.3))
+    on = FinexIndex.from_engine(
+        NeighborEngine(data, metric=get_metric(name), **PRUNED),
+        eps, minpts)
+    off = FinexIndex.from_engine(
+        NeighborEngine(data, metric=get_metric(name), prune="off",
+                       batch_rows=48),
+        eps, minpts)
+    return on, off, eps
+
+
+@pytest.mark.parametrize("name", ALL_METRICS)
+def test_eps_star_screened_byte_identical_every_metric(name):
+    """Scalar and batched ε*-labels agree bit-for-bit, screen on vs off,
+    for every registered metric (incl. jaccard's minhash screen and a
+    projection-less ``register_metric`` user distance)."""
+    on, off, eps = _index_pair(name)
+    stars = [0.45 * eps, 0.7 * eps, 0.9 * eps]
+    for es in stars:
+        np.testing.assert_array_equal(on.eps_star(es), off.eps_star(es))
+    sa, sb = QueryStats(), QueryStats()
+    A = eps_star_batch(on.ordering, on.engine, stars, stats=sa)
+    B = eps_star_batch(off.ordering, off.engine, stars, stats=sb)
+    np.testing.assert_array_equal(A, B)
+    assert sb.screened_pairs == 0          # no screen, nothing skipped
+    m = get_metric(name)
+    if m.project(m.canonicalize(m.synthesize(
+            np.random.default_rng(0), 8)), 4) is None:
+        # projection-less metric: the screened path must degrade to the
+        # plain verifier, not silently drop pairs
+        assert sa.screened_pairs == 0
+        assert sa.verification_pairs == sb.verification_pairs
+
+
+def test_eps_star_screen_reduces_verification_pairs():
+    """On prunable geometry the screen must strictly shrink the
+    verification sub-matrices — fewer pairs computed, some skipped —
+    with unchanged labels; ``FinexIndex.stats`` surfaces the counter.
+
+    Geometry note: a column drops only when NO candidate admits it, so
+    tight isolated blobs never screen (every core has a candidate
+    within ε*).  The noisy mixture works because noise bridges merge
+    gaussians into sparse clusters much wider than ε*, leaving cores
+    far from every candidate of their cluster."""
+    from repro.data.synthetic import gaussian_mixture
+    x = gaussian_mixture(800, d=8, k=12, noise_frac=0.1, seed=0)
+    on = FinexIndex.from_engine(NeighborEngine(x, **PRUNED), 0.6, 8)
+    off = FinexIndex.from_engine(
+        NeighborEngine(x, prune="off", batch_rows=48), 0.6, 8)
+    stars = [0.25, 0.35, 0.5]
+    for es in stars:
+        np.testing.assert_array_equal(on.eps_star(es), off.eps_star(es))
+    vp_on, sp_on = (on.query_stats.verification_pairs,
+                    on.query_stats.screened_pairs)
+    vp_off, sp_off = (off.query_stats.verification_pairs,
+                      off.query_stats.screened_pairs)
+    assert vp_off > 0, "geometry produced no verification work"
+    assert sp_off == 0
+    assert sp_on > 0
+    assert vp_on < vp_off
+    assert on.stats()["query_screened_pairs"] == sp_on
+    # the batched kernel shares sub-matrices across settings but screens
+    # the same way: identical labels, strictly fewer pairs
+    sa, sb = QueryStats(), QueryStats()
+    np.testing.assert_array_equal(
+        eps_star_batch(on.ordering, on.engine, stars, stats=sa),
+        eps_star_batch(off.ordering, off.engine, stars, stats=sb))
+    assert sb.verification_pairs > 0
+    assert sa.screened_pairs > 0
+    assert sa.verification_pairs < sb.verification_pairs
+
+
+def test_eps_star_screened_mesh_lane():
+    """Mesh-built index (8 host devices, sharded screened emit) answers
+    screened ε*-queries byte-identically to the unpruned single-device
+    index over the same data."""
+    code = """
+    import numpy as np
+    from repro.core import FinexIndex
+    from repro.core.queries import QueryStats, eps_star_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.neighbors.distributed import sharded_csr_materialize
+    from repro.neighbors.engine import NeighborEngine
+
+    rng = np.random.default_rng(29)
+    mesh = make_host_mesh(2, 4)
+    centers = rng.normal(scale=60.0, size=(4, 6))
+    x = np.concatenate([c + rng.normal(size=(128, 6)) for c in centers]
+                       ).astype(np.float32)
+    csr = sharded_csr_materialize(x, 1.4, mesh, cap=256, row_chunk=64)
+    on = FinexIndex.from_engine(
+        NeighborEngine(x, prune="on", batch_rows=48, screen_bucket=8),
+        1.4, 6, csr=csr)
+    off = FinexIndex.from_engine(
+        NeighborEngine(x, prune="off", batch_rows=48), 1.4, 6)
+    stars = [0.6, 0.9, 1.25]
+    for es in stars:
+        np.testing.assert_array_equal(on.eps_star(es), off.eps_star(es))
+    sa, sb = QueryStats(), QueryStats()
+    np.testing.assert_array_equal(
+        eps_star_batch(on.ordering, on.engine, stars, stats=sa),
+        eps_star_batch(off.ordering, off.engine, stars, stats=sb))
+    assert sa.verification_pairs <= sb.verification_pairs
+    print("MESH-SCREENED-EPSSTAR-OK")
+    """
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=900)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr[-4000:]}"
+    assert "MESH-SCREENED-EPSSTAR-OK" in p.stdout
+
+
+# --------------------------------------------------- cache invalidation
+
+def test_mutations_drop_screen_cache():
+    """``append_rows``/``keep_rows`` must drop the cached screen (and its
+    device-resident bound plane) — a stale plane could prune a bucket
+    that now holds a true neighbor."""
+    rng = np.random.default_rng(31)
+    centers = rng.normal(scale=50.0, size=(4, 5))
+    x = np.concatenate([c + rng.normal(size=(70, 5)) for c in centers]
+                       ).astype(np.float32)
+    eng = NeighborEngine(x, **PRUNED)
+    eng.materialize(1.3)
+    scr = eng._screen_get()
+    assert scr is not None and scr.get("min2") is not None, (
+        "materialize should have built the screen + bound plane")
+    eng.append_rows(x[:7] + 0.01)
+    assert eng._screen is None
+    eng.materialize(1.3)
+    assert eng._screen_get() is not None
+    keep = np.ones(eng.n, dtype=bool)
+    keep[::9] = False
+    eng.keep_rows(keep)
+    assert eng._screen is None
+
+
+def test_stale_screen_never_prunes_new_neighbor():
+    """End to end: a pruned index whose screen was built pre-mutation
+    stays byte-identical to fresh pruned AND unpruned builds after
+    inserting rows OUTSIDE every existing bucket (the adversarial case
+    for a stale bound plane) and after deletes; ε*-queries agree too."""
+    rng = np.random.default_rng(37)
+    centers = rng.normal(scale=50.0, size=(4, 5))
+    x = np.concatenate([c + rng.normal(size=(80, 5)) for c in centers]
+                       ).astype(np.float32)
+    # new rows: a fresh far-away blob + exact duplicates of corpus rows
+    far = (rng.normal(scale=50.0, size=(1, 5))
+           + rng.normal(size=(12, 5))).astype(np.float32)
+    new = np.concatenate([far, x[:5]])
+
+    idx = FinexIndex.from_engine(NeighborEngine(x, **PRUNED), 1.5, 6)
+    assert idx.engine._screen_get() is not None      # cache is hot
+    idx.insert(new)
+    keep = np.ones(idx.n, dtype=bool)
+    keep[rng.choice(idx.n, size=20, replace=False)] = False
+    idx.delete(np.flatnonzero(~keep))
+
+    x_final = np.concatenate([x, new])[keep]
+    for kw in (PRUNED, dict(prune="off", batch_rows=48)):
+        ref = FinexIndex.from_engine(NeighborEngine(x_final, **kw), 1.5, 6)
+        np.testing.assert_array_equal(idx.csr.indptr, ref.csr.indptr)
+        np.testing.assert_array_equal(idx.csr.indices, ref.csr.indices)
+        np.testing.assert_array_equal(idx.csr.dists, ref.csr.dists)
+        np.testing.assert_array_equal(idx.ordering.order,
+                                      ref.ordering.order)
+        for es in (0.8, 1.2):
+            np.testing.assert_array_equal(idx.eps_star(es),
+                                          ref.eps_star(es))
