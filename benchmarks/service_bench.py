@@ -14,6 +14,12 @@ Measures the three serving-side claims on the 20k-point benchmark dataset
     warm hit answered a cluster request without a single distance row.
   * ``settings_per_s``       — throughput of a mixed request stream
     through the slot-batched ``ClusterService``.
+  * ``frontend``             — the concurrent front-end's mutation
+    coalescing: K single-point inserts staged into ONE windowed delta
+    through ``ServiceFrontend`` vs the same K points as sequential
+    facade ``.insert`` calls (byte-identity asserted), the slack-array
+    splice-reallocation savings, and concurrent read throughput with
+    admission rejections + queue-depth p95 captured via the Stats verb.
 
     PYTHONPATH=src python benchmarks/service_bench.py            # 20k
     PYTHONPATH=src python benchmarks/service_bench.py --smoke    # 2k
@@ -148,6 +154,148 @@ def run(n: int = 20_000, d: int = 8, eps: float = 1.0, minpts: int = 16,
         "counters": snap["counters"],
         "windows": snap["windows"],
     }
+
+    # ------------------------------------------- concurrent front-end
+    # K single-point inserts: the frontend stages them behind pause()
+    # and applies ONE windowed batched delta; the baseline replays the
+    # same points as K sequential facade .insert calls. Both final
+    # states are asserted byte-identical.
+    import threading
+
+    from repro.core import FinexIndex
+    from repro.service import (AdmissionError, BuildOp, ClusterOp,
+                               MutateRequest, ServiceFrontend, StatsOp,
+                               SweepOp)
+
+    K = 16 if n >= 10_000 else 8
+    rng_f = np.random.default_rng(seed + 7)
+    pts = (x[rng_f.integers(0, n, size=K)]
+           + rng_f.normal(scale=0.05, size=(K, d))).astype(x.dtype)
+    arrays = index.to_arrays()
+
+    # warm the insert jit shapes (single-row and K-row strips) off-clock
+    warm = FinexIndex.from_arrays(arrays, data=x)
+    warm.insert(pts[:1])
+    FinexIndex.from_arrays(arrays, data=x).insert(pts)
+
+    seq_idx = FinexIndex.from_arrays(arrays, data=x)
+
+    def _seq_inserts():
+        for i in range(K):
+            seq_idx.insert(pts[i:i + 1])
+    _, t_seq_ins = _timed(_seq_inserts)
+
+    # slack-backed sequential inserts: same op sequence, splices land
+    # in reserved row slack instead of reallocating the CSR every time
+    slack_idx = FinexIndex.from_arrays(arrays, data=x)
+    slack_idx.enable_slack()
+
+    def _slack_inserts():
+        for i in range(K):
+            slack_idx.insert(pts[i:i + 1])
+    _, t_slack_ins = _timed(_slack_inserts)
+    slack_st = slack_idx.slack_stats()
+    splices = slack_st["in_place_splices"] + slack_st["relayouts"]
+
+    fe_store = IndexStore(capacity=2)
+    fe_idx = FinexIndex.from_arrays(arrays, data=x)
+    fe_store.put(fe_idx)
+    fe = ServiceFrontend(store=fe_store, workers=4, window=K + 8,
+                         max_queue=K + 8)
+    bres = fe.submit(BuildOp("bench", x, eps, minpts)).result(timeout=600)
+    assert bres.outcome == "hit"            # bound, not rebuilt
+    fe.pause()
+    mut_futs = [fe.submit(MutateRequest("bench", "insert",
+                                        points=pts[i:i + 1]))
+                for i in range(K)]
+    t0 = time.perf_counter()
+    fe.resume()
+    assert fe.drain(timeout=600)
+    t_coal = time.perf_counter() - t0
+    for f in mut_futs:
+        f.result(timeout=60)
+    assert fe.batched_deltas == 1, "window did not coalesce to one delta"
+
+    def _same_state(a, b):
+        return (all(np.array_equal(getattr(a.csr, f), getattr(b.csr, f))
+                    for f in ("indptr", "indices", "dists"))
+                and all(np.array_equal(getattr(a.ordering, f),
+                                       getattr(b.ordering, f))
+                        for f in ("order", "pos", "C", "R", "N", "F"))
+                and np.array_equal(a.clustering(), b.clustering()))
+
+    report["frontend"] = {
+        "k_inserts": K,
+        "sequential_inserts_s": round(t_seq_ins, 4),
+        "slack_sequential_inserts_s": round(t_slack_ins, 4),
+        "coalesced_window_s": round(t_coal, 4),
+        "coalescing_speedup": round(t_seq_ins / max(t_coal, 1e-9), 2),
+        "coalescing_identical": _same_state(fe_idx, seq_idx),
+        "slack_identical": _same_state(slack_idx, seq_idx),
+        "slack_vs_packed_sequential": round(
+            t_seq_ins / max(t_slack_ins, 1e-9), 2),
+        "slack_in_place_fraction": round(
+            slack_st["in_place_splices"] / max(splices, 1), 3),
+        "batched_deltas": fe.batched_deltas,
+        "coalesced_mutations": fe.coalesced_mutations,
+    }
+
+    # admission control + concurrent read throughput, captured through
+    # the Stats verb (tracing on so the queue-depth window fills)
+    obs.reset()
+    obs.enable()
+    fe.pause()
+    staged = []
+    try:
+        while True:                       # fill to the admission bound
+            staged.append(fe.submit(ClusterOp("bench")))
+    except AdmissionError:
+        pass
+    t0 = time.perf_counter()
+    fe.resume()
+
+    def _client(tid):
+        r = np.random.default_rng(seed + 100 + tid)
+        for _ in range(8):
+            picks = r.integers(len(settings), size=sweep_k)
+            req = SweepOp("bench", [settings[i] for i in picks])
+            while True:
+                try:
+                    staged.append(fe.submit(req))
+                    break
+                except AdmissionError:
+                    time.sleep(0.002)
+
+    clients = [threading.Thread(target=_client, args=(t,))
+               for t in range(4)]
+    for t in clients:
+        t.start()
+    for t in clients:
+        t.join()
+    assert fe.drain(timeout=600)
+    t_conc = time.perf_counter() - t0
+    verb = fe.submit(StatsOp()).result(timeout=600)
+    fe_labels = fe.submit(SweepOp("bench", settings)).result(timeout=600)
+    want_labels = SweepPlanner(fe_idx).sweep(settings)
+    fe.shutdown(drain=True, timeout=600)
+    obs.disable()
+    obs.reset()
+    responses = len(staged)
+    qd = verb["telemetry"]["windows"].get("frontend.queue_depth", {})
+    report["frontend"]["concurrent"] = {
+        "workers": 4,
+        "clients": 4,
+        "responses": responses,
+        "seconds": round(t_conc, 4),
+        "responses_per_s": round(responses / max(t_conc, 1e-9), 1),
+        "rejected": verb["frontend"]["rejected"],
+        "queue_depth_p95": qd.get("p95"),
+        "windows": verb["frontend"]["windows"],
+        "identical_labels": bool(np.array_equal(fe_labels.labels,
+                                                want_labels)),
+    }
+    assert verb["frontend"]["rejected"] >= 1, \
+        "admission bound never engaged"
 
     if out_path:
         with open(out_path, "w") as f:

@@ -78,9 +78,17 @@ EXACT_FLAGS = {
                          "pruning_jaccard.screen_eval_device",
                          "queries.identical_labels",
                          "telemetry.identical_with_tracing"],
+    # frontend.coalescing_identical: K single-point inserts coalesced
+    # into ONE windowed delta must leave the index byte-identical to K
+    # sequential facade inserts; slack_identical pins the slack-array
+    # splice layout to the same contract; concurrent.identical_labels
+    # pins reads served under 4-thread traffic to the bare planner
     "BENCH_service.json": ["sweep_identical_to_sequential",
                            "hit_zero_distance_rows",
-                           "telemetry.identical_with_tracing"],
+                           "telemetry.identical_with_tracing",
+                           "frontend.coalescing_identical",
+                           "frontend.slack_identical",
+                           "frontend.concurrent.identical_labels"],
 }
 FLOORS = {
     "smoke": {
@@ -100,6 +108,13 @@ FLOORS = {
             "cache_hit_speedup": 10.0,
             # batching barely pays at toy scale; the full floor is 1.5
             "sweep_vs_sequential": 0.7,
+            # one windowed delta vs K packed splices: even at toy scale
+            # the win is >10x on the reference host; wide margin for CI
+            "frontend.coalescing_speedup": 1.2,
+            # slack-backed splices must actually land in reserved slack
+            # (a relayout-every-time regression drops this toward 0)
+            "frontend.slack_in_place_fraction": 0.8,
+            "frontend.concurrent.responses_per_s": 0.5,
         },
     },
     "full": {
@@ -130,6 +145,12 @@ FLOORS = {
         "BENCH_service.json": {
             "cache_hit_speedup": 50.0,
             "sweep_vs_sequential": 1.5,
+            # the acceptance bar: coalesced windowed mutations >= 2x vs
+            # sequential single-point inserts at the 20k reference
+            # setting (measured far above; floor carries runner margin)
+            "frontend.coalescing_speedup": 2.0,
+            "frontend.slack_in_place_fraction": 0.8,
+            "frontend.concurrent.responses_per_s": 2.0,
         },
     },
 }
@@ -262,9 +283,21 @@ check("BENCH_service.json",
                 "service.settings_per_s", "service.batched_sweeps",
                 "service.store",
                 "telemetry.identical_with_tracing",
-                "telemetry.counters", "telemetry.windows"],
+                "telemetry.counters", "telemetry.windows",
+                "frontend.k_inserts", "frontend.sequential_inserts_s",
+                "frontend.slack_sequential_inserts_s",
+                "frontend.coalesced_window_s",
+                "frontend.coalescing_speedup",
+                "frontend.slack_in_place_fraction",
+                "frontend.batched_deltas",
+                "frontend.concurrent.responses_per_s",
+                "frontend.concurrent.rejected",
+                "frontend.concurrent.queue_depth_p95"],
       ratio_keys=["cache_hit_speedup", "sweep_vs_sequential",
-                  "service.settings_per_s"],
+                  "service.settings_per_s",
+                  "frontend.coalescing_speedup",
+                  "frontend.slack_vs_packed_sequential",
+                  "frontend.concurrent.responses_per_s"],
       rollup_keys=["telemetry.span_rollup"])
 
 # disabled-mode overhead gate (full mode only): the fresh tracing-off

@@ -20,6 +20,7 @@ import os
 import re
 import shutil
 import threading
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -179,6 +180,45 @@ class CheckpointManager:
 
     def _step_kind(self, step: int) -> Optional[str]:
         return self._step_meta(step).get("kind")
+
+    def delete_step(self, step: int) -> bool:
+        """Durably remove one step's artifacts (index snapshots included).
+        Returns True if something was deleted."""
+        self.wait()
+        final = os.path.join(self.dir, f"step_{step}")
+        existed = os.path.exists(final)
+        shutil.rmtree(final, ignore_errors=True)
+        return existed
+
+    # -------------------------------------------------- catalog documents
+    # Small JSON documents living next to the step dirs, written with the
+    # same torn-write discipline as manifests (tmp + fsync + rename).
+    # ``IndexStore`` keeps its spill catalog here so spilled indexes
+    # survive a process restart.
+    def save_catalog(self, name: str, payload: dict) -> None:
+        """Atomically publish ``<dir>/<name>.json``."""
+        tmp = os.path.join(self.dir, f".tmp_{name}.json")
+        final = os.path.join(self.dir, f"{name}.json")
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)                     # atomic publish
+
+    def load_catalog(self, name: str) -> Optional[dict]:
+        """The last published catalog, or None if absent/unreadable.
+        A corrupt document degrades to "no catalog" (the store falls
+        back to rebuilding) rather than poisoning construction."""
+        try:
+            with open(os.path.join(self.dir, f"{name}.json")) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+        except json.JSONDecodeError:
+            warnings.warn(
+                f"catalog {name}.json is not valid JSON — ignoring it "
+                "(spilled entries will rebuild instead of reloading)")
+            return None
 
     def restore_index(self, step: int, data: Any = None):
         """Rebuild a ``FinexIndex`` saved by :meth:`save_index`.

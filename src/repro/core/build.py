@@ -227,13 +227,17 @@ def _finex_sweep_impl(counts, csr, C, active=None) -> dict:
     slot = np.full(n, -1, dtype=np.int64)     # position in order list or -1
     order_list = _Tombstones(n)
     is_core = np.isfinite(C)
-    indptr, indices, dists = csr.indptr, csr.indices, csr.dists
+    # row-addressed access (not indptr slicing) so the sweep reads packed
+    # and slack-padded CSRs identically — the incremental path hands it
+    # a SlackCSR whose rows are not contiguous
+    row_starts, row_ends = csr.row_bounds()
+    indices, dists = csr.indices, csr.dists
 
     pq = _StablePQ(n)
 
     def q_update(c: int) -> None:
         """Algorithm 3: PriorityQueue::update(c, N_ε(c), Õ) — one batch."""
-        s, e = indptr[c], indptr[c + 1]
+        s, e = row_starts[c], row_ends[c]
         nbrs = indices[s:e]                        # int32 view, no copy
         rdist = np.maximum(dists[s:e], C[c]).astype(np.float64)
         proc = processed[nbrs]

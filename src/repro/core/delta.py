@@ -79,16 +79,19 @@ def core_components(
     core-incidence edges — true for any union of components) and labels
     come back in the subset's local numbering.
     """
+    starts_all = csr.row_bounds()[0]
     if rows is None:
-        n = csr.indptr.shape[0] - 1
-        lens = np.diff(csr.indptr)
-        cols = csr.indices[np.repeat(core, lens)]
-        counts = np.where(core, lens, 0)
+        n = starts_all.shape[0]
+        core_rows = np.flatnonzero(core)
+        gidx, lens_core = _row_gather_index(csr, core_rows)
+        cols = csr.indices[gidx]
+        counts = np.zeros(n, dtype=np.int64)
+        counts[core_rows] = lens_core
     else:
         n = rows.size
         core_pos = np.flatnonzero(core)
         gidx, lens_core = _row_gather_index(csr, rows[core_pos])
-        loc = np.full(csr.indptr.shape[0] - 1, -1, dtype=np.int64)
+        loc = np.full(starts_all.shape[0], -1, dtype=np.int64)
         loc[rows] = np.arange(n, dtype=np.int64)
         cols = loc[csr.indices[gidx]]
         if cols.size and cols.min() < 0:
@@ -115,13 +118,15 @@ def _row_gather_index(
 
     Three O(sub-nnz) passes (repeat of the per-row source/destination
     offset delta, one arange, one add) — the hot primitive under every
-    subset operation on the delta path.
+    subset operation on the delta path.  Goes through ``row_bounds()``,
+    so it reads packed and slack-padded layouts alike.
     """
-    lens = np.diff(csr.indptr)[rows]
+    starts, ends = csr.row_bounds()
+    lens = (ends - starts)[rows]
     total = int(lens.sum())
     dst = np.zeros(rows.size, dtype=np.int64)
     np.cumsum(lens[:-1], out=dst[1:])
-    gidx = np.repeat(csr.indptr[:-1][rows] - dst, lens)
+    gidx = np.repeat(starts[rows] - dst, lens)
     gidx += np.arange(total, dtype=np.int64)
     return gidx, lens
 
@@ -285,6 +290,180 @@ def splice_insert(
     return CSRNeighborhoods(
         indptr=indptr, indices=indices, dists=dists, eps=csr.eps
     )
+
+
+class SlackCSR:
+    """Slack-backed CSR: capacity-padded rows so insert batches splice
+    in place instead of reallocating the whole O(nnz) array pair.
+
+    Layout: row ``i`` occupies ``indices[capptr[i] : capptr[i]+lens[i]]``
+    inside a physical buffer whose per-row capacity is
+    ``capptr[i+1]-capptr[i]`` (>= lens[i]); the spare tail of each row
+    plus one arena past ``capptr[-1]`` absorb future splices.  Every
+    row-addressed consumer (the ordering sweep, ``_row_gather_index``,
+    ``core_components``) reads it through :meth:`row_bounds`, so the
+    logical content is exactly the packed CSR :meth:`packed` returns —
+    same entries, same per-row order, same bits.
+
+    ``append_batch`` is the whole point: when the incoming splice fits
+    the existing slack it writes only O(adds) entries in place
+    (``in_place_splices``); otherwise it falls back to one packed
+    ``splice_insert`` plus a re-padding pass (``relayouts``, O(nnz) —
+    the cost the slack exists to amortize).  Deletes always repack (the
+    compacting id remap is O(nnz) regardless), so the facade re-pads on
+    the next insert.
+
+    Mutation rollback: :meth:`splice_snapshot` captures the logical
+    extent (lens + capptr) in O(n); restoring it un-publishes any
+    in-place tail writes, because entries beyond ``lens`` are garbage by
+    contract.
+    """
+
+    def __init__(self, capptr: np.ndarray, lens: np.ndarray,
+                 indices: np.ndarray, dists: np.ndarray, eps: float,
+                 slack: float, min_row_slack: int,
+                 stats: Optional[dict] = None):
+        self.capptr = capptr          # (n+1,) int64 physical row offsets
+        self.lens = lens              # (n,) int64 logical row lengths
+        self.indices = indices        # physical int32 buffer (cap,)
+        self.dists = dists            # physical float32 buffer (cap,)
+        self.eps = eps
+        self.slack = float(slack)
+        self.min_row_slack = int(min_row_slack)
+        # shared across relayouts so the facade's counters survive the
+        # object swap a relayout performs
+        self.stats = stats if stats is not None else {
+            "in_place_splices": 0, "relayouts": 0}
+        self._packed: Optional[CSRNeighborhoods] = None
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def from_csr(cls, csr: CSRNeighborhoods, slack: float = 1.5,
+                 min_row_slack: int = 8,
+                 stats: Optional[dict] = None) -> "SlackCSR":
+        """Re-pad a packed CSR: each row gets ``max(ceil(len*(slack-1)),
+        min_row_slack)`` spare slots, plus a tail arena for future rows."""
+        lens = np.diff(csr.indptr).astype(np.int64)
+        caps = lens + cls._row_slack(lens, slack, min_row_slack)
+        n = lens.shape[0]
+        capptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(caps, out=capptr[1:])
+        tail = max(int(csr.indptr[-1] * (slack - 1.0)), 8 * min_row_slack)
+        cap = int(capptr[-1]) + tail
+        indices = np.empty(cap, dtype=np.int32)
+        dists = np.empty(cap, dtype=np.float32)
+        dst = np.repeat(capptr[:-1] - csr.indptr[:-1], lens)
+        dst += np.arange(int(csr.indptr[-1]), dtype=np.int64)
+        indices[dst] = csr.indices
+        dists[dst] = csr.dists
+        return cls(capptr, lens, indices, dists, csr.eps, slack,
+                   min_row_slack, stats=stats)
+
+    @staticmethod
+    def _row_slack(lens: np.ndarray, slack: float,
+                   min_row_slack: int) -> np.ndarray:
+        extra = np.ceil(lens * (slack - 1.0)).astype(np.int64)
+        return np.maximum(extra, min_row_slack)
+
+    # --------------------------------------------------- CSR access shim
+    def row_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        starts = self.capptr[:-1]
+        return starts, starts + self.lens
+
+    @property
+    def nnz(self) -> int:
+        return int(self.lens.sum())
+
+    @property
+    def capacity(self) -> int:
+        return int(self.indices.shape[0])
+
+    def packed(self) -> CSRNeighborhoods:
+        """The canonical packed view — cached until the next splice.
+        One O(nnz) gather; every query-side consumer (MinPts* batches,
+        serialization, spill) goes through this, so a read window after
+        a burst of mutations packs exactly once."""
+        if self._packed is None:
+            n = self.lens.shape[0]
+            gidx, lens = _row_gather_index(self, np.arange(n, dtype=np.int64))
+            indptr = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(lens, out=indptr[1:])
+            self._packed = CSRNeighborhoods(
+                indptr=indptr, indices=self.indices[gidx],
+                dists=self.dists[gidx], eps=self.eps)
+        return self._packed
+
+    # ------------------------------------------------------------ splice
+    @_traced("delta.slack_splice")
+    def append_batch(self, add_lens: np.ndarray, add_cols: np.ndarray,
+                     add_dists: np.ndarray, new_lens: np.ndarray,
+                     new_cols: np.ndarray, new_dists: np.ndarray
+                     ) -> "SlackCSR":
+        """Splice an insert batch (same arguments as ``splice_insert``).
+
+        Returns the post-splice SlackCSR: ``self`` (mutated in place)
+        when everything fits the slack, a freshly laid-out object after
+        a relayout.  Either way the logical content equals
+        ``splice_insert(self.packed(), ...)`` bit for bit — old rows
+        append at their tails in the same (row, new-id) order, new rows
+        land whole.
+        """
+        m = new_lens.shape[0]
+        new_lens = new_lens.astype(np.int64)
+        row_caps = np.diff(self.capptr)
+        newcaps = new_lens + self._row_slack(
+            new_lens, self.slack, self.min_row_slack)
+        need_tail = int(newcaps.sum())
+        fits = (bool(np.all(self.lens + add_lens <= row_caps))
+                and int(self.capptr[-1]) + need_tail <= self.capacity)
+        if not fits:
+            merged = splice_insert(self.packed(), add_lens, add_cols,
+                                   add_dists, new_lens, new_cols, new_dists)
+            self.stats["relayouts"] += 1
+            if obs.enabled():
+                obs.count("delta.slack.relayouts")
+            return SlackCSR.from_csr(merged, self.slack,
+                                     self.min_row_slack, stats=self.stats)
+        touched = np.flatnonzero(add_lens)
+        if touched.size:
+            seg = add_lens[touched]
+            starts = np.zeros(touched.size, dtype=np.int64)
+            np.cumsum(seg[:-1], out=starts[1:])
+            dst = np.repeat(
+                self.capptr[:-1][touched] + self.lens[touched] - starts,
+                seg)
+            dst += np.arange(add_cols.size, dtype=np.int64)
+            self.indices[dst] = add_cols
+            self.dists[dst] = add_dists
+        # new rows claim arena segments past capptr[-1]
+        nstarts = np.zeros(m, dtype=np.int64)
+        np.cumsum(newcaps[:-1], out=nstarts[1:])
+        nstarts += self.capptr[-1]
+        if int(new_lens.sum()):
+            ndst = np.zeros(m, dtype=np.int64)
+            np.cumsum(new_lens[:-1], out=ndst[1:])
+            gdst = np.repeat(nstarts - ndst, new_lens)
+            gdst += np.arange(int(new_lens.sum()), dtype=np.int64)
+            self.indices[gdst] = new_cols
+            self.dists[gdst] = new_dists
+        self.capptr = np.concatenate(
+            [self.capptr, self.capptr[-1] + np.cumsum(newcaps)])
+        self.lens = np.concatenate(
+            [self.lens + add_lens.astype(np.int64), new_lens])
+        self._packed = None
+        self.stats["in_place_splices"] += 1
+        if obs.enabled():
+            obs.count("delta.slack.in_place_splices")
+        return self
+
+    # ---------------------------------------------------------- rollback
+    def splice_snapshot(self) -> tuple:
+        """O(n) logical-extent capture for mutation rollback (the facade
+        pairs it with ``NeighborEngine.state_snapshot``)."""
+        return (self.capptr.copy(), self.lens.copy(), self._packed)
+
+    def splice_restore(self, snap: tuple) -> None:
+        self.capptr, self.lens, self._packed = snap
 
 
 @_traced("delta.splice_delete")

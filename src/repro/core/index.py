@@ -30,9 +30,10 @@ import numpy as np
 
 from repro import obs
 from repro.core.build import finex_build, finex_sweep
-from repro.core.delta import (core_components, merge_insert_components,
-                              splice_delete, splice_insert, stitch,
-                              subset_core_distances, subset_csr)
+from repro.core.delta import (SlackCSR, core_components,
+                              merge_insert_components, splice_delete,
+                              splice_insert, stitch, subset_core_distances,
+                              subset_csr)
 from repro.core.extract import query_clustering
 from repro.core.ordering import FinexOrdering
 from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
@@ -63,6 +64,12 @@ class FinexIndex:
         self.ordering = ordering
         self.csr = csr
         self.engine = engine
+        # slack mode (see repro.core.delta.SlackCSR): None = packed
+        # splices; a config dict re-pads the CSR on the next insert so
+        # consecutive insert batches splice in place. Counters are
+        # facade-held so they survive relayout object swaps.
+        self._slack: Optional[dict] = None
+        self._slack_stats = {"in_place_splices": 0, "relayouts": 0}
         # --- incremental-maintenance state (see repro.core.delta) ---
         # version: monotonically bumped per mutation; delta_log: one
         # report dict per applied insert/delete (the npz round-trips
@@ -167,6 +174,60 @@ class FinexIndex:
     def n(self) -> int:
         return self.ordering.n
 
+    @property
+    def csr(self) -> CSRNeighborhoods:
+        """The canonical packed CSR view — what queries, archives and
+        spills consume. Under slack mode the raw storage is a
+        ``SlackCSR`` and this packs lazily (one O(nnz) gather, cached
+        until the next splice — a read window after a burst of coalesced
+        mutations packs exactly once)."""
+        raw = self._csr
+        return raw.packed() if isinstance(raw, SlackCSR) else raw
+
+    @csr.setter
+    def csr(self, value) -> None:
+        self._csr = value
+
+    # --------------------------------------------------- slack splicing
+    def enable_slack(self, slack: float = 1.5,
+                     min_row_slack: int = 8) -> None:
+        """Switch insert splices to slack-backed CSR arrays.
+
+        Rows are over-allocated by ``slack`` (capacity ≈ len·slack, at
+        least ``min_row_slack`` spare slots each) so consecutive insert
+        batches splice in place — O(adds) instead of the packed path's
+        O(nnz) reallocation per splice.  Re-padding happens lazily on
+        the next insert; queries are unaffected (they read the packed
+        view, cached per mutation generation). Exactness is unchanged —
+        the packed view is byte-identical to the packed-splice result.
+        """
+        if slack < 1.0:
+            raise ValueError(f"slack factor must be >= 1.0, got {slack:g}")
+        self._slack = {"slack": float(slack),
+                       "min_row_slack": int(min_row_slack)}
+
+    def disable_slack(self) -> None:
+        """Back to packed splices; the raw storage repacks immediately."""
+        if isinstance(self._csr, SlackCSR):
+            self._csr = self._csr.packed()
+        self._slack = None
+
+    @property
+    def slack_enabled(self) -> bool:
+        return self._slack is not None
+
+    def slack_stats(self) -> dict:
+        """Splice-amortization counters: how many insert splices landed
+        in place vs forced an O(nnz) relayout."""
+        raw = self._csr
+        out = {"enabled": self._slack is not None,
+               "in_place_splices": self._slack_stats["in_place_splices"],
+               "relayouts": self._slack_stats["relayouts"]}
+        if isinstance(raw, SlackCSR):
+            out["capacity"] = raw.capacity
+            out["nnz"] = raw.nnz
+        return out
+
     def clustering(self) -> np.ndarray:
         """Exact labels at the generating (ε, MinPts) — Corollary 5.5."""
         return query_clustering(self.ordering, self.ordering.eps)
@@ -235,11 +296,21 @@ class FinexIndex:
             return self._noop_report("insert")
         n_old = self.n
         was_core = np.isfinite(self.ordering.C)
+        if self._slack is not None and not isinstance(self._csr, SlackCSR):
+            # lazy re-pad (first insert after enable_slack / a delete):
+            # pure layout change, the logical content is untouched
+            self._csr = SlackCSR.from_csr(self.csr,
+                                          stats=self._slack_stats,
+                                          **self._slack)
         # atomicity: the index's own fields are only assigned at the very
         # end of _apply_mutation, so restoring the engine on any failure
         # (bad weights, a non-bit-symmetric user metric tripping the
-        # component-closure check, ...) leaves the whole index untouched
+        # component-closure check, ...) leaves the whole index untouched.
+        # Slack mode splices in place, so its logical extent is captured
+        # too (O(n)) — restoring it un-publishes any tail writes.
         snap = eng.state_snapshot()
+        csr_snap = (self._csr.splice_snapshot()
+                    if isinstance(self._csr, SlackCSR) else None)
         with obs.span("index.insert", count=m, n=n_old,
                       metric=self.metric) as sp:
             try:
@@ -247,6 +318,8 @@ class FinexIndex:
                                            was_core, rebuild_threshold)
             except BaseException:
                 eng.state_restore(snap)
+                if csr_snap is not None:
+                    self._csr.splice_restore(csr_snap)
                 raise
             sp.annot(mode=report["mode"],
                      affected=report["affected"])
@@ -262,6 +335,12 @@ class FinexIndex:
                      rebuild_threshold: float) -> dict:
         eng = self.engine
         metric = self._metric_obj
+        # component labels describe the PRE-insert graph: compute them
+        # before the splice — slack mode appends into the live buffers,
+        # so reading them afterwards would see the post-insert rows
+        track_runs = (self._run_id is not None
+                      and self._run_triggers is not None)
+        comp = self._ensure_comp() if track_runs else None
         # append_rows re-canonicalizes the tuple; canonicalize is
         # documented idempotent (repro.metrics.Metric.canonicalize), so
         # this second pass is a no-copy identity
@@ -285,8 +364,12 @@ class FinexIndex:
         add_lens = np.bincount(old_i, minlength=n_old)
         add_cols = (rows_a[sel][by_row] + n_old).astype(np.int32)
         add_dists = dists_a[sel][by_row]
-        csr_new = splice_insert(self.csr, add_lens, add_cols, add_dists,
-                                lens_a, cols_a, dists_a)
+        if isinstance(self._csr, SlackCSR):
+            csr_new = self._csr.append_batch(add_lens, add_cols, add_dists,
+                                             lens_a, cols_a, dists_a)
+        else:
+            csr_new = splice_insert(self.csr, add_lens, add_cols, add_dists,
+                                    lens_a, cols_a, dists_a)
         w = eng.weights
         counts = np.empty(n_new, dtype=np.int64)
         add_w = np.bincount(
@@ -317,8 +400,7 @@ class FinexIndex:
         base = None
         comp_affected = None
         frac = None
-        if self._run_id is not None and self._run_triggers is not None:
-            comp = self._ensure_comp()
+        if track_runs:
             is_core = np.isfinite(C32)
             # affected = components of the dirty rows, plus every
             # component a newly-core row's edges now bind to them (new
@@ -464,8 +546,10 @@ class FinexIndex:
         fallbacks invalidate instead, and the next mutation recomputes
         here lazily."""
         if self._comp is None:
+            # raw storage: core_components is row_bounds-addressed, so
+            # slack layouts need no packing pass here
             self._comp = core_components(
-                self.csr, np.isfinite(self.ordering.C))
+                self._csr, np.isfinite(self.ordering.C))
         return self._comp
 
     def _noop_report(self, op: str) -> dict:
@@ -581,7 +665,10 @@ class FinexIndex:
             "minpts": self.minpts,
             "metric": self.metric,
             "cores": cores,
-            "csr_nnz": self.csr.nnz,
+            # raw-storage nnz: identical for packed and slack layouts,
+            # and reading it here never forces a pack
+            "csr_nnz": self._csr.nnz,
+            "slack": self.slack_stats(),
             "max_neighborhood": int(self.ordering.N.max()) if self.n else 0,
             "distance_rows_computed":
                 self.engine.distance_rows_computed

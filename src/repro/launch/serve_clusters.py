@@ -7,22 +7,36 @@ requests coalesce into shared batched sweeps, and the ``IndexStore``
 keeps indexes warm across requests (spilling LRU victims to disk when
 ``--store-dir`` is set).
 
+``--concurrent`` switches to the threaded ``ServiceFrontend``: ``--clients``
+threads submit interleaved sweeps and mutations against named indexes,
+``--workers`` worker threads serve coalesced per-index windows, and
+admission rejections are retried with backoff.  SIGINT/SIGTERM trigger a
+graceful drain in either mode — in-flight work flushes, ``--stats-json``
+is still written, the trace sink is flushed — instead of dying mid-window.
+
     PYTHONPATH=src python -m repro.launch.serve_clusters --smoke
     PYTHONPATH=src python -m repro.launch.serve_clusters \
         --n 20000 --requests 64 --sweep-k 8 --capacity 2 --datasets 3
+    PYTHONPATH=src python -m repro.launch.serve_clusters --smoke \
+        --concurrent --workers 2 --clients 4
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
+import threading
 import time
 
 import numpy as np
 
 from repro import obs
 from repro.data.synthetic import gaussian_mixture
-from repro.service import (BuildRequest, ClusterRequest, ClusterService,
-                           IndexStore, StatsRequest, SweepRequest)
+from repro.service import (BuildOp, BuildRequest, ClusterOp, ClusterRequest,
+                           ClusterService, IndexStore, MutateRequest,
+                           ServiceFrontend, StatsOp, StatsRequest, SweepOp,
+                           SweepRequest)
+from repro.service.frontend import AdmissionError
 
 
 def _request_stream(datasets, eps, minpts, n_requests, sweep_k, rng):
@@ -52,6 +66,113 @@ def _request_stream(datasets, eps, minpts, n_requests, sweep_k, rng):
     return reqs
 
 
+def _install_signal_drain(stop: threading.Event):
+    """SIGINT/SIGTERM set the stop flag and raise KeyboardInterrupt in
+    the main thread — both serving loops catch it and fall through to
+    the drain + stats-flush path instead of dying mid-window."""
+    def _graceful(signum, frame):
+        stop.set()
+        raise KeyboardInterrupt
+    try:
+        signal.signal(signal.SIGINT, _graceful)
+        signal.signal(signal.SIGTERM, _graceful)
+    except ValueError:
+        pass       # not the main thread (embedded use): Event still works
+
+
+def _run_concurrent(args, datasets, manager, stop: threading.Event) -> dict:
+    """The ``--concurrent`` path: N client threads against the threaded
+    frontend, mutations included."""
+    fe = ServiceFrontend(
+        store=IndexStore(capacity=args.capacity, manager=manager),
+        workers=args.workers, window=args.window,
+        max_queue=args.max_queue)
+    names = [f"ds{i}" for i in range(len(datasets))]
+    rejected_retries = 0
+    interrupted = False
+    t0 = time.perf_counter()
+    try:
+        for nm, x in zip(names, datasets):
+            fe.submit(BuildOp(nm, x, args.eps, args.minpts)).result()
+        futures = []
+        lock = threading.Lock()
+
+        def client(tid: int) -> None:
+            nonlocal rejected_retries
+            r = np.random.default_rng(args.seed + 1000 + tid)
+            for _ in range(args.requests):
+                if stop.is_set():
+                    return
+                nm = names[int(r.integers(len(names)))]
+                x = datasets[names.index(nm)]
+                k = float(r.random())
+                if k < args.mutate_frac / 2:
+                    pts = (x[r.integers(0, x.shape[0], size=2)]
+                           + r.normal(scale=0.05, size=(2, x.shape[1])))
+                    req = MutateRequest(nm, "insert", points=pts)
+                elif k < args.mutate_frac:
+                    # low ids are always valid: deletes never outpace
+                    # inserts far enough to shrink below the seed size
+                    req = MutateRequest(
+                        nm, "delete", ids=[int(r.integers(0, 8))])
+                elif k < 0.8:
+                    settings = [("eps", float(args.eps
+                                              * r.uniform(0.2, 1.0)))
+                                if r.random() < 0.5
+                                else ("minpts",
+                                      int(args.minpts * r.integers(1, 9)))
+                                for _ in range(args.sweep_k)]
+                    req = SweepOp(nm, settings)
+                else:
+                    req = ClusterOp(nm)
+                while not stop.is_set():
+                    try:
+                        f = fe.submit(req)
+                    except AdmissionError:
+                        with lock:
+                            rejected_retries += 1
+                        time.sleep(0.005)
+                        continue
+                    with lock:
+                        futures.append(f)
+                    break
+
+        threads = [threading.Thread(target=client, args=(t,), daemon=True)
+                   for t in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # the Stats verb rides the queue like any other op — its snapshot
+        # is mid-stream (ops behind it still pending), the drain below
+        # flushes those before the final report
+        probe = fe.submit(StatsOp()).result(timeout=60)
+        probe_depth = probe["frontend"]["queue_depth"]
+    except KeyboardInterrupt:
+        interrupted = True
+        probe_depth = None
+        print("signal received — draining frontend ...")
+    finally:
+        drained = fe.shutdown(drain=True, timeout=60.0)
+    dt = time.perf_counter() - t0
+    st = fe.stats()
+    fr = st["frontend"]
+    per_s = fr["completed"] / dt if dt > 0 else float("inf")
+    print(f"frontend: {fr['completed']} responses in {dt:.2f}s "
+          f"-> {per_s:.1f} responses/s "
+          f"({fr['batched_sweeps']} sweep batches, "
+          f"{fr['batched_deltas']} coalesced deltas, "
+          f"{fr['coalesced_mutations']} mutation riders)")
+    print(f"  admission: rejected={fr['rejected']} "
+          f"(client retries {rejected_retries}), windows={fr['windows']}, "
+          f"mid-stream queue depth {probe_depth}")
+    print(f"  store: {st['store']}")
+    return {"seconds": dt, "responses_per_s": per_s,
+            "graceful_shutdown": drained, "interrupted": interrupted,
+            "probe_queue_depth": probe_depth,
+            "client_retries": rejected_retries, **st}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n", type=int, default=4000)
@@ -68,6 +189,22 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny datasets / few requests")
+    ap.add_argument("--concurrent", action="store_true",
+                    help="serve through the threaded ServiceFrontend "
+                         "(submit/Future, admission control, coalesced "
+                         "mutation windows)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="frontend worker threads (--concurrent)")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="submitting client threads (--concurrent); "
+                         "--requests counts per client")
+    ap.add_argument("--window", type=int, default=8,
+                    help="dispatch window size (--concurrent)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="intake admission bound (--concurrent)")
+    ap.add_argument("--mutate-frac", type=float, default=0.2,
+                    help="fraction of client ops that mutate "
+                         "(--concurrent)")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump the final Telemetry.snapshot() (plus the "
                          "service counters) to PATH on exit; implies "
@@ -90,6 +227,19 @@ def main(argv=None) -> dict:
     if args.store_dir:
         from repro.checkpoint.manager import CheckpointManager
         manager = CheckpointManager(args.store_dir)
+
+    stop = threading.Event()
+    _install_signal_drain(stop)
+
+    if args.concurrent:
+        out = _run_concurrent(args, datasets, manager, stop)
+        if args.stats_json:
+            with open(args.stats_json, "w") as f:
+                json.dump(out, f, indent=2, default=str)
+            print(f"  stats snapshot -> {args.stats_json}")
+        obs.flush()
+        return out
+
     svc = ClusterService(store=IndexStore(capacity=args.capacity,
                                           manager=manager),
                          slots=args.slots,
@@ -97,8 +247,14 @@ def main(argv=None) -> dict:
     reqs = _request_stream(datasets, args.eps, args.minpts, args.requests,
                            args.sweep_k, rng)
 
+    interrupted = False
     t0 = time.perf_counter()
-    svc.run(reqs)
+    try:
+        svc.run(reqs)
+    except KeyboardInterrupt:
+        interrupted = True
+        print("signal received — stopping after the current window; "
+              "flushing stats ...")
     dt = time.perf_counter() - t0
 
     st = svc.stats()
@@ -109,13 +265,14 @@ def main(argv=None) -> dict:
     print(f"  planner batches: {st['batched_sweeps']} "
           f"(coalesced {st['coalesced_settings']} settings)")
     print(f"  store: {st['store']}")
+    out = {"seconds": dt, "settings_per_s": qps,
+           "interrupted": interrupted, **st}
     if args.stats_json:
         with open(args.stats_json, "w") as f:
-            json.dump({"seconds": dt, "settings_per_s": qps, **st},
-                      f, indent=2, default=str)
+            json.dump(out, f, indent=2, default=str)
         print(f"  stats snapshot -> {args.stats_json}")
     obs.flush()
-    return {"seconds": dt, "settings_per_s": qps, **st}
+    return out
 
 
 if __name__ == "__main__":

@@ -183,6 +183,17 @@ class CSRNeighborhoods:
         s, e = self.indptr[i], self.indptr[i + 1]
         return self.indices[s:e], self.dists[s:e]
 
+    def row_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(starts, ends) of each row's segment in ``indices``/``dists``.
+
+        The row-addressed access contract shared with
+        ``repro.core.delta.SlackCSR``: consumers that only ever slice
+        ``indices[starts[i]:ends[i]]`` (the ordering sweep, the subset
+        gathers) work unchanged on slack-padded layouts where rows are
+        not contiguous. For a packed CSR this is just the indptr split.
+        """
+        return self.indptr[:-1], self.indptr[1:]
+
     def row_ids(self) -> np.ndarray:
         """(nnz,) row id per stored pair — the segment expansion used by
         weighted counts, core distances and subgraph extraction. Cached:

@@ -50,10 +50,9 @@ class ObsWarning(UserWarning):
 
 
 class _Threshold:
-    __slots__ = ("window", "limit", "stat", "breached", "breaches")
+    __slots__ = ("limit", "stat", "breached", "breaches")
 
-    def __init__(self, window, limit, stat):
-        self.window = window
+    def __init__(self, limit, stat):
         self.limit = limit
         self.stat = stat
         self.breached = False
@@ -126,19 +125,23 @@ class Telemetry:
         """Early-warning limit on window ``name``: whenever
         ``stat(window) > limit`` the first breach warns (``ObsWarning``)
         and latches; the latch resets once the statistic recovers, so a
-        sustained breach warns once, not once per observation."""
+        sustained breach warns once, not once per observation.
+
+        Registration does not create the window — the window appears in
+        the registry only once ``observe(name, ...)`` feeds it, so idle
+        thresholds leave ``snapshot()["windows"]`` untouched."""
         with self._lock:
-            window = self._windows.get(name)
-            if window is None:
-                window = self._windows[name] = RollingWindow(self.window_size)
-            self._thresholds[name] = _Threshold(window, float(limit), stat)
+            self._thresholds[name] = _Threshold(float(limit), stat)
 
     def _check_threshold(self, name):
         # caller holds self._lock; returns a warning message or None
         th = self._thresholds.get(name)
         if th is None:
             return None
-        value = th.window.stat(th.stat)
+        window = self._windows.get(name)
+        if window is None:
+            return None
+        value = window.stat(th.stat)
         if value is None:
             return None
         if value > th.limit:
@@ -168,27 +171,25 @@ class Telemetry:
                     name: {
                         "limit": th.limit,
                         "stat": th.stat,
-                        "window": len(th.window),
+                        "window": len(w) if w is not None else 0,
                         "breached": th.breached,
                         "breaches": th.breaches,
-                        "value": th.window.stat(th.stat),
+                        "value": w.stat(th.stat) if w is not None else None,
                     }
                     for name, th in self._thresholds.items()
+                    for w in (self._windows.get(name),)
                 },
             }
 
     def reset(self):
         """Drop all aggregates (thresholds keep their limits but lose
-        their windows' contents)."""
+        their windows' contents and breach latches)."""
         with self._lock:
             self._counters.clear()
             self._gauges.clear()
             self._spans.clear()
             self._windows.clear()
-            for name, th in self._thresholds.items():
-                window = RollingWindow(self.window_size)
-                self._windows[name] = window
-                th.window = window
+            for th in self._thresholds.values():
                 th.breached = False
                 th.breaches = 0
 

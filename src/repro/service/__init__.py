@@ -8,16 +8,27 @@ Three layers, composable or standalone:
                          vectorized passes: one (K, n) label matrix
   * ``ClusterService`` — slot-batched request loop (build / cluster /
                          sweep / stats), coalescing same-index requests
+  * ``ServiceFrontend`` — concurrent intake: ``submit(op) -> Future``,
+                         bounded queue + admission control, windowed
+                         dispatcher coalescing per-index mutations into
+                         batched deltas, graceful drain/shutdown
 """
 from repro.service.store import IndexKey, IndexStore
 from repro.service.planner import Setting, SweepPlanner
 from repro.service.engine import (BuildRequest, ClusterRequest,
                                   ClusterService, ServiceRequest,
                                   StatsRequest, SweepRequest)
+from repro.service.frontend import (AdmissionError, BuildOp, BuildResult,
+                                    ClusterOp, MutateRequest, MutateResult,
+                                    ServiceFrontend, StatsOp, SweepOp,
+                                    SweepResult)
 
 __all__ = [
     "IndexKey", "IndexStore",
     "Setting", "SweepPlanner",
     "BuildRequest", "ClusterRequest", "ClusterService", "ServiceRequest",
     "StatsRequest", "SweepRequest",
+    "AdmissionError", "BuildOp", "BuildResult", "ClusterOp",
+    "MutateRequest", "MutateResult", "ServiceFrontend", "StatsOp",
+    "SweepOp", "SweepResult",
 ]

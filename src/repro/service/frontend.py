@@ -1,0 +1,690 @@
+"""``ServiceFrontend`` — concurrent intake for the clustering service.
+
+The synchronous ``ClusterService.run`` loop answers a list of requests;
+this module is what absorbs *traffic*: N client threads call
+``submit(request)`` and get a ``concurrent.futures.Future`` back, a
+bounded intake queue applies admission control (reject-with-backpressure
+beyond ``max_queue``, per-index in-flight caps), and one dispatcher
+thread drains the queue in windows, handing each index's window to a
+worker pool.
+
+Requests address indexes by **logical name**, not by dataset: mutations
+change the dataset fingerprint, so data-addressed lookups would detach
+from a mutated index mid-stream.  A ``BuildOp`` binds a name to the
+index the ``IndexStore`` resolves for its (data, ε, MinPts) — builds
+still dedupe store-wide by fingerprint — and every later op routes
+through the name.
+
+Window semantics (the coalescing contract):
+
+  * Per window and per index, ops apply **builds → mutations → reads**;
+    across windows, submission order.  The frontend serializes windows
+    per index (a name is never in two workers at once), so per-name
+    submission order is a total order over windows.
+  * Adjacent same-op ``MutateRequest`` runs coalesce into ONE facade
+    delta — K single-point inserts become one K-row batched splice (one
+    strip sweep, one CSR splice, one component re-sweep), the win
+    ``benchmarks/service_bench.py`` measures.  Delete ids are
+    interpreted against the index state after the preceding coalesced
+    batches of the same window, exactly as sequential application would.
+  * All reads of a window run after its mutations as ONE
+    ``SweepPlanner`` batch, and every response carries the index's
+    monotone ``version`` — a client that saw its mutation acknowledged
+    at version v never reads an older state afterwards.
+
+Responses are byte-identical to replaying the *effective* per-index op
+sequence through a bare facade sequentially (``record_ops=True`` records
+that sequence for tests — ``tests/test_frontend.py`` pins the identity
+across metrics under randomized 4-thread interleavings).
+
+Lifecycle: ``shutdown(drain=True, timeout=...)`` refuses new submits,
+flushes in-flight windows up to the drain deadline, then fails whatever
+is still queued with ``AdmissionError``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.metrics import MetricLike
+from repro.service.planner import Setting, SweepPlanner
+from repro.service.store import IndexKey, IndexStore
+
+
+class AdmissionError(RuntimeError):
+    """Backpressure signal: the intake queue (or a per-index in-flight
+    cap) is full, or the frontend is draining.  Clients retry later or
+    shed load — the request was never enqueued."""
+
+
+# ------------------------------------------------------------- requests
+@dataclass
+class BuildOp:
+    """Bind ``index`` (a logical name) to the store's index for
+    (data, ε, MinPts) — building it if it is neither resident nor
+    spilled."""
+    index: str
+    data: Any
+    eps: float
+    minpts: int
+    metric: MetricLike = "euclidean"
+    weights: Optional[np.ndarray] = None
+
+
+@dataclass
+class ClusterOp:
+    """One labeling of ``index``: the generating pair, or one
+    ("eps"|"minpts", value) setting."""
+    index: str
+    setting: Optional[Setting] = None
+
+
+@dataclass
+class SweepOp:
+    """K settings against ``index``, answered as one (K, n) matrix."""
+    index: str
+    settings: Sequence[Setting] = field(default_factory=list)
+
+
+@dataclass
+class MutateRequest:
+    """Insert (``points``) or delete (``ids``) against ``index``.
+
+    ``points`` must be batch-shaped for the index's metric (an (m, d)
+    array for vector metrics; a packed-sets tuple for jaccard).  The
+    dispatcher coalesces adjacent same-op mutations of one window into
+    a single batched facade delta; riders of a coalesced batch share
+    its report and post-mutation ``version``.
+    """
+    index: str
+    op: str                                   # "insert" | "delete"
+    points: Any = None
+    ids: Optional[np.ndarray] = None
+    weights: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.op not in ("insert", "delete"):
+            raise ValueError(f"MutateRequest.op must be 'insert' or "
+                             f"'delete', got {self.op!r}")
+        if self.op == "insert" and self.points is None:
+            raise ValueError("insert MutateRequest needs points")
+        if self.op == "delete" and self.ids is None:
+            raise ValueError("delete MutateRequest needs ids")
+
+
+@dataclass
+class StatsOp:
+    """The Stats verb: resolves to the frontend's full stats dict."""
+
+
+# ------------------------------------------------------------ responses
+@dataclass
+class BuildResult:
+    index: str
+    outcome: str                              # "hit" | "reload" | "build"
+    key: IndexKey
+    version: int
+    n: int
+
+
+@dataclass
+class SweepResult:
+    index: str
+    labels: np.ndarray            # (n,) for ClusterOp, (K, n) for SweepOp
+    version: int
+
+
+@dataclass
+class MutateResult:
+    index: str
+    op: str
+    count: int                    # this request's own rows/ids
+    version: int                  # post-batch (shared by riders)
+    riders: int                   # requests coalesced into the batch
+    report: dict                  # the facade's delta report (shared)
+
+
+class _Item:
+    __slots__ = ("req", "future", "name", "seq", "t_submit")
+
+    def __init__(self, req, future, name, seq):
+        self.req = req
+        self.future = future
+        self.name = name
+        self.seq = seq
+        self.t_submit = time.perf_counter()
+
+
+class _Entry:
+    """One logical index binding: the facade object + its current store
+    key (refreshed by ``rekey`` after every mutated window)."""
+    __slots__ = ("index", "key")
+
+    def __init__(self, index, key):
+        self.index = index
+        self.key = key
+
+
+def _concat_points(parts: List[Any]) -> Any:
+    if len(parts) == 1:
+        return parts[0]
+    if isinstance(parts[0], tuple):
+        # multi-array canonical form (e.g. jaccard's (bits, sizes)):
+        # concatenate componentwise along the object axis
+        return tuple(np.concatenate([p[i] for p in parts], axis=0)
+                     for i in range(len(parts[0])))
+    return np.concatenate([np.asarray(p) for p in parts], axis=0)
+
+
+def _rows_of(points: Any) -> int:
+    if isinstance(points, tuple):
+        return int(points[0].shape[0])
+    return int(np.asarray(points).shape[0])
+
+
+_DEFAULT_THRESHOLDS = {
+    # latched ObsWarnings when the p95 of these drifts past the limit —
+    # conservative defaults, override via the ``thresholds`` ctor arg
+    "span.frontend.window": 5.0,
+    "span.frontend.sweep": 5.0,
+    "frontend.e2e_s": 10.0,
+}
+
+
+class ServiceFrontend:
+    """Concurrent serving front-end over an ``IndexStore``.
+
+    ``submit(op) -> Future``; see the module docstring for the window
+    semantics.  ``workers`` sizes the group pool, ``window`` bounds how
+    many queued ops one dispatch round may take, ``max_queue`` bounds
+    the intake queue (admission control), ``max_inflight`` optionally
+    caps unfinished ops per index name.  ``slack`` configures
+    ``FinexIndex.enable_slack`` on every index the frontend binds (0 or
+    None keeps packed splices).  ``record_ops=True`` keeps a per-name
+    oplog of the effective (coalesced) operations for sequential-replay
+    verification.
+    """
+
+    def __init__(self, store: Optional[IndexStore] = None, *,
+                 workers: int = 2, window: int = 16, max_queue: int = 256,
+                 max_inflight: Optional[int] = None,
+                 slack: Optional[float] = 1.5,
+                 capacity: int = 8, manager=None,
+                 record_ops: bool = False,
+                 thresholds: Optional[Dict[str, float]] = None,
+                 autostart: bool = True):
+        self.store = store if store is not None else IndexStore(
+            capacity=capacity, manager=manager)
+        self.workers = max(1, int(workers))
+        self.window = max(1, int(window))
+        self.max_queue = int(max_queue)
+        self.max_inflight = (None if max_inflight is None
+                             else int(max_inflight))
+        self._slack = ({"slack": float(slack)}
+                       if slack is not None and slack > 1.0 else None)
+        self._cv = threading.Condition()
+        self._queue: Deque[_Item] = deque()
+        self._deferred: Deque[_Item] = deque()   # held back: name was busy
+        self._busy: Set[str] = set()             # names inside a worker
+        self._inflight: Dict[str, int] = {}      # name -> unfinished ops
+        self._entries: Dict[str, _Entry] = {}
+        self._seq = 0
+        self._paused = False
+        self._closed = False
+        self._stop = False
+        # ---- counters (mutated under self._cv) ----
+        self.submitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.failed = 0
+        self.windows = 0
+        self.batched_deltas = 0        # coalesced facade mutations applied
+        self.coalesced_mutations = 0   # mutate ops that RODE a shared delta
+        self.batched_sweeps = 0
+        self.settings_answered = 0
+        self.oplog: Optional[Dict[str, list]] = {} if record_ops else None
+        for nm, limit in (thresholds if thresholds is not None
+                          else _DEFAULT_THRESHOLDS).items():
+            obs.set_threshold(nm, limit, "p95")
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.workers, thread_name_prefix="finex-frontend")
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="finex-frontend-dispatch",
+            daemon=True)
+        if autostart:
+            self._dispatcher.start()
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req) -> Future:
+        """Enqueue one op; raises ``AdmissionError`` instead of queueing
+        unboundedly (backpressure is the client's signal to retry)."""
+        name = getattr(req, "index", None)
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                self.rejected += 1
+                if obs.enabled():
+                    obs.count("frontend.rejected")
+                raise AdmissionError(
+                    "frontend is draining — no new submissions")
+            if len(self._queue) + len(self._deferred) >= self.max_queue:
+                self.rejected += 1
+                if obs.enabled():
+                    obs.count("frontend.rejected")
+                    obs.count("frontend.rejected_queue_full")
+                raise AdmissionError(
+                    f"intake queue full ({self.max_queue} pending) — "
+                    "retry with backoff")
+            if (name is not None and self.max_inflight is not None
+                    and self._inflight.get(name, 0) >= self.max_inflight):
+                self.rejected += 1
+                if obs.enabled():
+                    obs.count("frontend.rejected")
+                    obs.count("frontend.rejected_inflight")
+                raise AdmissionError(
+                    f"index {name!r} already has "
+                    f"{self._inflight[name]} ops in flight "
+                    f"(cap {self.max_inflight})")
+            self._seq += 1
+            item = _Item(req, fut, name, self._seq)
+            self._queue.append(item)
+            if name is not None:
+                self._inflight[name] = self._inflight.get(name, 0) + 1
+            self.submitted += 1
+            depth = len(self._queue) + len(self._deferred)
+            if obs.enabled():
+                obs.count("frontend.submitted")
+                obs.gauge("frontend.queue_depth", depth)
+                obs.observe("frontend.queue_depth", depth)
+            self._cv.notify_all()
+        return fut
+
+    # -------------------------------------------------------- dispatcher
+    def start(self) -> None:
+        """Start the dispatcher (no-op if ``autostart`` already did)."""
+        if not self._dispatcher.is_alive():
+            self._dispatcher.start()
+
+    def pause(self) -> None:
+        """Hold dispatching (submissions still enqueue) — lets tests and
+        benchmarks stage a full window deterministically."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
+    def _take_window_locked(self) -> List[_Item]:
+        if self._paused:
+            return []
+        batch: List[_Item] = []
+        skipped: List[_Item] = []
+        blocked = set(self._busy)
+        pending = list(self._deferred) + list(self._queue)
+        self._deferred.clear()
+        self._queue.clear()
+        for it in pending:
+            if (len(batch) >= self.window
+                    or (it.name is not None and it.name in blocked)):
+                skipped.append(it)
+                if it.name is not None:
+                    # later ops for a skipped name must skip too —
+                    # per-name submission order is the contract
+                    blocked.add(it.name)
+                continue
+            batch.append(it)
+        self._deferred.extend(skipped)
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                batch = self._take_window_locked()
+                while not batch:
+                    if self._stop:
+                        return
+                    self._cv.wait(0.1)
+                    batch = self._take_window_locked()
+                for it in batch:
+                    if it.name is not None:
+                        self._busy.add(it.name)
+                self.windows += 1
+                if obs.enabled():
+                    obs.observe("frontend.window_size", len(batch))
+            groups: Dict[str, List[_Item]] = {}
+            stats_items: List[_Item] = []
+            for it in batch:
+                if it.name is None:
+                    stats_items.append(it)
+                else:
+                    groups.setdefault(it.name, []).append(it)
+            for name, items in groups.items():
+                self._pool.submit(self._serve_group, name, items)
+            for it in stats_items:
+                # the Stats verb is cheap and lock-bounded: serve inline
+                try:
+                    self._resolve(it, self.stats())
+                except BaseException as e:       # pragma: no cover
+                    self._fail(it, e)
+
+    # ------------------------------------------------------ group serving
+    def _serve_group(self, name: str, items: List[_Item]) -> None:
+        err: Optional[BaseException] = None
+        try:
+            with obs.span("frontend.window", index=name, size=len(items)):
+                self._serve_group_impl(name, items)
+        except BaseException as e:               # defensive: a bug here
+            err = e                              # must not hang futures
+        finally:
+            for it in items:
+                if not it.future.done():
+                    self._fail(it, err if err is not None else
+                               RuntimeError("request left unserved"))
+            with self._cv:
+                self._busy.discard(name)
+                for it in items:
+                    left = self._inflight.get(it.name, 0) - 1
+                    if left > 0:
+                        self._inflight[it.name] = left
+                    else:
+                        self._inflight.pop(it.name, None)
+                self._cv.notify_all()
+
+    def _serve_group_impl(self, name: str, items: List[_Item]) -> None:
+        builds = [it for it in items if isinstance(it.req, BuildOp)]
+        mutates = [it for it in items if isinstance(it.req, MutateRequest)]
+        reads = [it for it in items
+                 if isinstance(it.req, (SweepOp, ClusterOp))]
+        for it in items:
+            if not isinstance(it.req, (BuildOp, MutateRequest, SweepOp,
+                                       ClusterOp)):
+                self._fail(it, TypeError(
+                    f"unsupported frontend request {type(it.req).__name__}"))
+        entry = self._entries.get(name)
+        for it in builds:
+            entry = self._serve_build(name, it) or entry
+        if mutates:
+            entry = self._serve_mutations(name, entry, mutates)
+        if reads:
+            self._serve_reads(name, entry, reads)
+
+    def _serve_build(self, name: str, it: _Item) -> Optional[_Entry]:
+        r = it.req
+        try:
+            index, outcome = self.store.get_or_build(
+                r.data, r.eps, r.minpts, metric=r.metric,
+                weights=r.weights)
+            if (self._slack is not None and index.engine is not None
+                    and not index.slack_enabled):
+                index.enable_slack(**self._slack)
+            entry = _Entry(index, IndexKey.of_index(index))
+        except BaseException as e:
+            self._fail(it, e)
+            return None
+        self._entries[name] = entry
+        if self.oplog is not None:
+            self.oplog.setdefault(name, []).append(("build", r))
+        self._resolve(it, BuildResult(
+            index=name, outcome=outcome, key=entry.key,
+            version=index.version, n=index.n))
+        return entry
+
+    def _serve_mutations(self, name: str, entry: Optional[_Entry],
+                         mutates: List[_Item]) -> Optional[_Entry]:
+        if entry is None:
+            for it in mutates:
+                self._fail(it, ValueError(
+                    f"unknown index {name!r} — submit a BuildOp first"))
+            return None
+        # maximal adjacent same-op runs, in submission order
+        runs: List[Tuple[str, List[_Item]]] = []
+        for it in mutates:
+            if runs and runs[-1][0] == it.req.op:
+                runs[-1][1].append(it)
+            else:
+                runs.append((it.req.op, [it]))
+        mutated = False
+        for op, riders in runs:
+            with obs.span("frontend.mutate", index=name, op=op,
+                          riders=len(riders)):
+                ok = (self._apply_insert_run(name, entry, riders)
+                      if op == "insert"
+                      else self._apply_delete_run(name, entry, riders))
+            mutated = mutated or ok
+        if mutated:
+            # the mutation changed the dataset fingerprint: re-admit the
+            # index under its post-mutation identity so store lookups
+            # (and spills) stay exact
+            entry.key = self.store.rekey(entry.index)
+        return entry
+
+    def _apply_insert_run(self, name, entry, riders) -> bool:
+        parts = [it.req.points for it in riders]
+        counts = [_rows_of(p) for p in parts]
+        points = _concat_points(parts)
+        wparts = [it.req.weights for it in riders]
+        if any(w is not None for w in wparts):
+            weights = np.concatenate([
+                np.asarray(w, dtype=np.int64) if w is not None
+                else np.ones(c, dtype=np.int64)
+                for w, c in zip(wparts, counts)])
+        else:
+            weights = None
+        try:
+            report = entry.index.insert(points, weights=weights)
+        except BaseException as e:
+            for it in riders:
+                self._fail(it, e)
+            return False
+        with self._cv:
+            self.batched_deltas += 1
+            self.coalesced_mutations += len(riders) - 1
+        if obs.enabled() and len(riders) > 1:
+            obs.count("frontend.coalesced_mutations", len(riders) - 1)
+        if self.oplog is not None:
+            self.oplog.setdefault(name, []).append(
+                ("insert", points, weights, [it.req for it in riders]))
+        for it, c in zip(riders, counts):
+            self._resolve(it, MutateResult(
+                index=name, op="insert", count=c,
+                version=report["version"], riders=len(riders),
+                report=dict(report)))
+        return True
+
+    def _apply_delete_run(self, name, entry, riders) -> bool:
+        id_parts = [np.asarray(it.req.ids, dtype=np.int64).ravel()
+                    for it in riders]
+        ids = np.unique(np.concatenate(id_parts))
+        try:
+            report = entry.index.delete(ids)
+        except BaseException as e:
+            for it in riders:
+                self._fail(it, e)
+            return False
+        with self._cv:
+            self.batched_deltas += 1
+            self.coalesced_mutations += len(riders) - 1
+        if obs.enabled() and len(riders) > 1:
+            obs.count("frontend.coalesced_mutations", len(riders) - 1)
+        if self.oplog is not None:
+            self.oplog.setdefault(name, []).append(
+                ("delete", ids, None, [it.req for it in riders]))
+        for it, part in zip(riders, id_parts):
+            self._resolve(it, MutateResult(
+                index=name, op="delete", count=int(part.size),
+                version=report["version"], riders=len(riders),
+                report=dict(report)))
+        return True
+
+    def _serve_reads(self, name: str, entry: Optional[_Entry],
+                     reads: List[_Item]) -> None:
+        if entry is None:
+            for it in reads:
+                self._fail(it, ValueError(
+                    f"unknown index {name!r} — submit a BuildOp first"))
+            return
+        index = entry.index
+        settings: List[Setting] = []
+        spans: List[Tuple[_Item, int, int]] = []
+        for it in reads:
+            reqs = self._settings_of(index, it.req)
+            spans.append((it, len(settings), len(settings) + len(reqs)))
+            settings.extend(reqs)
+        version = index.version
+        try:
+            with obs.span("frontend.sweep", index=name,
+                          settings=len(settings)):
+                labels = SweepPlanner(index).sweep(settings)
+        except BaseException:
+            # one invalid setting poisons the whole batch: re-serve each
+            # request alone so the bad one fails and the rest answer
+            for it, lo, hi in spans:
+                sub = settings[lo:hi]
+                try:
+                    lab = SweepPlanner(index).sweep(sub)
+                except BaseException as e:
+                    self._fail(it, e)
+                    continue
+                if self.oplog is not None:
+                    self.oplog.setdefault(name, []).append(
+                        ("sweep", sub, [(it.req, 0, len(sub))]))
+                self._finish_read(name, it, lab, 0, len(sub), version)
+            return
+        with self._cv:
+            self.batched_sweeps += 1
+            self.settings_answered += len(settings)
+        if self.oplog is not None:
+            self.oplog.setdefault(name, []).append(
+                ("sweep", list(settings),
+                 [(it.req, lo, hi) for it, lo, hi in spans]))
+        for it, lo, hi in spans:
+            self._finish_read(name, it, labels, lo, hi, version)
+
+    def _finish_read(self, name, it, labels, lo, hi, version) -> None:
+        # .copy(): results must not pin the whole window matrix
+        out = (labels[lo].copy() if isinstance(it.req, ClusterOp)
+               else labels[lo:hi].copy())
+        self._resolve(it, SweepResult(index=name, labels=out,
+                                      version=version))
+
+    @staticmethod
+    def _settings_of(index, req) -> List[Setting]:
+        if isinstance(req, SweepOp):
+            return list(req.settings)
+        # a generating-pair ClusterOp is the degenerate MinPts*-query
+        # MinPts* = MinPts, so it coalesces like everything else
+        return [req.setting if req.setting is not None
+                else ("minpts", index.minpts)]
+
+    # -------------------------------------------------------- resolution
+    def _resolve(self, it: _Item, result) -> None:
+        it.future.set_result(result)
+        with self._cv:
+            self.completed += 1
+        if obs.enabled():
+            obs.count("frontend.completed")
+            obs.observe("frontend.e2e_s",
+                        time.perf_counter() - it.t_submit)
+
+    def _fail(self, it: _Item, exc: BaseException) -> None:
+        if it.future.done():
+            return
+        it.future.set_exception(exc)
+        with self._cv:
+            self.failed += 1
+        if obs.enabled():
+            obs.count("frontend.failed")
+
+    # --------------------------------------------------------- lifecycle
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until nothing is queued, deferred, busy or in flight.
+        Returns False if ``timeout`` elapsed first."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with self._cv:
+            while (self._queue or self._deferred or self._busy
+                   or self._inflight):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(remaining if remaining is not None else 0.2)
+            return True
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> bool:
+        """Graceful stop: refuse new submits, flush in-flight windows
+        (up to the drain deadline), fail whatever is left with
+        ``AdmissionError``, stop the dispatcher and the pool.  Returns
+        True iff every accepted request was served (nothing was failed
+        unserved)."""
+        with self._cv:
+            self._closed = True
+            self._paused = False            # a paused frontend must flush
+            self._cv.notify_all()
+        drained = self.drain(timeout) if drain else False
+        with self._cv:
+            self._stop = True
+            leftovers = list(self._deferred) + list(self._queue)
+            self._deferred.clear()
+            self._queue.clear()
+            self._cv.notify_all()
+        for it in leftovers:
+            self._fail(it, AdmissionError(
+                "frontend shut down before serving this request"))
+        if self._dispatcher.is_alive():
+            self._dispatcher.join(timeout=5.0)
+        self._pool.shutdown(wait=True)
+        if obs.enabled():
+            obs.count("frontend.shutdowns")
+        return (drained if drain else not leftovers)
+
+    def __enter__(self) -> "ServiceFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=True)
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        """The Stats verb payload: frontend counters + per-index
+        bindings + store + the process obs snapshot (whose windows carry
+        ``frontend.queue_depth`` / ``frontend.e2e_s`` p95s)."""
+        with self._cv:
+            front = {
+                "workers": self.workers,
+                "window": self.window,
+                "max_queue": self.max_queue,
+                "submitted": self.submitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "failed": self.failed,
+                "windows": self.windows,
+                "batched_deltas": self.batched_deltas,
+                "coalesced_mutations": self.coalesced_mutations,
+                "batched_sweeps": self.batched_sweeps,
+                "settings_answered": self.settings_answered,
+                "queue_depth": len(self._queue) + len(self._deferred),
+                "inflight": dict(self._inflight),
+                "busy": len(self._busy),
+            }
+            entries = dict(self._entries)
+        return {
+            "frontend": front,
+            "indexes": {
+                nm: {"version": e.index.version, "n": e.index.n,
+                     "eps": e.index.eps, "minpts": e.index.minpts,
+                     "slack": e.index.slack_stats()}
+                for nm, e in entries.items()},
+            "store": self.store.stats(),
+            "telemetry": obs.snapshot(),
+        }

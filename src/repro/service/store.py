@@ -22,6 +22,7 @@ still work); use ``get_or_build`` with the dataset to re-attach.
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -68,7 +69,22 @@ class IndexKey:
 class IndexStore:
     """LRU-bounded index registry with disk spill through a checkpoint
     manager. ``capacity`` counts resident indexes; pass ``manager=None``
-    to drop evicted indexes instead of spilling them."""
+    to drop evicted indexes instead of spilling them.
+
+    Thread-safe: every structural operation holds one RLock, and
+    ``get_or_build`` is single-flight per key — concurrent requests for
+    the same missing key elect one builder (the rest wait and return the
+    built index as a "hit"), so a key is never double-built and a
+    mid-construction index is never visible.
+
+    Durable: with a manager attached, the spill map is mirrored to an
+    atomically-published JSON catalog (``<manager.dir>/INDEX_CATALOG
+    .json``) on every change and reloaded on construction — a new store
+    (or process) answers previously-spilled keys as ``"reload"`` instead
+    of rebuilding. ``forget`` removes entries decrementally (catalog and
+    step artifacts included)."""
+
+    CATALOG = "INDEX_CATALOG"
 
     def __init__(self, capacity: int = 4, manager=None):
         if capacity < 1:
@@ -83,39 +99,51 @@ class IndexStore:
         # this path); one entry per metric per array, each dying with the
         # array through its own weakref finalizer
         self._fp_cache: Dict[int, tuple] = {}
+        self._lock = threading.RLock()
+        # single-flight gates: key -> Event held by the elected builder
+        self._building: Dict[IndexKey, threading.Event] = {}
         self.hits = 0
         self.reloads = 0
         self.builds = 0
         self.spills = 0
         self.drops = 0
+        self.stale_drops = 0       # refused-stale-spill subset of drops
         self.rekeys = 0
+        self.build_waits = 0       # threads that waited on another's build
+        if manager is not None:
+            self._load_catalog()
 
     # ------------------------------------------------------------ lookup
     def __len__(self) -> int:
-        return len(self._resident)
+        with self._lock:
+            return len(self._resident)
 
     def __contains__(self, key: IndexKey) -> bool:
-        return key in self._resident or key in self._spilled
+        with self._lock:
+            return key in self._resident or key in self._spilled
 
     def get(self, key: IndexKey) -> Optional[FinexIndex]:
         """Resident index for ``key``, reloading from spill if needed.
         Reloads are engine-less here (the store retains no datasets) —
         use :meth:`get_or_build` with the dataset to re-attach."""
-        idx = self._resident.get(key)
-        if idx is not None:
-            self._resident.move_to_end(key)
-            self.hits += 1
-            return idx
-        if key in self._spilled:
-            return self._reload(key, data=None)
-        return None
+        with self._lock:
+            idx = self._resident.get(key)
+            if idx is not None:
+                self._resident.move_to_end(key)
+                self.hits += 1
+                return idx
+            step = self._spilled.get(key)
+        if step is None:
+            return None
+        return self._reload(key, step, data=None)
 
-    def _reload(self, key: IndexKey, data) -> FinexIndex:
+    def _reload(self, key: IndexKey, step: int, data) -> FinexIndex:
+        # npz IO runs outside the lock; admission re-takes it
         with obs.span("store.reload", eps=key.eps, minpts=key.minpts):
-            idx = self.manager.restore_index(self._spilled[key],
-                                             data=data)
-        self.reloads += 1
-        self._admit(key, idx)
+            idx = self.manager.restore_index(step, data=data)
+        with self._lock:
+            self.reloads += 1
+            self._admit(key, idx)
         return idx
 
     def get_or_build(self, data, eps: float, minpts: int, *,
@@ -146,25 +174,47 @@ class IndexStore:
         # untraced body of :meth:`get_or_build`
         key = IndexKey(self._fingerprint_of(data, metric, weights),
                        float(np.float32(eps)), int(minpts))
-        idx = self._resident.get(key)
-        if idx is not None:
-            self._resident.move_to_end(key)
-            self.hits += 1
-            return idx, "hit"
-        if key in self._spilled:
-            # the caller's dataset re-attaches the engine; the key proves
-            # it is the dataset the spilled index was built over
-            return self._reload(key, data=data), "reload"
-        idx = FinexIndex.build(data, eps=eps, minpts=minpts, metric=metric,
-                               weights=weights, **build_kw)
-        self.builds += 1
-        self._admit(key, idx)
-        return idx, "build"
+        while True:
+            with self._lock:
+                idx = self._resident.get(key)
+                if idx is not None:
+                    self._resident.move_to_end(key)
+                    self.hits += 1
+                    return idx, "hit"
+                gate = self._building.get(key)
+                if gate is None:
+                    # this thread is the elected builder for the key
+                    self._building[key] = gate = threading.Event()
+                    step = self._spilled.get(key)
+                    break
+                self.build_waits += 1
+            # another thread holds the gate: wait for its admission,
+            # then loop — normally the key is now resident ("hit"); if
+            # eviction pressure already pushed it back out (or the build
+            # failed), this thread becomes the next builder
+            gate.wait()
+        try:
+            if step is not None:
+                # the caller's dataset re-attaches the engine; the key
+                # proves it is the dataset the spilled index was built over
+                return self._reload(key, step, data=data), "reload"
+            idx = FinexIndex.build(data, eps=eps, minpts=minpts,
+                                   metric=metric, weights=weights,
+                                   **build_kw)
+            with self._lock:
+                self.builds += 1
+                self._admit(key, idx)
+            return idx, "build"
+        finally:
+            with self._lock:
+                self._building.pop(key, None)
+            gate.set()
 
     def put(self, index: FinexIndex) -> IndexKey:
         """Register an externally built index (keyed by its fingerprint)."""
         key = IndexKey.of_index(index)
-        self._admit(key, index)
+        with self._lock:
+            self._admit(key, index)
         return key
 
     def rekey(self, index: FinexIndex) -> IndexKey:
@@ -181,13 +231,27 @@ class IndexStore:
         re-read the ordering per sweep, so a re-keyed index keeps
         answering exactly. Returns the new key.
         """
-        stale = [k for k, v in self._resident.items() if v is index]
-        for k in stale:
-            del self._resident[k]
         key = IndexKey.of_index(index)
-        self.rekeys += 1
-        self._admit(key, index)
+        with self._lock:
+            stale = [k for k, v in self._resident.items() if v is index]
+            for k in stale:
+                del self._resident[k]
+            self.rekeys += 1
+            self._admit(key, index)
         return key
+
+    def forget(self, key: IndexKey, *, delete_spill: bool = True) -> bool:
+        """Decrementally drop ``key``: resident entry, spill-catalog
+        entry and (by default) the spilled step artifacts themselves.
+        Returns True if the key was known in either tier."""
+        with self._lock:
+            was_resident = self._resident.pop(key, None) is not None
+            step = self._spilled.pop(key, None)
+            if step is not None and self.manager is not None:
+                if delete_spill:
+                    self.manager.delete_step(step)
+                self._save_catalog()
+        return was_resident or step is not None
 
     def _fingerprint_of(self, data, metric: MetricLike, weights) -> str:
         """``dataset_fingerprint``, memoized by (array identity, metric)
@@ -201,16 +265,18 @@ class IndexStore:
         if weights is not None or isinstance(data, tuple):
             return dataset_fingerprint(data, metric, weights=weights)
         key = (id(data), get_metric(metric).spec)
-        ent = self._fp_cache.get(key)
-        if ent is not None and ent[0]() is data:
-            return ent[1]
-        fp = dataset_fingerprint(data, metric)
-        try:
-            self._fp_cache[key] = (weakref.ref(
-                data, lambda _, k=key: self._fp_cache.pop(k, None)),
-                fp)
-        except TypeError:      # not weakref-able: recompute next time
-            pass
+        with self._lock:
+            ent = self._fp_cache.get(key)
+            if ent is not None and ent[0]() is data:
+                return ent[1]
+        fp = dataset_fingerprint(data, metric)      # hash outside the lock
+        with self._lock:
+            try:
+                self._fp_cache[key] = (weakref.ref(
+                    data, lambda _, k=key: self._fp_cache.pop(k, None)),
+                    fp)
+            except TypeError:  # not weakref-able: recompute next time
+                pass
         return fp
 
     # ---------------------------------------------------------- eviction
@@ -222,10 +288,9 @@ class IndexStore:
             self._evict(victim_key, victim)
 
     def _evict(self, key: IndexKey, index: FinexIndex) -> None:
+        # caller holds the lock (only _admit evicts)
         if self.manager is None:
-            self.drops += 1
-            if obs.enabled():
-                obs.count("store.drops")
+            self._count_drop("capacity")
             return
         fp = index.fingerprint()
         if fp is not None and IndexKey.of_index(index) != key:
@@ -235,9 +300,7 @@ class IndexStore:
             # (the reload's fingerprint check would fail forever instead
             # of rebuilding) — drop it; the caller still holds the object
             # and can rekey() it back in
-            self.drops += 1
-            if obs.enabled():
-                obs.count("store.drops")
+            self._count_drop("stale")
             return
         if key not in self._spilled:
             # allocate the step from the manager's live listing: the step
@@ -251,18 +314,68 @@ class IndexStore:
             self.spills += 1
             if obs.enabled():
                 obs.count("store.spills")
+            self._save_catalog()
         # else: an identical snapshot is already durable — nothing to write
+
+    def _count_drop(self, kind: str) -> None:
+        """Every drop increments ``drops``; a refused stale spill ALSO
+        increments ``stale_drops`` — it is an operator-actionable signal
+        (someone mutated a stored index without ``rekey``-ing it), so it
+        surfaces distinctly in obs counters and the Stats verb instead
+        of hiding inside the capacity-drop tally."""
+        self.drops += 1
+        if kind == "stale":
+            self.stale_drops += 1
+        if obs.enabled():
+            obs.count("store.drops")
+            if kind == "stale":
+                obs.count("store.stale_drops")
+
+    # ------------------------------------------------------ spill catalog
+    def _load_catalog(self) -> None:
+        """Rehydrate the spill map from the manager's catalog document.
+        Entries whose step artifacts are gone (or are not index
+        snapshots) are skipped — the catalog is a cache of durable
+        state, never an authority over it."""
+        payload = self.manager.load_catalog(self.CATALOG)
+        if not payload:
+            return
+        for ent in payload.get("entries", ()):
+            try:
+                key = IndexKey(str(ent["fingerprint"]), float(ent["eps"]),
+                               int(ent["minpts"]))
+                step = int(ent["step"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            if self.manager._step_kind(step) == "finex_index":
+                self._spilled[key] = step
+
+    def _save_catalog(self) -> None:
+        # caller holds the lock
+        if self.manager is None:
+            return
+        self.manager.save_catalog(self.CATALOG, {
+            "version": 1,
+            "entries": [
+                {"fingerprint": k.fingerprint, "eps": k.eps,
+                 "minpts": k.minpts, "step": step}
+                for k, step in self._spilled.items()],
+        })
 
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
-        return {
-            "capacity": self.capacity,
-            "resident": len(self._resident),
-            "spilled": len(self._spilled),
-            "hits": self.hits,
-            "reloads": self.reloads,
-            "builds": self.builds,
-            "spills": self.spills,
-            "drops": self.drops,
-            "rekeys": self.rekeys,
-        }
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "resident": len(self._resident),
+                "spilled": len(self._spilled),
+                "hits": self.hits,
+                "reloads": self.reloads,
+                "builds": self.builds,
+                "spills": self.spills,
+                "drops": self.drops,
+                "stale_drops": self.stale_drops,
+                "rekeys": self.rekeys,
+                "build_waits": self.build_waits,
+                "catalog": self.manager is not None,
+            }

@@ -1,0 +1,564 @@
+"""Concurrent front-end suite: the ``ServiceFrontend`` contract.
+
+The load-bearing property is **byte-identity under concurrency**: with
+``record_ops=True`` the frontend records the effective (coalesced)
+per-index op sequence, and every response handed to a client thread must
+be byte-identical to replaying that sequence through a bare
+``FinexIndex`` facade sequentially — labels, versions, and the final
+index state (ordering quintuple + CSR) alike, for every registered
+metric.  The rest pins admission control, deterministic mutation
+coalescing, read-after-mutate version ordering, graceful shutdown, the
+``IndexStore`` single-flight/thread-safety guarantees, the durable spill
+catalog, the stale-drop obs counters, and the ``SlackCSR`` splice
+identity.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import FinexIndex
+from repro.core.delta import SlackCSR
+from repro.data.synthetic import gaussian_mixture, heavy_tail_sets
+from repro.metrics import register_metric
+from repro.neighbors.bitset import pack_sets
+from repro.service import (AdmissionError, BuildOp, BuildResult, ClusterOp,
+                           IndexKey, IndexStore, MutateRequest, MutateResult,
+                           ServiceFrontend, StatsOp, SweepOp, SweepPlanner,
+                           SweepResult)
+
+
+def _chebyshev(q, c):
+    return jnp.max(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+
+
+try:
+    register_metric("fe-cheb", _chebyshev)
+except ValueError:
+    pass  # already registered by a previous import of this module
+
+
+def _vectors(n, seed):
+    return gaussian_mixture(n, d=4, k=5, seed=seed), None
+
+
+def _sets(n, seed):
+    sets, w = heavy_tail_sets(n, seed=seed)
+    return pack_sets(sets, universe=512), w
+
+
+CASES = [
+    ("euclidean", _vectors, 0.35, 8),
+    ("jaccard", _sets, 0.4, 8),
+    ("fe-cheb", _vectors, 0.3, 6),
+]
+IDS = [c[0] for c in CASES]
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Tests own the obs singleton: start/end clean so counter asserts
+    and threshold registrations never leak across tests."""
+    obs.configure(sink=None, enabled=False)
+    obs.reset()
+    yield
+    obs.configure(sink=None, enabled=False)
+    obs.reset()
+
+
+def take_rows(data, sel):
+    if isinstance(data, tuple):
+        return tuple(a[sel] for a in data)
+    return data[sel]
+
+
+def n_rows(data):
+    return (data[0] if isinstance(data, tuple) else data).shape[0]
+
+
+def assert_state_identical(got, want, what=""):
+    """Byte-for-byte equality of everything an index serves from."""
+    a, b = got.ordering, want.ordering
+    for f in ("order", "pos", "C", "R", "N", "F"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (what, f)
+    for f in ("indptr", "indices", "dists"):
+        # .csr packs a slack layout back to canonical CSR
+        assert np.array_equal(getattr(got.csr, f),
+                              getattr(want.csr, f)), (what, f)
+    assert np.array_equal(got.weights, want.weights), (what, "weights")
+    assert got.version == want.version, (what, "version")
+    labels_equal = np.array_equal(got.clustering(), want.clustering())
+    assert labels_equal, (what, "clustering")
+
+
+# ----------------------------------------------- byte-identity under load
+def _random_request(name, data, pool_lo, rng, eps, minpts):
+    u = rng.random()
+    if u < 0.22:
+        rows = rng.integers(pool_lo, n_rows(data),
+                            size=int(rng.integers(1, 4)))
+        return MutateRequest(name, "insert", points=take_rows(data, rows))
+    if u < 0.38:
+        return MutateRequest(
+            name, "delete",
+            ids=rng.integers(0, 40, size=int(rng.integers(1, 4))))
+    if u < 0.5:
+        return ClusterOp(name)
+    settings = []
+    for _ in range(int(rng.integers(1, 4))):
+        if rng.random() < 0.5:
+            settings.append(("eps", float(eps * rng.uniform(0.2, 1.0))))
+        else:
+            settings.append(("minpts", int(minpts * rng.integers(1, 4))))
+    return SweepOp(name, settings)
+
+
+def _replay_and_check(case, name, base, weights, oplog, responses):
+    """Replay the effective op sequence sequentially through a bare
+    facade; every concurrent response must match byte-for-byte."""
+    metric, _, eps, minpts = case
+    by_req = {id(req): fut for req, fut in responses}
+    idx = None
+    for entry in oplog:
+        kind = entry[0]
+        if kind == "build":
+            req = entry[1]
+            idx = FinexIndex.build(req.data, eps=req.eps, minpts=req.minpts,
+                                   metric=req.metric, weights=req.weights)
+            fut = by_req.get(id(req))
+            if fut is not None:
+                res = fut.result(timeout=60)
+                assert isinstance(res, BuildResult)
+                assert res.version == idx.version and res.n == idx.n
+        elif kind in ("insert", "delete"):
+            _, payload, w, riders = entry
+            rep = (idx.insert(payload, weights=w) if kind == "insert"
+                   else idx.delete(payload))
+            for r in riders:
+                res = by_req[id(r)].result(timeout=60)
+                assert isinstance(res, MutateResult)
+                assert res.op == kind, "rider in a wrong-op run"
+                assert res.version == rep["version"], "rider version"
+                assert res.riders == len(riders)
+        elif kind == "sweep":
+            _, settings, spans = entry
+            labels = SweepPlanner(idx).sweep(settings)
+            for req, lo, hi in spans:
+                res = by_req[id(req)].result(timeout=60)
+                assert isinstance(res, SweepResult)
+                assert res.version == idx.version, "read version"
+                want = (labels[lo] if isinstance(req, ClusterOp)
+                        else labels[lo:hi])
+                assert np.array_equal(res.labels, want), \
+                    f"{case[0]}: concurrent labels != sequential replay"
+        else:  # pragma: no cover
+            raise AssertionError(f"unknown oplog entry {kind!r}")
+    return idx
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_concurrent_responses_byte_identical_to_sequential_replay(case):
+    """4 client threads, randomized Build/Sweep/Cluster/Mutate
+    interleavings: every response is byte-identical to a sequential
+    replay of the recorded per-index op order, and the final index state
+    matches the replayed facade exactly (slack splices included)."""
+    metric, make, eps, minpts = case
+    data, _ = make(340, seed=3)          # set factories dedupe: n varies
+    pool_lo = n_rows(data) - 40          # tail 40 rows = the insert pool
+    base = take_rows(data, np.arange(n_rows(data)) < pool_lo)
+    name = "idx"
+    fe = ServiceFrontend(store=IndexStore(capacity=4), workers=4, window=8,
+                         max_queue=512, record_ops=True)
+    try:
+        build_req = BuildOp(name, base, eps, minpts, metric=metric)
+        build_fut = fe.submit(build_req)
+        build_fut.result(timeout=120)
+        responses = [(build_req, build_fut)]
+        lock = threading.Lock()
+
+        def client(tid):
+            rng = np.random.default_rng(100 + tid)
+            for _ in range(10):
+                req = _random_request(name, data, pool_lo, rng, eps, minpts)
+                while True:
+                    try:
+                        fut = fe.submit(req)
+                        break
+                    except AdmissionError:
+                        time.sleep(0.002)
+                with lock:
+                    responses.append((req, fut))
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert fe.drain(timeout=120), "frontend failed to drain"
+        served = fe._entries[name].index
+        replayed = _replay_and_check(case, name, base, None,
+                                     fe.oplog[name], responses)
+        assert_state_identical(served, replayed, f"{metric} final state")
+        with pytest.raises(Exception):
+            # every future resolved: none may still be pending
+            next(f for _, f in responses if not f.done())
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+
+
+# -------------------------------------------------- coalescing + ordering
+def test_paused_window_coalesces_mutations_into_one_delta():
+    """K single-point inserts staged behind pause() must apply as ONE
+    batched facade delta; every rider shares the post-batch version."""
+    x = gaussian_mixture(260, d=3, k=3, seed=0)
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=2,
+                         window=16)
+    try:
+        fe.submit(BuildOp("a", x[:250], 0.4, 8)).result(timeout=120)
+        fe.pause()
+        futs = [fe.submit(MutateRequest("a", "insert",
+                                        points=x[250 + i:251 + i]))
+                for i in range(6)]
+        read = fe.submit(SweepOp("a", [("minpts", 16)]))
+        fe.resume()
+        assert fe.drain(timeout=120)
+        results = [f.result(timeout=60) for f in futs]
+        assert fe.batched_deltas == 1, "inserts did not coalesce"
+        assert fe.coalesced_mutations == 5
+        assert all(r.riders == 6 for r in results)
+        assert len({r.version for r in results}) == 1, \
+            "riders of one delta must share its version"
+        # reads are ordered after their window's mutations
+        assert read.result(timeout=60).version == results[0].version
+        fresh = FinexIndex.build(x[:256], eps=0.4, minpts=8)
+        assert np.array_equal(read.result().labels[0],
+                              fresh.minpts_star(16))
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+
+
+def test_read_after_acked_mutation_never_sees_older_version():
+    x = gaussian_mixture(240, d=3, k=3, seed=1)
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=2, window=4)
+    try:
+        fe.submit(BuildOp("a", x[:230], 0.4, 8)).result(timeout=120)
+        acked = 0
+        for i in range(5):
+            mt = fe.submit(MutateRequest("a", "insert",
+                                         points=x[230 + i:231 + i]))
+            acked = mt.result(timeout=60).version
+            rd = fe.submit(ClusterOp("a")).result(timeout=60)
+            assert rd.version >= acked, \
+                "read returned a state older than an acked mutation"
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+
+
+def test_bad_setting_fails_alone_not_its_window():
+    """One invalid setting must not poison the co-batched reads."""
+    x = gaussian_mixture(220, d=3, k=3, seed=2)
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=1,
+                         window=8)
+    try:
+        fe.submit(BuildOp("a", x, 0.4, 8)).result(timeout=120)
+        fe.pause()
+        bad = fe.submit(SweepOp("a", [("eps", 0.8)]))     # ε* > ε
+        good = fe.submit(SweepOp("a", [("minpts", 16)]))
+        fe.resume()
+        assert fe.drain(timeout=120)
+        with pytest.raises(Exception):
+            bad.result(timeout=60)
+        fresh = FinexIndex.build(x, eps=0.4, minpts=8)
+        assert np.array_equal(good.result(timeout=60).labels[0],
+                              fresh.minpts_star(16))
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+
+
+def test_op_against_unknown_index_fails_cleanly():
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=1)
+    try:
+        with pytest.raises(ValueError, match="unknown index"):
+            fe.submit(ClusterOp("nope")).result(timeout=60)
+        with pytest.raises(ValueError, match="unknown index"):
+            fe.submit(MutateRequest("nope", "delete",
+                                    ids=[0])).result(timeout=60)
+    finally:
+        fe.shutdown(drain=True, timeout=60)
+
+
+# -------------------------------------------------------------- admission
+def test_admission_queue_full_and_inflight_cap():
+    obs.enable()
+    x = gaussian_mixture(200, d=3, k=3, seed=0)
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=1,
+                         window=4, max_queue=4, max_inflight=2)
+    try:
+        fe.submit(BuildOp("a", x, 0.4, 8)).result(timeout=120)
+        fe.pause()
+        fe.submit(ClusterOp("a"))
+        fe.submit(ClusterOp("a"))
+        # per-index in-flight cap trips before the queue bound
+        with pytest.raises(AdmissionError, match="in flight"):
+            fe.submit(ClusterOp("a"))
+        fe.submit(StatsOp())
+        fe.submit(StatsOp())
+        with pytest.raises(AdmissionError, match="queue full"):
+            fe.submit(StatsOp())
+        assert fe.rejected == 2
+        counters = obs.snapshot()["counters"]
+        assert counters["frontend.rejected"] == 2
+        assert counters["frontend.rejected_inflight"] == 1
+        assert counters["frontend.rejected_queue_full"] == 1
+        fe.resume()
+        assert fe.drain(timeout=120)
+        st = fe.submit(StatsOp()).result(timeout=60)
+        assert st["frontend"]["rejected"] == 2
+        assert "frontend.queue_depth" in st["telemetry"]["windows"]
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+
+
+def test_graceful_shutdown_refuses_then_fails_leftovers():
+    x = gaussian_mixture(200, d=3, k=3, seed=0)
+    # autostart=False: nothing dispatches, so the leftovers are exact
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=1,
+                         autostart=False)
+    leftovers = [fe.submit(BuildOp("a", x, 0.4, 8)) for _ in range(3)]
+    assert not fe.shutdown(drain=False)
+    for f in leftovers:
+        with pytest.raises(AdmissionError, match="shut down"):
+            f.result(timeout=60)
+    with pytest.raises(AdmissionError, match="draining"):
+        fe.submit(ClusterOp("a"))
+    assert fe.failed == 3 and fe.rejected == 1
+
+
+def test_drained_shutdown_serves_everything_first():
+    x = gaussian_mixture(220, d=3, k=3, seed=1)
+    fe = ServiceFrontend(store=IndexStore(capacity=2), workers=2,
+                         window=4)
+    fe.submit(BuildOp("a", x, 0.4, 8)).result(timeout=120)
+    futs = [fe.submit(ClusterOp("a")) for _ in range(6)]
+    assert fe.shutdown(drain=True, timeout=120)
+    want = FinexIndex.build(x, eps=0.4, minpts=8).clustering()
+    for f in futs:
+        assert np.array_equal(f.result(timeout=60).labels, want)
+    assert fe.failed == 0 and fe.completed == 7
+
+
+# -------------------------------------------- IndexStore: thread safety
+def test_store_single_flight_concurrent_get_or_build():
+    """N threads racing the same cold key must elect ONE builder; the
+    rest wait on its gate and come back with the identical object."""
+    x = gaussian_mixture(700, d=4, k=4, seed=5)
+    store = IndexStore(capacity=4)
+    barrier = threading.Barrier(6)
+    out = []
+    lock = threading.Lock()
+
+    def worker():
+        barrier.wait()
+        idx, outcome = store.get_or_build(x, 0.4, 8)
+        with lock:
+            out.append((idx, outcome))
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = store.stats()
+    assert st["builds"] == 1, "key was double-built under concurrency"
+    assert sorted(o for _, o in out).count("build") == 1
+    assert all(o in ("build", "hit") for _, o in out)
+    assert len({id(i) for i, _ in out}) == 1, "threads got distinct objects"
+    assert st["build_waits"] >= 1
+
+
+def test_store_concurrent_mixed_traffic_stays_consistent(tmp_path):
+    """get_or_build/rekey/evict hammered from 4 threads: no exceptions,
+    capacity respected, and every returned index answers exactly for
+    the dataset it was requested for (no mid-splice state escapes)."""
+    from repro.checkpoint.manager import CheckpointManager
+    datasets = [gaussian_mixture(240, d=3, k=3, seed=s) for s in range(4)]
+    wants = [FinexIndex.build(x, eps=0.4, minpts=8).clustering()
+             for x in datasets]
+    store = IndexStore(capacity=2,
+                       manager=CheckpointManager(str(tmp_path / "c")))
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for _ in range(12):
+                i = int(rng.integers(len(datasets)))
+                idx, _ = store.get_or_build(datasets[i], 0.4, 8)
+                if not np.array_equal(idx.clustering(), wants[i]):
+                    raise AssertionError(f"wrong labels for dataset {i}")
+        except BaseException as e:       # surfaces in the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    st = store.stats()
+    assert st["resident"] <= 2
+    assert st["builds"] + st["reloads"] + st["hits"] == 4 * 12
+
+
+# ----------------------------------------------- durable spill catalog
+def test_catalog_survives_store_restart(tmp_path):
+    """build -> spill -> NEW store over the same manager dir: the spilled
+    key reloads (zero distance computations) instead of rebuilding, and
+    forget() removes it durably."""
+    from repro.checkpoint.manager import CheckpointManager
+    x1 = gaussian_mixture(300, d=3, k=3, seed=1)
+    x2 = gaussian_mixture(250, d=3, k=3, seed=2)
+    mandir = str(tmp_path / "cache")
+    store = IndexStore(capacity=1, manager=CheckpointManager(mandir))
+    i1, _ = store.get_or_build(x1, 0.4, 8)
+    want = i1.clustering()
+    key1 = IndexKey.of_index(i1)
+    store.get_or_build(x2, 0.4, 8)               # spills x1 + catalog write
+    assert store.stats()["spills"] == 1
+
+    # "restart": a fresh store instance over the same directory
+    store2 = IndexStore(capacity=2, manager=CheckpointManager(mandir))
+    assert key1 in store2, "catalog did not rehydrate the spill map"
+    i1b, outcome = store2.get_or_build(x1, 0.4, 8)
+    assert outcome == "reload", "restart lost the spilled index"
+    assert i1b.engine.distance_rows_computed == 0
+    np.testing.assert_array_equal(i1b.clustering(), want)
+
+    # decremental maintenance: forget() drops catalog entry + artifacts
+    assert store2.forget(key1, delete_spill=True)
+    assert not store2.forget(key1)               # idempotent
+    store3 = IndexStore(capacity=2, manager=CheckpointManager(mandir))
+    assert key1 not in store3
+    _, outcome = store3.get_or_build(x1, 0.4, 8)
+    assert outcome == "build"
+
+
+def test_catalog_corruption_degrades_to_rebuild(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    x1 = gaussian_mixture(250, d=3, k=3, seed=1)
+    x2 = gaussian_mixture(200, d=3, k=3, seed=2)
+    mandir = str(tmp_path / "cache")
+    store = IndexStore(capacity=1, manager=CheckpointManager(mandir))
+    store.get_or_build(x1, 0.4, 8)
+    store.get_or_build(x2, 0.4, 8)
+    path = tmp_path / "cache" / f"{IndexStore.CATALOG}.json"
+    assert path.exists()
+    path.write_text("{ not json")
+    with pytest.warns(UserWarning, match="not valid JSON"):
+        store2 = IndexStore(capacity=1,
+                            manager=CheckpointManager(mandir))
+    _, outcome = store2.get_or_build(x1, 0.4, 8)
+    assert outcome == "build"                    # degraded, not poisoned
+
+
+# ------------------------------------------- stale-drop obs (satellite)
+def test_stale_drop_surfaces_distinctly_in_counters_and_stats(tmp_path):
+    """A refused-stale-spill drop (mutated index evicted before rekey)
+    must increment ``stale_drops`` — in store.stats(), the Stats verb,
+    and the ``store.stale_drops`` obs counter — distinctly from plain
+    capacity drops."""
+    from repro.checkpoint.manager import CheckpointManager
+    obs.enable()
+    x = gaussian_mixture(200, d=3, k=3, seed=7)
+    y = gaussian_mixture(180, d=3, k=3, seed=8)
+    store = IndexStore(capacity=1,
+                       manager=CheckpointManager(str(tmp_path / "c")))
+    idx, _ = store.get_or_build(x[:195], 0.4, 8)
+    idx.insert(x[195:])                          # mutated, NOT rekey'd
+    store.get_or_build(y, 0.4, 8)                # evicts -> refused spill
+    st = store.stats()
+    assert st["drops"] == 1 and st["stale_drops"] == 1
+    assert st["spills"] == 0
+    counters = obs.snapshot()["counters"]
+    assert counters["store.drops"] == 1
+    assert counters["store.stale_drops"] == 1
+    # a plain capacity drop (no manager) must NOT count as stale
+    plain = IndexStore(capacity=1)
+    plain.get_or_build(x[:195], 0.4, 8)
+    plain.get_or_build(y, 0.4, 8)
+    assert plain.stats()["drops"] == 1
+    assert plain.stats()["stale_drops"] == 0
+    # the Stats verb carries the distinction end to end
+    fe = ServiceFrontend(store=store, workers=1)
+    try:
+        verb = fe.submit(StatsOp()).result(timeout=60)
+        assert verb["store"]["stale_drops"] == 1
+    finally:
+        fe.shutdown(drain=True, timeout=60)
+
+
+# ------------------------------------------------- SlackCSR splice layer
+def test_slack_csr_packed_view_matches_plain_splices():
+    """Slack-backed splices must be byte-identical to packed splices —
+    through in-place appends AND forced relayouts."""
+    x = gaussian_mixture(240, d=3, k=3, seed=9)
+    plain = FinexIndex.build(x[:200], eps=0.4, minpts=8)
+    slacked = FinexIndex.build(x[:200], eps=0.4, minpts=8)
+    slacked.enable_slack(slack=1.5, min_row_slack=8)
+    for i in range(200, 240, 4):
+        plain.insert(x[i:i + 4])
+        slacked.insert(x[i:i + 4])
+    assert_state_identical(slacked, plain, "slack vs packed")
+    st = slacked.slack_stats()
+    assert st["enabled"] and st["in_place_splices"] >= 1
+    assert st["capacity"] >= st["nnz"]
+
+    # zero headroom forces the relayout path every time — still exact
+    tight = FinexIndex.build(x[:200], eps=0.4, minpts=8)
+    tight.enable_slack(slack=1.0, min_row_slack=0)
+    for i in range(200, 240, 4):
+        tight.insert(x[i:i + 4])
+    assert_state_identical(tight, plain, "relayout vs packed")
+    assert tight.slack_stats()["relayouts"] >= 1
+
+
+def test_slack_csr_rollback_on_failed_insert():
+    """A rejected mutation must leave a slack-backed index untouched."""
+    x = gaussian_mixture(220, d=3, k=3, seed=10)
+    idx = FinexIndex.build(x[:210], eps=0.4, minpts=8)
+    idx.enable_slack()
+    idx.insert(x[210:215])                       # slack layout active
+    before = idx.csr
+    with pytest.raises(Exception):
+        idx.insert(np.ones((3, 7)))              # wrong dimensionality
+    after = idx.csr
+    for f in ("indptr", "indices", "dists"):
+        assert np.array_equal(getattr(before, f), getattr(after, f))
+    ref = FinexIndex.build(x[:210], eps=0.4, minpts=8)
+    ref.insert(x[210:215])               # same effective op sequence
+    assert_state_identical(idx, ref, "post-rollback")
+
+
+def test_slack_csr_unit_roundtrip():
+    rng = np.random.default_rng(11)
+    lens = rng.integers(0, 9, size=32)
+    indptr = np.zeros(33, dtype=np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    nnz = int(indptr[-1])
+    from repro.neighbors.engine import CSRNeighborhoods
+    csr = CSRNeighborhoods(
+        indptr=indptr,
+        indices=rng.integers(0, 32, size=nnz).astype(np.int64),
+        dists=rng.random(nnz).astype(np.float32), eps=0.5)
+    sl = SlackCSR.from_csr(csr)
+    packed = sl.packed()
+    for f in ("indptr", "indices", "dists"):
+        assert np.array_equal(getattr(packed, f), getattr(csr, f))
+    starts, ends = sl.row_bounds()
+    assert np.array_equal(ends - starts, lens)
