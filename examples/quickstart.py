@@ -9,7 +9,7 @@ every tighter setting exactly from one build, all through the
 """
 import numpy as np
 
-from repro.core import FinexIndex, dbscan_from_csr
+from repro.core import Eps, FinexIndex, MinPts, dbscan_from_csr
 from repro.data.synthetic import two_scale_blobs
 from repro.service import SweepPlanner
 
@@ -46,9 +46,26 @@ def main():
     # hot path (repro.service): scan, sparse clustering, verification
     # distances and core components are shared across the K settings
     print("\nbatched sweep (one pass, byte-identical to the loops above):")
-    grid = [("eps", 0.3), ("eps", 0.2), ("minpts", 25), ("minpts", 60)]
-    for (kind, v), row in zip(grid, SweepPlanner(index).sweep(grid)):
-        describe(f"sweep {kind}*={v}", row)
+    # settings are typed (Eps/MinPts/Hierarchy from repro.core); bare
+    # ("eps", v) tuples keep working through the same normalization
+    grid = [Eps(0.3), Eps(0.2), MinPts(25), MinPts(60)]
+    for s, row in zip(grid, SweepPlanner(index).sweep(grid)):
+        describe(f"sweep {s.kind}*={s.value}", row)
+
+    # ---- hierarchy as a query: ALL scales from the one build -----------
+    # the ordering + CSR already encode the complete density hierarchy;
+    # hierarchy() condenses it into an HDBSCAN*-style cluster tree
+    # (birth/death ε, sizes, stabilities) with ZERO new distance
+    # computations, and its cuts are label-identical to the queries above
+    print("\ncondensed cluster tree (every (ε*, MinPts*) at once):")
+    h = index.hierarchy()
+    print(f"  {h.n_clusters} condensed clusters over {h.cores.size} cores,"
+          f" {h.n_selected} stability-selected, built in "
+          f"{h.build_seconds * 1e3:.1f} ms — zero distance computations")
+    describe("stability extraction", h.extract())
+    assert np.array_equal(h.cut(0.2), index.eps_star(0.2))
+    assert np.array_equal(h.cut_minpts(25), index.minpts_star(25))
+    print("  cut(0.2) / cut_minpts(25) label-identical to the queries: ok")
 
     # the index round-trips through one npz file; MinPts*-queries need no
     # raw data at all, ε*-queries re-attach the engine via data=

@@ -7,9 +7,12 @@ stays exported for benchmarks and tests that need the pieces."""
 from repro.core.ordering import ClusterOrdering, FinexOrdering
 from repro.core.build import finex_build, optics_build
 from repro.core.extract import query_clustering, query_clustering_batch
-from repro.core.queries import (eps_star_batch, eps_star_query,
-                                minpts_star_batch, minpts_star_query,
-                                QueryStats)
+from repro.core.queries import (ClusteringResult, Eps, Hierarchy, MinPts,
+                                QueryStats, Setting, eps_star_batch,
+                                eps_star_query, minpts_star_batch,
+                                minpts_star_query, normalize_settings)
+from repro.core.hierarchy import (ClusterHierarchy, CondensedTree,
+                                  build_hierarchy, eps_cut_labels)
 from repro.core.index import FinexIndex
 from repro.core.dbscan import dbscan, dbscan_from_csr, filtered_counts
 from repro.core.equivalence import (assert_equivalent_exact, border_recall,
@@ -21,6 +24,10 @@ __all__ = [
     "query_clustering", "query_clustering_batch",
     "eps_star_query", "minpts_star_query",
     "eps_star_batch", "minpts_star_batch", "QueryStats",
+    "Eps", "MinPts", "Hierarchy", "Setting", "normalize_settings",
+    "ClusteringResult",
+    "ClusterHierarchy", "CondensedTree", "build_hierarchy",
+    "eps_cut_labels",
     "dbscan", "dbscan_from_csr", "filtered_counts",
     "assert_equivalent_exact", "border_recall", "canonical_core_partition",
 ]

@@ -1,0 +1,567 @@
+"""Hierarchy as a query: the condensed cluster tree over one FINEX index.
+
+The ordering quintuple (order, C, R) plus the generating-ε CSR already
+encode the *complete* density hierarchy: the exact DBSCAN core components
+at every ε ≤ ε_gen are the connected components of the mutual-reachability
+graph  m(p, q) = max(C[p], C[q], d(p, q))  thresholded at ε — and every
+pair with d ≤ ε_gen sits in the CSR with its exact float32 distance, so
+the whole dendrogram is computable with ZERO new distance work.  This
+module turns that observation into an HDBSCAN*-style condensed cluster
+tree (birth/death ε, sizes, parents, stabilities — FISHDBC in PAPERS.md
+is the flexible/incremental precedent; here it is *exact*):
+
+  * ``build_hierarchy``      — minimum spanning forest of the mutual-
+    reachability graph (vectorized edge extraction + one tight union-find
+    merge pass over the ≤ n_cores−1 MST edges, grouped level-exactly so
+    discrete-metric ties condense canonically), then a level-granular
+    condensation at a minimum cluster weight (default: the generating
+    MinPts) and the excess-of-mass stability selection.
+  * ``ClusterHierarchy.cut(ε)``        — label-identical to
+    ``FinexIndex.eps_star(ε)``: the ε*-query of Theorem 5.6 replayed with
+    CSR-sourced pair distances (a pair absent from the CSR has
+    d > ε_gen ≥ ε*, exactly an ∞ entry), so verification costs zero
+    distance computations.
+  * ``ClusterHierarchy.cut_minpts(m)`` — label-identical to
+    ``FinexIndex.minpts_star(m)`` (delegates to the §5.4 kernel, which
+    is already distance-free).
+  * ``ClusterHierarchy.extract()``     — the stability-selected flat
+    clustering (cores only; non-cores are noise, as in HDBSCAN*).
+
+The loop oracle lives in ``repro.core.reference.reference_hierarchy``;
+``tests/test_hierarchy.py`` pins cut-equivalence per registered metric,
+the condensed tree against a brute-force all-level grid, and the
+zero-distance claim via the engine/obs counters.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import minimum_spanning_tree
+
+from repro import obs
+from repro.core.extract import cluster_spans, query_clustering
+from repro.core.ordering import FinexOrdering
+from repro.core.queries import ClusteringResult, minpts_star_query
+from repro.neighbors.engine import CSRNeighborhoods
+
+# npz keys the hierarchy round-trips through ``FinexIndex.to_arrays``
+# (all optional: archives written before this feature load fine and
+# rebuild the tree lazily)
+HIERARCHY_ARRAY_KEYS = (
+    "hier_parent", "hier_birth", "hier_death", "hier_size",
+    "hier_stability", "hier_selected", "hier_leaf_cond", "hier_minw",
+)
+
+
+@dataclass(frozen=True)
+class CondensedTree:
+    """The condensed cluster tree as flat arrays (one row per cluster).
+
+    ``parent`` is -1 for roots; ``birth``/``death`` are the ε values at
+    which the cluster separated from its parent / split or vanished;
+    ``size`` is the total member weight at birth; ``stability`` the
+    excess-of-mass integral Σ w·(λ_out − λ_birth) with λ = 1/ε;
+    ``selected`` marks the stability-optimal flat clustering.
+    """
+    parent: np.ndarray        # (c,) int64
+    birth: np.ndarray         # (c,) float64
+    death: np.ndarray         # (c,) float64
+    size: np.ndarray          # (c,) int64
+    stability: np.ndarray     # (c,) float64
+    selected: np.ndarray      # (c,) bool
+
+
+def _mutual_reach_edges(ordering: FinexOrdering, csr: CSRNeighborhoods
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unique (i < j) mutual-reachability edges between generating cores.
+
+    Every qualifying pair is in the CSR (d ≤ ε_gen), so this is a pure
+    gather; m = max(C_i, C_j, d) is exact in float64 over the float32
+    distance domain.
+    """
+    C = ordering.C
+    i = csr.row_ids()
+    j = csr.indices.astype(np.int64, copy=False)
+    keep = (i < j) & np.isfinite(C[i]) & np.isfinite(C[j])
+    i, j = i[keep], j[keep]
+    d = csr.dists[keep].astype(np.float64)
+    m = np.maximum(d, np.maximum(C[i], C[j]))
+    return i, j, m
+
+
+def _mst_edges(k: int, ri: np.ndarray, rj: np.ndarray, m: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Minimum spanning forest over core-local node ids 0..k-1.
+
+    m = 0 is real (duplicate objects with C = 0) but scipy's sparse MST
+    drops explicit zeros, so zero weights are biased to half the
+    smallest positive m before the pass and mapped back after.  The
+    bias is a monotone relabeling (0 < tiny < every positive m, zero
+    ties stay ties), so the forest's per-level connectivity — all
+    single linkage needs — is unchanged, and every surviving weight
+    round-trips exactly: positive m values pass through untouched, and
+    a returned weight equal to ``tiny`` can only be a mapped zero.
+    Avoiding a global edge sort here matters: it was the build's
+    dominant cost at bench scale.  MST tie-breaking among equal weights
+    is arbitrary but irrelevant — the level-contracted merge forest and
+    the condensation are canonical under ties (pinned against the loop
+    oracle on discrete metrics in tests/test_hierarchy.py).
+    """
+    if m.size == 0:
+        return (np.empty(0, np.int64), np.empty(0, np.int64),
+                np.empty(0, np.float64))
+    pos = m[m > 0]
+    tiny = 0.5 * float(pos.min()) if pos.size else 1.0
+    g = csr_matrix((np.maximum(m, tiny), (ri, rj)), shape=(k, k))
+    t = minimum_spanning_tree(g).tocoo()
+    mw = np.where(t.data == tiny, 0.0, t.data)
+    return (t.row.astype(np.int64), t.col.astype(np.int64), mw)
+
+
+def _merge_forest(k: int, leaf_height: np.ndarray, ea: np.ndarray,
+                  eb: np.ndarray, ew: np.ndarray):
+    """Level-contracted single-linkage forest from the MST edge list.
+
+    Returns (heights, children, roots): tree nodes 0..k-1 are the core
+    leaves (height = the core's birth level C); internal nodes are
+    appended per merge *level* — equal-weight edges landing in one
+    component share one multiway node, so discrete-metric ties produce
+    the canonical level-granular tree, independent of edge order.  The
+    union-find pass is the build's one sequential seam: O(#MST edges)
+    with path halving, every array around it vectorized.
+    """
+    order = np.lexsort((eb, ea, ew))
+    ea, eb, ew = ea[order], eb[order], ew[order]
+    uf = np.arange(k, dtype=np.int64)
+    node_of = np.arange(k, dtype=np.int64)
+    heights = list(leaf_height)
+    children: Dict[int, list] = {}
+    alive = []
+
+    def find(x: int) -> int:
+        while uf[x] != x:
+            uf[x] = uf[uf[x]]
+            x = uf[x]
+        return x
+
+    nxt = k
+    for a, b, w in zip(ea, eb, ew):
+        ra, rb = find(int(a)), find(int(b))
+        na, nb = int(node_of[ra]), int(node_of[rb])
+        a_open = na >= k and heights[na] == w
+        b_open = nb >= k and heights[nb] == w
+        if a_open and b_open:            # two same-level nodes: absorb
+            children[na].extend(children[nb])
+            children[nb] = None
+            alive[nb - k] = False
+            target = na
+        elif a_open:
+            children[na].append(nb)
+            target = na
+        elif b_open:
+            children[nb].append(na)
+            target = nb
+        else:
+            children[nxt] = [na, nb]
+            heights.append(w)
+            alive.append(True)
+            target = nxt
+            nxt += 1
+        uf[ra] = rb
+        node_of[find(rb)] = target
+    roots = sorted({int(node_of[find(x)]) for x in range(k)})
+    return np.asarray(heights, dtype=np.float64), children, roots, alive
+
+
+def _lam(e, floor: float):
+    """λ(ε) = 1/ε over the discrete level domain, with ε clamped to half
+    the smallest positive level so ε = 0 (exact duplicates) stays finite
+    and deterministic."""
+    return 1.0 / np.maximum(e, floor)
+
+
+def build_hierarchy(ordering: FinexOrdering, csr: CSRNeighborhoods,
+                    weights: np.ndarray,
+                    min_cluster_weight: Optional[int] = None,
+                    version: int = 0) -> "ClusterHierarchy":
+    """Condensed cluster tree + stability selection, zero distance work."""
+    with obs.span("hierarchy.build", n=ordering.n) as sp:
+        t0 = time.perf_counter()
+        h = _build_impl(ordering, csr, weights, min_cluster_weight,
+                        version)
+        h.build_seconds = time.perf_counter() - t0
+        sp.annot(cores=int(h.cores.size), clusters=int(h.parent.size),
+                 selected=int(h.selected.sum()))
+        if obs.enabled():
+            obs.count("hierarchy.builds")
+            obs.observe("hierarchy.build_s", h.build_seconds)
+    return h
+
+
+def _build_impl(ordering, csr, weights, min_cluster_weight, version):
+    # untraced body of :func:`build_hierarchy`
+    n = ordering.n
+    eps_gen = float(np.float32(ordering.eps))
+    W = int(min_cluster_weight if min_cluster_weight is not None
+            else ordering.minpts)
+    C = ordering.C
+    cores = np.flatnonzero(np.isfinite(C))
+    k = cores.size
+    leaf_cond = np.full(n, -1, dtype=np.int64)
+    empty = ClusterHierarchy(
+        ordering=ordering, csr=csr, weights=weights,
+        min_cluster_weight=W, cores=cores,
+        leaf_cond=leaf_cond,
+        parent=np.empty(0, np.int64), birth=np.empty(0, np.float64),
+        death=np.empty(0, np.float64), size=np.empty(0, np.int64),
+        stability=np.empty(0, np.float64),
+        selected=np.empty(0, bool), version=version)
+    if k == 0:
+        return empty
+
+    remap = np.full(n, -1, dtype=np.int64)
+    remap[cores] = np.arange(k)
+    i, j, m = _mutual_reach_edges(ordering, csr)
+    ea, eb, ew = _mst_edges(k, remap[i], remap[j], m)
+    Cl = C[cores]                                   # leaf birth levels
+    w_leaf = np.asarray(weights, dtype=np.int64)[cores]
+    heights, children, roots, alive = _merge_forest(k, Cl, ea, eb, ew)
+
+    # subtree weights: children always carry smaller node ids, so one
+    # ascending pass suffices
+    wt = np.zeros(heights.size, dtype=np.int64)
+    wt[:k] = w_leaf
+    for nid in range(k, heights.size):
+        ch = children.get(nid)
+        if ch is not None:
+            wt[nid] = sum(int(wt[c]) for c in ch)
+
+    # λ floor: half the smallest positive level (see _lam) — over ALL
+    # mutual-reachability values, not just MST survivors, so the floor
+    # is a property of the graph (what the loop reference recomputes)
+    # rather than of which tie-broken spanning tree scipy returned
+    pos_lv = np.concatenate([Cl, m, [eps_gen]])
+    pos_lv = pos_lv[pos_lv > 0]
+    floor = float(pos_lv.min()) * 0.5 if pos_lv.size else 1.0
+
+    # ---- level-granular condensation (top-down stack walk) ----
+    parent, birth, death, size = [], [], [], []
+    leaf_local = np.full(k, -1, dtype=np.int64)
+    stack = []
+    for r in roots:
+        parent.append(-1)
+        birth.append(eps_gen)
+        death.append(np.nan)
+        size.append(int(wt[r]))
+        stack.append((r, len(parent) - 1, False))
+    while stack:
+        t, c, frozen = stack.pop()
+        if t < k:                                    # a core leaf
+            leaf_local[t] = c
+            if not frozen:                  # the cluster's last survivor
+                death[c] = float(Cl[t])
+            continue
+        h = heights[t]
+        ch = children[t]
+        if frozen:
+            for x in ch:
+                stack.append((x, c, True))
+            continue
+        surv = []
+        for x in ch:
+            if x < k and Cl[x] == h:         # deactivates with this level
+                leaf_local[x] = c
+            else:
+                surv.append(x)
+        big = [x for x in surv if wt[x] >= W]
+        if len(big) >= 2:                            # a real split
+            death[c] = float(h)
+            for x in surv:
+                if wt[x] >= W:
+                    parent.append(c)
+                    birth.append(float(h))
+                    death.append(np.nan)
+                    size.append(int(wt[x]))
+                    stack.append((x, len(parent) - 1, False))
+                else:
+                    stack.append((x, c, True))
+        elif len(big) == 1:                          # cluster continues
+            for x in surv:
+                stack.append((x, c, wt[x] < W))
+        else:                                        # cluster dissolves
+            death[c] = float(h)
+            for x in surv:
+                stack.append((x, c, True))
+
+    parent = np.asarray(parent, dtype=np.int64)
+    birth = np.asarray(birth, dtype=np.float64)
+    death = np.asarray(death, dtype=np.float64)
+    size = np.asarray(size, dtype=np.int64)
+    nc = parent.size
+
+    # ---- stability: Σ w·(λ_out − λ_birth), members fall at own C ----
+    stab = (np.bincount(leaf_local, weights=w_leaf * _lam(Cl, floor),
+                        minlength=nc)
+            - np.bincount(leaf_local, weights=w_leaf.astype(np.float64),
+                          minlength=nc) * _lam(birth, floor))
+
+    # ---- excess-of-mass selection ----
+    child_sum = np.zeros(nc, dtype=np.float64)
+    has_child = np.zeros(nc, dtype=bool)
+    has_child[parent[parent >= 0]] = True
+    s_hat = np.empty(nc, dtype=np.float64)
+    selected = np.ones(nc, dtype=bool)
+    for c in range(nc - 1, -1, -1):      # children have larger ids
+        if has_child[c] and child_sum[c] > stab[c]:
+            selected[c] = False
+            s_hat[c] = child_sum[c]
+        else:
+            s_hat[c] = stab[c]
+        if parent[c] >= 0:
+            child_sum[parent[c]] += s_hat[c]
+    anc = np.zeros(nc, dtype=bool)       # any ancestor already selected?
+    for c in range(nc):                  # parents have smaller ids
+        p = parent[c]
+        if p >= 0:
+            anc[c] = anc[p] or selected[p]
+            if anc[c]:
+                selected[c] = False
+
+    leaf_cond[cores] = leaf_local
+    return ClusterHierarchy(
+        ordering=ordering, csr=csr, weights=weights,
+        min_cluster_weight=W, cores=cores, leaf_cond=leaf_cond,
+        parent=parent, birth=birth, death=death, size=size,
+        stability=stab, selected=selected, version=version)
+
+
+def eps_cut_labels(ordering: FinexOrdering, csr: CSRNeighborhoods,
+                   eps_star: float) -> np.ndarray:
+    """The ε*-query of Theorem 5.6, replayed from the CSR — label-
+    identical to ``eps_star_query`` with ZERO distance computations.
+
+    Every pair with d ≤ ε_gen is in the CSR carrying its exact float32
+    distance; a pair absent from a candidate's row has d > ε_gen ≥ ε*,
+    which every ``d ≤ ε*`` test rejects exactly as a computed distance
+    would.  The per-candidate first hit in (cluster, id) core order is
+    one global min-rank reduction instead of the scalar query's blocked
+    masked-argmax — same argument order, same labels.
+    """
+    eps_star = float(np.float32(eps_star))
+    eps_gen = float(np.float32(ordering.eps))
+    labels = query_clustering(ordering, eps_star)
+    if eps_star >= eps_gen:
+        return labels
+    C = ordering.C
+    cand_mask = (labels < 0) & (C > eps_star) & (C <= eps_gen)
+    candidates = np.nonzero(cand_mask)[0]
+    if candidates.size == 0:
+        return labels
+    sparse = query_clustering(ordering, ordering.eps)
+    first, _ = cluster_spans(ordering, labels)
+    core_star_ids = np.nonzero((C <= eps_star) & (labels >= 0))[0]
+    if core_star_ids.size == 0:
+        return labels
+    core_lab = labels[core_star_ids]
+    by_lab = np.argsort(core_lab, kind="stable")
+    sorted_cores = core_star_ids[by_lab]
+    sorted_lab = core_lab[by_lab]
+    m = first.shape[0]
+    sparse_of_S = np.full(m, -1, dtype=np.int64)
+    sparse_of_S[sorted_lab[::-1]] = sparse[sorted_cores[::-1]]
+    core_group = sparse_of_S[sorted_lab]
+    rank_of = np.full(ordering.n, -1, dtype=np.int64)
+    rank_of[sorted_cores] = np.arange(sorted_cores.size)
+
+    # candidates' CSR rows: (candidate, neighbor, d) triples, gathered
+    starts = csr.indptr[candidates].astype(np.int64)
+    lens = (csr.indptr[candidates + 1] - csr.indptr[candidates]
+            ).astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return labels
+    seg_base = np.cumsum(lens) - lens
+    pos = np.repeat(starts - seg_base, lens) + np.arange(total)
+    slot = np.repeat(np.arange(candidates.size), lens)
+    nb = csr.indices[pos].astype(np.int64)
+    d = csr.dists[pos]
+
+    r = rank_of[nb]
+    keep = (r >= 0) & (d <= eps_star)
+    slot, r = slot[keep], r[keep]
+    # Thm 5.6 conds 2+3: candidate and core share a sparse cluster, and
+    # the core's cluster started before the candidate was processed
+    keep = ((sparse[candidates[slot]] == core_group[r])
+            & (first[sorted_lab[r]] > ordering.pos[candidates[slot]]))
+    slot, r = slot[keep], r[keep]
+    sentinel = np.int64(sorted_cores.size)
+    best = np.full(candidates.size, sentinel, dtype=np.int64)
+    np.minimum.at(best, slot, r)
+    got = best < sentinel
+    labels[candidates[got]] = sorted_lab[best[got]]
+    return labels
+
+
+class ClusterHierarchy:
+    """One index's full density hierarchy: condensed tree + exact cuts.
+
+    Immutable snapshot semantics: mutations replace the facade's
+    ordering/CSR objects, so a handle taken before an insert/delete
+    keeps answering for the state it was built from, while the facade's
+    lazy cache rebuilds on next access.
+    """
+
+    def __init__(self, *, ordering, csr, weights, min_cluster_weight,
+                 cores, leaf_cond, parent, birth, death, size, stability,
+                 selected, version=0):
+        self.ordering = ordering
+        self.csr = csr
+        self.weights = weights
+        self.min_cluster_weight = int(min_cluster_weight)
+        self.cores = cores
+        self.leaf_cond = leaf_cond
+        self.parent = parent
+        self.birth = birth
+        self.death = death
+        self.size = size
+        self.stability = stability
+        self.selected = selected
+        self.version = int(version)
+        self.build_seconds: Optional[float] = None
+
+    @property
+    def n(self) -> int:
+        return self.ordering.n
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.parent.size)
+
+    @property
+    def n_selected(self) -> int:
+        return int(self.selected.sum())
+
+    def condensed(self) -> CondensedTree:
+        return CondensedTree(parent=self.parent, birth=self.birth,
+                             death=self.death, size=self.size,
+                             stability=self.stability,
+                             selected=self.selected)
+
+    # ----------------------------------------------------------- slices
+    def cut(self, eps_star: float) -> ClusteringResult:
+        """Exact labels at (ε* ≤ ε_gen, MinPts) — identical to
+        ``FinexIndex.eps_star`` with zero distance computations."""
+        with obs.span("hierarchy.cut", eps_star=float(eps_star),
+                      n=self.n):
+            t0 = time.perf_counter()
+            labels = eps_cut_labels(self.ordering, self.csr, eps_star)
+            if obs.enabled():
+                obs.count("hierarchy.cuts")
+        return ClusteringResult.wrap(
+            labels, kind="eps", value=float(eps_star),
+            version=self.version, eps=self.ordering.eps,
+            minpts=self.ordering.minpts,
+            elapsed_s=time.perf_counter() - t0)
+
+    def cut_minpts(self, minpts_star: int) -> ClusteringResult:
+        """Exact labels at (ε_gen, MinPts* ≥ MinPts) — identical to
+        ``FinexIndex.minpts_star`` (the §5.4 kernel is already
+        distance-free)."""
+        with obs.span("hierarchy.cut_minpts",
+                      minpts_star=int(minpts_star), n=self.n):
+            t0 = time.perf_counter()
+            labels = minpts_star_query(self.ordering, self.csr,
+                                       int(minpts_star))
+            if obs.enabled():
+                obs.count("hierarchy.cuts")
+        return ClusteringResult.wrap(
+            labels, kind="minpts", value=int(minpts_star),
+            version=self.version, eps=self.ordering.eps,
+            minpts=self.ordering.minpts,
+            elapsed_s=time.perf_counter() - t0)
+
+    def extract(self) -> ClusteringResult:
+        """The stability-selected flat clustering (excess of mass).
+
+        Cores of selected clusters get labels numbered by smallest
+        member id; everything else (including non-cores) is noise."""
+        with obs.span("hierarchy.extract", n=self.n):
+            t0 = time.perf_counter()
+            labels = self._extract_labels()
+        return ClusteringResult.wrap(
+            labels, kind="stability", value=self.min_cluster_weight,
+            version=self.version, eps=self.ordering.eps,
+            minpts=self.ordering.minpts,
+            elapsed_s=time.perf_counter() - t0)
+
+    def _extract_labels(self) -> np.ndarray:
+        n, nc = self.n, self.n_clusters
+        labels = np.full(n, -1, dtype=np.int64)
+        if nc == 0:
+            return labels
+        sel_of = np.full(nc, -1, dtype=np.int64)
+        for c in range(nc):              # parents have smaller ids
+            if self.selected[c]:
+                sel_of[c] = c
+            elif self.parent[c] >= 0:
+                sel_of[c] = sel_of[self.parent[c]]
+        local = self.leaf_cond[self.cores]
+        cluster = sel_of[local]
+        mask = cluster >= 0
+        if not mask.any():
+            return labels
+        # deterministic numbering: clusters by smallest member object id
+        mins = np.full(nc, n, dtype=np.int64)
+        np.minimum.at(mins, cluster[mask], self.cores[mask])
+        present = np.flatnonzero(mins < n)
+        label_of = np.full(nc, -1, dtype=np.int64)
+        label_of[present[np.argsort(mins[present])]] = \
+            np.arange(present.size)
+        labels[self.cores[mask]] = label_of[cluster[mask]]
+        return labels
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, object]:
+        return {
+            "cores": int(self.cores.size),
+            "clusters": self.n_clusters,
+            "selected": self.n_selected,
+            "min_cluster_weight": self.min_cluster_weight,
+            "version": self.version,
+            "build_s": self.build_seconds,
+        }
+
+    # ---------------------------------------------------------- persist
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """The optional npz keys ``FinexIndex.to_arrays`` merges in."""
+        return {
+            "hier_parent": self.parent, "hier_birth": self.birth,
+            "hier_death": self.death, "hier_size": self.size,
+            "hier_stability": self.stability,
+            "hier_selected": self.selected,
+            "hier_leaf_cond": self.leaf_cond,
+            "hier_minw": np.int64(self.min_cluster_weight),
+        }
+
+    @classmethod
+    def from_arrays(cls, z, ordering: FinexOrdering,
+                    csr: CSRNeighborhoods, weights: np.ndarray,
+                    version: int = 0) -> Optional["ClusterHierarchy"]:
+        """Rebuild from an archive dict; None if the keys are absent."""
+        if any(k not in z for k in HIERARCHY_ARRAY_KEYS):
+            return None
+        leaf_cond = np.asarray(z["hier_leaf_cond"])
+        return cls(
+            ordering=ordering, csr=csr, weights=weights,
+            min_cluster_weight=int(z["hier_minw"]),
+            cores=np.flatnonzero(leaf_cond >= 0), leaf_cond=leaf_cond,
+            parent=np.asarray(z["hier_parent"]),
+            birth=np.asarray(z["hier_birth"]),
+            death=np.asarray(z["hier_death"]),
+            size=np.asarray(z["hier_size"]),
+            stability=np.asarray(z["hier_stability"]),
+            selected=np.asarray(z["hier_selected"]), version=version)

@@ -13,7 +13,13 @@ sub-matrix through the engine; MinPts*-queries need zero distances).
     a = index.clustering()                               # (ε, MinPts)
     b = index.eps_star(0.2)                              # (0.2, MinPts)
     c = index.minpts_star(60)                            # (ε, 60)
+    h = index.hierarchy()                                # ALL scales
+    h.cut(0.2); h.cut_minpts(60); h.extract()            # zero distances
     index.save("index.npz"); FinexIndex.load("index.npz", data=x)
+
+    Queries return ``repro.core.queries.ClusteringResult`` — an ndarray
+    of labels carrying the query kind, index version and timing, so it
+    drops into every existing label-array call site unchanged.
 
 The facade is the integration surface for the rest of the repo: the
 quickstart example, the paper-table benchmarks, the data-curation
@@ -23,6 +29,7 @@ PRs (sharded materialize, serving, caching) only have one seam to cut.
 from __future__ import annotations
 
 import json
+import time
 import warnings
 from typing import Dict, Optional
 
@@ -35,8 +42,10 @@ from repro.core.delta import (SlackCSR, core_components,
                               splice_insert, stitch, subset_core_distances,
                               subset_csr)
 from repro.core.extract import query_clustering
+from repro.core.hierarchy import ClusterHierarchy, build_hierarchy
 from repro.core.ordering import FinexOrdering
-from repro.core.queries import QueryStats, eps_star_query, minpts_star_query
+from repro.core.queries import (ClusteringResult, QueryStats,
+                                eps_star_query, minpts_star_query)
 from repro.metrics import Metric, MetricLike, get_metric, registered_metrics
 from repro.neighbors.engine import CSRNeighborhoods, NeighborEngine
 
@@ -101,6 +110,10 @@ class FinexIndex:
         # dataset is not free) and the engine's identity always wins
         self._data_fingerprint = fingerprint
         self.query_stats = QueryStats()     # cumulative, resettable
+        # the condensed cluster tree (repro.core.hierarchy): built lazily
+        # on first hierarchy() call, invalidated by mutations — the same
+        # build-once-pays-nothing pattern as the component labels
+        self._hier: Optional[ClusterHierarchy] = None
 
     @property
     def metric(self) -> str:
@@ -228,33 +241,75 @@ class FinexIndex:
             out["nnz"] = raw.nnz
         return out
 
-    def clustering(self) -> np.ndarray:
+    def _wrap(self, labels: np.ndarray, kind: str, value,
+              t0: float) -> ClusteringResult:
+        return ClusteringResult.wrap(
+            labels, kind=kind, value=value, version=self.version,
+            eps=self.eps, minpts=self.minpts,
+            elapsed_s=time.perf_counter() - t0)
+
+    def clustering(self) -> ClusteringResult:
         """Exact labels at the generating (ε, MinPts) — Corollary 5.5."""
-        return query_clustering(self.ordering, self.ordering.eps)
+        t0 = time.perf_counter()
+        labels = query_clustering(self.ordering, self.ordering.eps)
+        return self._wrap(labels, "generating", None, t0)
 
     def eps_star(self, eps_star: float,
-                 stats: Optional[QueryStats] = None) -> np.ndarray:
+                 stats: Optional[QueryStats] = None) -> ClusteringResult:
         """Exact labels at (ε* ≤ ε, MinPts) — Theorem 5.6."""
         if self.engine is None:
             raise RuntimeError(
                 "ε*-queries need the distance engine for verification; "
                 "load the index with its raw data (FinexIndex.load(..., "
                 "data=...)) or use minpts_star/clustering")
+        t0 = time.perf_counter()
         with obs.span("index.eps_star", eps_star=float(eps_star),
                       n=self.n):
-            return eps_star_query(self.ordering, self.engine, eps_star,
-                                  stats=stats if stats is not None
-                                  else self.query_stats)
+            labels = eps_star_query(self.ordering, self.engine, eps_star,
+                                    stats=stats if stats is not None
+                                    else self.query_stats)
+        return self._wrap(labels, "eps", float(eps_star), t0)
 
     def minpts_star(self, minpts_star: int,
-                    stats: Optional[QueryStats] = None) -> np.ndarray:
+                    stats: Optional[QueryStats] = None) -> ClusteringResult:
         """Exact labels at (ε, MinPts* ≥ MinPts) — §5.4, zero distances."""
+        t0 = time.perf_counter()
         with obs.span("index.minpts_star", minpts_star=int(minpts_star),
                       n=self.n):
-            return minpts_star_query(self.ordering, self.csr,
-                                     minpts_star,
-                                     stats=stats if stats is not None
-                                     else self.query_stats)
+            labels = minpts_star_query(self.ordering, self.csr,
+                                       minpts_star,
+                                       stats=stats if stats is not None
+                                       else self.query_stats)
+        return self._wrap(labels, "minpts", int(minpts_star), t0)
+
+    # --------------------------------------------------------- hierarchy
+    def hierarchy(self, min_cluster_weight: Optional[int] = None
+                  ) -> ClusterHierarchy:
+        """The condensed cluster tree over ALL (ε ≤ ε_gen, MinPts) scales.
+
+        Built once from the ordering + CSR with zero new distance work
+        (``repro.core.hierarchy``), cached until the next insert/delete,
+        and rebuilt lazily after one — the same pattern as the component
+        labels, so build-once indexes pay nothing until they ask.
+        ``min_cluster_weight`` sets the condensation threshold (default:
+        the generating MinPts); asking at a different threshold rebuilds.
+        """
+        W = int(min_cluster_weight if min_cluster_weight is not None
+                else self.minpts)
+        h = self._hier
+        if h is None or h.min_cluster_weight != W:
+            h = build_hierarchy(self.ordering, self.csr, self.weights,
+                                W, version=self.version)
+            self._hier = h
+        return h
+
+    def hierarchy_stats(self) -> dict:
+        """Cache state of the condensed tree (what ``/stats`` surfaces):
+        ``built`` is False until ``hierarchy()`` runs, and flips back on
+        every mutation (the tree is invalidated, not eagerly rebuilt)."""
+        if self._hier is None:
+            return {"built": False}
+        return {"built": True, **self._hier.stats()}
 
     # ---------------------------------------------- incremental updates
     def insert(self, points, *, weights: Optional[np.ndarray] = None,
@@ -625,6 +680,7 @@ class FinexIndex:
         self.csr = csr_new
         self.weights = self.engine.weights
         self._comp, self._run_id, self._run_triggers = comp, run_id, triggers
+        self._hier = None       # condensed tree rebuilt lazily on next ask
         self._data_fingerprint = None    # the engine's (rehashed) wins
         self.version += 1
         report = {"op": op, "count": int(moved), "n": int(n_new),
@@ -678,6 +734,7 @@ class FinexIndex:
             "query_screened_pairs": self.query_stats.screened_pairs,
             "pruning": pruning,
             "strip": strip,
+            "hierarchy": self.hierarchy_stats(),
             "version": self.version,
             "mutations": len(self.delta_log),
             # the process-wide observability snapshot (documented schema:
@@ -718,6 +775,9 @@ class FinexIndex:
             # comp is lazy: only present once a mutation (or load of a
             # mutated archive) has materialized it
             **({"comp": self._comp} if self._comp is not None else {}),
+            # the condensed tree rides along once built (optional keys:
+            # archives without them reload fine and rebuild lazily)
+            **(self._hier.to_arrays() if self._hier is not None else {}),
         }
 
     @classmethod
@@ -784,12 +844,17 @@ class FinexIndex:
             return np.asarray(z[key]) if key in z else None
 
         delta_raw = str(z["delta_log"]) if "delta_log" in z else ""
-        return cls(ordering, csr, engine, metric=metric, weights=weights,
-                   fingerprint=stored_fp or None,
-                   version=int(z["version"]) if "version" in z else 0,
-                   delta_log=json.loads(delta_raw) if delta_raw else [],
-                   comp=_opt("comp"), run_id=_opt("run_id"),
-                   run_triggers=_opt("run_triggers"))
+        idx = cls(ordering, csr, engine, metric=metric, weights=weights,
+                  fingerprint=stored_fp or None,
+                  version=int(z["version"]) if "version" in z else 0,
+                  delta_log=json.loads(delta_raw) if delta_raw else [],
+                  comp=_opt("comp"), run_id=_opt("run_id"),
+                  run_triggers=_opt("run_triggers"))
+        # a persisted condensed tree re-attaches warm (None when the
+        # archive predates hierarchies or was saved before one was built)
+        idx._hier = ClusterHierarchy.from_arrays(
+            z, ordering, idx.csr, idx.weights, version=idx.version)
+        return idx
 
     def save(self, path: str) -> None:
         """Serialize ordering + CSR + weights as one compressed npz."""

@@ -25,7 +25,7 @@ The loop-based originals live in ``repro.core.reference``;
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import ClassVar, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 from scipy.sparse import csr_matrix
@@ -496,3 +496,135 @@ def _minpts_star_batch_impl(index, csr, minpts_stars, stats):
                 fast_row = np.where(sparse >= 0, sparse, -1)
             out[i] = fast_row
     return out
+
+
+# ------------------------------------------------------ typed query settings
+# The query surface grew up on bare ("eps", v) tuples; the typed settings
+# below are the canonical spelling going forward (they survive adding new
+# query kinds — see ``Hierarchy`` — where positional tuples would force
+# every dispatcher to grow another string case). ``normalize_settings`` is
+# the single normalization shim: every consumer (``SweepPlanner.sweep``,
+# ``SweepOp``, ``SweepRequest``, the serve CLI) routes through it, so
+# tuple-based callers keep working unchanged.
+
+
+@dataclass(frozen=True)
+class Eps:
+    """An exact ε*-query setting (ε* ≤ generating ε) — Theorem 5.6."""
+    value: float
+    kind: ClassVar[str] = "eps"
+
+
+@dataclass(frozen=True)
+class MinPts:
+    """An exact MinPts*-query setting (MinPts* ≥ generating MinPts) —
+    §5.4, zero distance computations."""
+    value: int
+    kind: ClassVar[str] = "minpts"
+
+
+@dataclass(frozen=True)
+class Hierarchy:
+    """A stability-extraction setting: the labels row is the flat
+    clustering ``FinexIndex.hierarchy(min_cluster_weight).extract()``
+    selects from the condensed cluster tree (``repro.core.hierarchy``).
+    ``min_cluster_weight=None`` condenses at the generating MinPts."""
+    min_cluster_weight: Optional[int] = None
+    kind: ClassVar[str] = "hierarchy"
+
+    @property
+    def value(self) -> int:
+        # tuple-normal form carries 0 for "default" so the shim stays a
+        # plain (kind, number) pair
+        return int(self.min_cluster_weight or 0)
+
+
+Setting = Union[Eps, MinPts, Hierarchy, Tuple[str, float]]
+
+_SETTING_KINDS = ("eps", "minpts", "hierarchy")
+
+
+def normalize_settings(settings: Sequence[Setting]
+                       ) -> List[Tuple[str, float]]:
+    """Canonicalize a mixed typed/tuple settings sequence.
+
+    Returns plain ("eps"|"minpts"|"hierarchy", value) pairs — the wire
+    format every batched kernel and oplog already speaks. Bare 2-tuples
+    pass through (validated), so no existing caller breaks.
+    """
+    out: List[Tuple[str, float]] = []
+    for i, s in enumerate(settings):
+        if isinstance(s, (Eps, MinPts, Hierarchy)):
+            out.append((s.kind, s.value))
+            continue
+        try:
+            kind, value = s
+        except (TypeError, ValueError):
+            raise TypeError(
+                f"sweep setting at position {i} must be Eps/MinPts/"
+                f"Hierarchy or a (kind, value) pair, got {s!r}") from None
+        if kind not in _SETTING_KINDS:
+            raise ValueError(
+                f"unknown sweep setting kind {kind!r} at position {i} "
+                "(expected 'eps', 'minpts' or 'hierarchy')")
+        out.append((kind, value))
+    return out
+
+
+# ------------------------------------------------------- unified result type
+class ClusteringResult(np.ndarray):
+    """Labels + provenance — the one response type every query surface
+    returns (facade queries, planner sweeps, frontend futures).
+
+    An ``np.ndarray`` subclass: it IS the label array ((n,) for scalar
+    queries, (K, n) for sweeps), so every existing caller that indexes,
+    compares or reduces the old bare ndarray keeps working byte-for-byte.
+    The provenance travels as attributes:
+
+      * ``kind``    — "eps" | "minpts" | "generating" | "stability" |
+                      "sweep"
+      * ``value``   — the query parameter (None for generating/sweep)
+      * ``version`` — the index's mutation counter when answered
+      * ``eps`` / ``minpts`` — the generating pair
+      * ``elapsed_s`` — wall time of the answering call
+      * ``settings``  — normalized settings list (sweep results)
+      * ``index_name`` — logical name (frontend results)
+
+    Deprecation cycle: ``.labels`` and ``.index`` mirror the retired
+    ``SweepResult`` response object's attribute names.
+    """
+
+    _meta = ("kind", "value", "version", "eps", "minpts", "elapsed_s",
+             "settings", "index_name")
+
+    @classmethod
+    def wrap(cls, labels: np.ndarray, *, kind: str, value=None,
+             version: int = 0, eps=None, minpts=None, elapsed_s=None,
+             settings=None, index_name=None) -> "ClusteringResult":
+        obj = np.asarray(labels).view(cls)
+        obj.kind = kind
+        obj.value = value
+        obj.version = int(version)
+        obj.eps = eps
+        obj.minpts = minpts
+        obj.elapsed_s = elapsed_s
+        obj.settings = settings
+        obj.index_name = index_name
+        return obj
+
+    def __array_finalize__(self, obj):
+        if obj is None:
+            return
+        for f in self._meta:
+            setattr(self, f, getattr(obj, f, None))
+
+    # --- one-deprecation-cycle aliases (the old SweepResult shape) ---
+    @property
+    def labels(self) -> np.ndarray:
+        """The bare label array (plain ndarray view)."""
+        return self.view(np.ndarray)
+
+    @property
+    def index(self):
+        """Logical index name this result was served for (frontend)."""
+        return self.index_name

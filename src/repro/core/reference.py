@@ -382,3 +382,164 @@ def reference_sweep_labels(index: FinexOrdering, engine: NeighborEngine,
     if not rows:
         return np.empty((0, index.n), dtype=np.int64)
     return np.stack(rows)
+
+
+# ------------------------------------------------------------- hierarchy
+def reference_hierarchy(index: FinexOrdering, csr: CSRNeighborhoods,
+                        weights: np.ndarray,
+                        min_cluster_weight: Optional[int] = None) -> dict:
+    """Loop oracle for ``repro.core.hierarchy.build_hierarchy``.
+
+    No spanning tree, no union-find: mutual-reachability components are
+    recomputed from scratch with a set-based BFS at every evaluation
+    level (the merge levels of each tracked cluster), and the
+    condensation / stability / excess-of-mass selection rules are the
+    paper-facing definitions written as plain loops.  Returns a dict of
+    per-cluster lists plus the per-object condensed-node attribution and
+    the extracted flat labels, in *some* cluster order — the production
+    tree is compared against it up to the canonical (birth, size,
+    min-member) keying, never by raw cluster id.
+    """
+    n = index.n
+    eps_gen = float(np.float32(index.eps))
+    W = int(min_cluster_weight if min_cluster_weight is not None
+            else index.minpts)
+    C = index.C
+    w = np.asarray(weights, dtype=np.int64)
+    cores = [p for p in range(n) if np.isfinite(C[p])]
+    core_set = set(cores)
+
+    # every mutual-reachability pair, straight off the CSR rows
+    adj: dict = {p: [] for p in cores}
+    all_m = []
+    for p in cores:
+        s, e = csr.indptr[p], csr.indptr[p + 1]
+        for q, d in zip(csr.indices[s:e], csr.dists[s:e]):
+            q = int(q)
+            if p < q and q in core_set:
+                m = max(float(d), float(C[p]), float(C[q]))
+                adj[p].append((q, m))
+                adj[q].append((p, m))
+                all_m.append(m)
+
+    def comps_below(members, h):
+        """Components of {p: C[p] < h} under edges m < h (set BFS)."""
+        act = {p for p in members if C[p] < h}
+        out = []
+        while act:
+            seed = act.pop()
+            comp, stack = {seed}, [seed]
+            while stack:
+                x = stack.pop()
+                for q, m in adj[x]:
+                    if q in act and m < h:
+                        act.discard(q)
+                        comp.add(q)
+                        stack.append(q)
+            out.append(comp)
+        return out
+
+    parent, birth, death, size, attr = [], [], [], [], {}
+    stack = []
+    for comp in comps_below(cores, np.inf):      # top-level components
+        parent.append(-1)
+        birth.append(eps_gen)
+        death.append(np.nan)
+        size.append(int(sum(w[p] for p in comp)))
+        stack.append((comp, len(parent) - 1))
+    while stack:
+        S, c = stack.pop()
+        if len(S) == 1:                           # a lone surviving core
+            (p,) = S
+            attr[p] = c
+            death[c] = float(C[p])
+            continue
+        # next evaluation level: the largest level (member C or internal
+        # edge m) at which the cluster's structure actually changes — a
+        # cycle edge's m is not an event, so test instead of trusting max
+        levels = sorted({float(C[p]) for p in S}
+                        | {m for p in S for q, m in adj[p] if q in S},
+                        reverse=True)
+        h = next(e for e in levels if comps_below(S, e) != [S])
+        for p in S:
+            if C[p] == h:                        # falls with this merge
+                attr[p] = c
+        comps = comps_below(S, h)
+        big = [comp for comp in comps if sum(w[p] for p in comp) >= W]
+        if len(big) >= 2:                                # a real split
+            death[c] = float(h)
+            for comp in comps:
+                if comp in big:
+                    parent.append(c)
+                    birth.append(float(h))
+                    death.append(np.nan)
+                    size.append(int(sum(w[p] for p in comp)))
+                    stack.append((comp, len(parent) - 1))
+                else:
+                    for p in comp:
+                        attr[p] = c
+        elif len(big) == 1:                          # cluster continues
+            for comp in comps:
+                if comp is big[0]:
+                    stack.append((comp, c))
+                else:
+                    for p in comp:
+                        attr[p] = c
+        else:                                        # cluster dissolves
+            death[c] = float(h)
+            for comp in comps:
+                for p in comp:
+                    attr[p] = c
+
+    nc = len(parent)
+    pos_lv = [float(C[p]) for p in cores] + all_m + [eps_gen]
+    pos_lv = [v for v in pos_lv if v > 0]
+    floor = min(pos_lv) * 0.5 if pos_lv else 1.0
+
+    def lam(e):
+        return 1.0 / max(e, floor)
+
+    stability = [0.0] * nc
+    for p, c in attr.items():
+        stability[c] += float(w[p]) * (lam(float(C[p])) - lam(birth[c]))
+
+    children: dict = {}
+    for c in range(nc):
+        if parent[c] >= 0:
+            children.setdefault(parent[c], []).append(c)
+    selected = [True] * nc
+    s_hat = [0.0] * nc
+    for c in range(nc - 1, -1, -1):          # children have larger ids
+        cs = sum(s_hat[x] for x in children.get(c, []))
+        if children.get(c) and cs > stability[c]:
+            selected[c] = False
+            s_hat[c] = cs
+        else:
+            s_hat[c] = stability[c]
+    for c in range(nc):                      # parents have smaller ids
+        if any(selected[a] for a in _ancestors(parent, c)):
+            selected[c] = False
+
+    labels = np.full(n, -1, dtype=np.int64)
+    chosen: dict = {}
+    for p, c in attr.items():
+        a = c
+        while a >= 0 and not selected[a]:
+            a = parent[a]
+        if a >= 0:
+            chosen.setdefault(a, []).append(p)
+    for lbl, a in enumerate(sorted(chosen, key=lambda a: min(chosen[a]))):
+        for p in chosen[a]:
+            labels[p] = lbl
+    return {"parent": parent, "birth": birth, "death": death,
+            "size": size, "stability": stability, "selected": selected,
+            "attr": attr, "labels": labels, "floor": floor}
+
+
+def _ancestors(parent, c):
+    out = []
+    p = parent[c]
+    while p >= 0:
+        out.append(p)
+        p = parent[p]
+    return out

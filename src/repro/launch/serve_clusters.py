@@ -2,10 +2,12 @@
 
 Example-scale stand-in for the production serving loop: synthesizes a few
 datasets, then drains a mixed request stream (builds, single clusterings,
-parameter sweeps, stats probes) through ``ClusterService`` — same-index
-requests coalesce into shared batched sweeps, and the ``IndexStore``
-keeps indexes warm across requests (spilling LRU victims to disk when
-``--store-dir`` is set).
+parameter sweeps, all-scales hierarchy reads, stats probes) through
+``ClusterService`` — same-index requests coalesce into shared batched
+sweeps, and the ``IndexStore`` keeps indexes warm across requests
+(spilling LRU victims to disk when ``--store-dir`` is set).  Settings go
+through the typed query API (``Eps``/``MinPts``/``Hierarchy``;
+``--hierarchy-frac`` sets how many reads hit the condensed tree).
 
 ``--concurrent`` switches to the threaded ``ServiceFrontend``: ``--clients``
 threads submit interleaved sweeps and mutations against named indexes,
@@ -33,33 +35,37 @@ import numpy as np
 from repro import obs
 from repro.data.synthetic import gaussian_mixture
 from repro.service import (BuildOp, BuildRequest, ClusterOp, ClusterRequest,
-                           ClusterService, IndexStore, MutateRequest,
+                           ClusterService, Eps, Hierarchy, HierarchyOp,
+                           IndexStore, MinPts, MutateRequest,
                            ServiceFrontend, StatsOp, StatsRequest, SweepOp,
                            SweepRequest)
 from repro.service.frontend import AdmissionError
 
 
-def _request_stream(datasets, eps, minpts, n_requests, sweep_k, rng):
+def _one_setting(eps, minpts, rng, hierarchy_frac):
+    """One typed sweep setting (the CLI speaks the typed query API;
+    bare tuples still work everywhere downstream)."""
+    k = rng.random()
+    if k < hierarchy_frac:
+        return Hierarchy()
+    if k < hierarchy_frac + (1.0 - hierarchy_frac) / 2:
+        return Eps(float(eps * rng.uniform(0.2, 1.0)))
+    return MinPts(int(minpts * rng.integers(1, 9)))
+
+
+def _request_stream(datasets, eps, minpts, n_requests, sweep_k, rng,
+                    hierarchy_frac=0.15):
     """Mixed request stream: ~1/3 single clusterings, ~2/3 sweeps."""
     reqs = [BuildRequest(data=x, eps=eps, minpts=minpts) for x in datasets]
     for _ in range(n_requests):
         x = datasets[rng.integers(len(datasets))]
         if rng.random() < 0.33:
-            if rng.random() < 0.5:
-                setting = ("eps", float(eps * rng.uniform(0.2, 1.0)))
-            else:
-                setting = ("minpts", int(minpts * rng.integers(1, 9)))
-            reqs.append(ClusterRequest(data=x, eps=eps, minpts=minpts,
-                                       setting=setting))
+            reqs.append(ClusterRequest(
+                data=x, eps=eps, minpts=minpts,
+                setting=_one_setting(eps, minpts, rng, hierarchy_frac)))
         else:
-            settings = []
-            for _ in range(sweep_k):
-                if rng.random() < 0.5:
-                    settings.append(("eps",
-                                     float(eps * rng.uniform(0.2, 1.0))))
-                else:
-                    settings.append(("minpts",
-                                     int(minpts * rng.integers(1, 9))))
+            settings = [_one_setting(eps, minpts, rng, hierarchy_frac)
+                        for _ in range(sweep_k)]
             reqs.append(SweepRequest(data=x, eps=eps, minpts=minpts,
                                      settings=settings))
     reqs.append(StatsRequest())
@@ -115,12 +121,14 @@ def _run_concurrent(args, datasets, manager, stop: threading.Event) -> dict:
                     # inserts far enough to shrink below the seed size
                     req = MutateRequest(
                         nm, "delete", ids=[int(r.integers(0, 8))])
+                elif k < args.mutate_frac + args.hierarchy_frac:
+                    # all-scales read: answered from the warm condensed
+                    # tree (invalidated by the interleaved mutations, so
+                    # this also exercises the lazy rebuild under load)
+                    req = HierarchyOp(nm)
                 elif k < 0.8:
-                    settings = [("eps", float(args.eps
-                                              * r.uniform(0.2, 1.0)))
-                                if r.random() < 0.5
-                                else ("minpts",
-                                      int(args.minpts * r.integers(1, 9)))
+                    settings = [_one_setting(args.eps, args.minpts, r,
+                                             args.hierarchy_frac)
                                 for _ in range(args.sweep_k)]
                     req = SweepOp(nm, settings)
                 else:
@@ -205,6 +213,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--mutate-frac", type=float, default=0.2,
                     help="fraction of client ops that mutate "
                          "(--concurrent)")
+    ap.add_argument("--hierarchy-frac", type=float, default=0.15,
+                    help="fraction of reads that are all-scales "
+                         "hierarchy queries (HierarchyOp / Hierarchy "
+                         "sweep settings)")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump the final Telemetry.snapshot() (plus the "
                          "service counters) to PATH on exit; implies "
@@ -245,7 +257,8 @@ def main(argv=None) -> dict:
                          slots=args.slots,
                          stats_every=args.stats_every)
     reqs = _request_stream(datasets, args.eps, args.minpts, args.requests,
-                           args.sweep_k, rng)
+                           args.sweep_k, rng,
+                           hierarchy_frac=args.hierarchy_frac)
 
     interrupted = False
     t0 = time.perf_counter()

@@ -13,22 +13,26 @@ Three layers, composable or standalone:
                          dispatcher coalescing per-index mutations into
                          batched deltas, graceful drain/shutdown
 """
+from repro.core.queries import (ClusteringResult, Eps, Hierarchy, MinPts,
+                                normalize_settings)
 from repro.service.store import IndexKey, IndexStore
 from repro.service.planner import Setting, SweepPlanner
 from repro.service.engine import (BuildRequest, ClusterRequest,
                                   ClusterService, ServiceRequest,
                                   StatsRequest, SweepRequest)
 from repro.service.frontend import (AdmissionError, BuildOp, BuildResult,
-                                    ClusterOp, MutateRequest, MutateResult,
-                                    ServiceFrontend, StatsOp, SweepOp,
-                                    SweepResult)
+                                    ClusterOp, HierarchyOp, MutateRequest,
+                                    MutateResult, ServiceFrontend, StatsOp,
+                                    SweepOp, SweepResult)
 
 __all__ = [
     "IndexKey", "IndexStore",
     "Setting", "SweepPlanner",
+    "Eps", "MinPts", "Hierarchy", "normalize_settings",
+    "ClusteringResult",
     "BuildRequest", "ClusterRequest", "ClusterService", "ServiceRequest",
     "StatsRequest", "SweepRequest",
     "AdmissionError", "BuildOp", "BuildResult", "ClusterOp",
-    "MutateRequest", "MutateResult", "ServiceFrontend", "StatsOp",
-    "SweepOp", "SweepResult",
+    "HierarchyOp", "MutateRequest", "MutateResult", "ServiceFrontend",
+    "StatsOp", "SweepOp", "SweepResult",
 ]

@@ -11,9 +11,15 @@ request against a warm index costs zero distance computations beyond
 Request kinds (dataclasses, mirroring the serve Request pattern):
   * ``BuildRequest``   — ensure the index for (data, ε, MinPts) exists
   * ``ClusterRequest`` — one labeling: the generating pair, or a single
-                         ("eps"|"minpts", value) setting
+                         setting
   * ``SweepRequest``   — K settings, answered as one (K, n) matrix
   * ``StatsRequest``   — service + store counters snapshot
+
+Settings are the typed dataclasses from ``repro.core.queries`` (``Eps``
+/ ``MinPts`` / ``Hierarchy``) or bare ``(kind, value)`` pairs — the
+planner normalizes both, so existing tuple callers are untouched; a
+``Hierarchy`` setting answers with the condensed-tree stability
+extraction (cached per index version on the facade).
 """
 from __future__ import annotations
 
@@ -167,9 +173,13 @@ class ClusterService:
                 self.coalesced_settings += len(settings)
             for r, lo, hi in spans:
                 # .copy(): results must not pin the whole window matrix
-                r.labels = (labels[lo].copy()
+                # (np.asarray: request dataclasses keep plain label
+                # arrays; the typed ClusteringResult is the planner's
+                # and frontend's return surface)
+                labs = np.asarray(labels)
+                r.labels = (labs[lo].copy()
                             if isinstance(r, ClusterRequest)
-                            else labels[lo:hi].copy())
+                            else labs[lo:hi].copy())
                 r.done = True
                 self.requests_served += 1
 

@@ -53,6 +53,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro import obs
+from repro.core.queries import ClusteringResult, normalize_settings
 from repro.metrics import MetricLike
 from repro.service.planner import Setting, SweepPlanner
 from repro.service.store import IndexKey, IndexStore
@@ -88,9 +89,21 @@ class ClusterOp:
 
 @dataclass
 class SweepOp:
-    """K settings against ``index``, answered as one (K, n) matrix."""
+    """K settings against ``index``, answered as one (K, n) matrix.
+    Settings are typed (``Eps``/``MinPts``/``Hierarchy``) or bare
+    ``(kind, value)`` pairs — see ``repro.core.queries``."""
     index: str
     settings: Sequence[Setting] = field(default_factory=list)
+
+
+@dataclass
+class HierarchyOp:
+    """The all-scales verb: one stability-extracted labeling from
+    ``index``'s condensed cluster tree (``FinexIndex.hierarchy``).  The
+    tree is built once per index version and cached on the facade, so a
+    warm serving index answers this with zero distance work."""
+    index: str
+    min_cluster_weight: Optional[int] = None
 
 
 @dataclass
@@ -134,11 +147,12 @@ class BuildResult:
     n: int
 
 
-@dataclass
-class SweepResult:
-    index: str
-    labels: np.ndarray            # (n,) for ClusterOp, (K, n) for SweepOp
-    version: int
+# read responses are the unified ``ClusteringResult`` (an ndarray of
+# labels carrying index name, version and query kind); the old dataclass
+# name survives as an alias for one deprecation cycle so existing
+# ``isinstance(res, SweepResult)`` / ``res.labels`` / ``res.index``
+# call sites keep working unchanged
+SweepResult = ClusteringResult
 
 
 @dataclass
@@ -403,10 +417,10 @@ class ServiceFrontend:
         builds = [it for it in items if isinstance(it.req, BuildOp)]
         mutates = [it for it in items if isinstance(it.req, MutateRequest)]
         reads = [it for it in items
-                 if isinstance(it.req, (SweepOp, ClusterOp))]
+                 if isinstance(it.req, (SweepOp, ClusterOp, HierarchyOp))]
         for it in items:
             if not isinstance(it.req, (BuildOp, MutateRequest, SweepOp,
-                                       ClusterOp)):
+                                       ClusterOp, HierarchyOp)):
                 self._fail(it, TypeError(
                     f"unsupported frontend request {type(it.req).__name__}"))
         entry = self._entries.get(name)
@@ -571,15 +585,31 @@ class ServiceFrontend:
 
     def _finish_read(self, name, it, labels, lo, hi, version) -> None:
         # .copy(): results must not pin the whole window matrix
-        out = (labels[lo].copy() if isinstance(it.req, ClusterOp)
-               else labels[lo:hi].copy())
-        self._resolve(it, SweepResult(index=name, labels=out,
-                                      version=version))
+        req = it.req
+        settings = None
+        if isinstance(req, ClusterOp):
+            out = np.asarray(labels)[lo].copy()
+            if req.setting is None:
+                kind, value = "generating", None
+            else:
+                kind, value = normalize_settings([req.setting])[0]
+        elif isinstance(req, HierarchyOp):
+            out = np.asarray(labels)[lo].copy()
+            kind, value = "hierarchy", int(req.min_cluster_weight or 0)
+        else:
+            out = np.asarray(labels)[lo:hi].copy()
+            kind, value = "sweep", None
+            settings = normalize_settings(list(req.settings))
+        self._resolve(it, ClusteringResult.wrap(
+            out, kind=kind, value=value, version=version,
+            settings=settings, index_name=name))
 
     @staticmethod
     def _settings_of(index, req) -> List[Setting]:
         if isinstance(req, SweepOp):
             return list(req.settings)
+        if isinstance(req, HierarchyOp):
+            return [("hierarchy", int(req.min_cluster_weight or 0))]
         # a generating-pair ClusterOp is the degenerate MinPts*-query
         # MinPts* = MinPts, so it coalesces like everything else
         return [req.setting if req.setting is not None
@@ -683,7 +713,8 @@ class ServiceFrontend:
             "indexes": {
                 nm: {"version": e.index.version, "n": e.index.n,
                      "eps": e.index.eps, "minpts": e.index.minpts,
-                     "slack": e.index.slack_stats()}
+                     "slack": e.index.slack_stats(),
+                     "hierarchy": e.index.hierarchy_stats()}
                 for nm, e in entries.items()},
             "store": self.store.stats(),
             "telemetry": obs.snapshot(),

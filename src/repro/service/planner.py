@@ -11,20 +11,29 @@ that share all of it, and returns a (K, n) label matrix in request
 order — row k byte-identical to the scalar query for settings[k].
 
     planner = SweepPlanner(index)
-    labels = planner.sweep([("eps", 0.2), ("minpts", 60), ("eps", 0.3)])
+    labels = planner.sweep([Eps(0.2), MinPts(60), ("eps", 0.3)])
+    tree = planner.hierarchy()          # all (ε, MinPts) scales at once
+
+Settings are the typed dataclasses from ``repro.core.queries`` (``Eps``
+/ ``MinPts`` / ``Hierarchy``); bare ``("eps", v)`` tuples keep working
+through ``normalize_settings``.  A ``Hierarchy`` row is the stability
+extraction of the condensed cluster tree (built once per index version,
+cached on the facade); the tree itself comes from :meth:`hierarchy`.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro import obs
+from repro.core.hierarchy import ClusterHierarchy
 from repro.core.index import FinexIndex
-from repro.core.queries import QueryStats, eps_star_batch, minpts_star_batch
+from repro.core.queries import (ClusteringResult, QueryStats, Setting,
+                                eps_star_batch, minpts_star_batch,
+                                normalize_settings)
 
-# a sweep setting: ("eps", ε* ≤ ε) or ("minpts", MinPts* ≥ MinPts)
-Setting = Tuple[str, float]
+__all__ = ["Setting", "SweepPlanner"]
 
 
 class SweepPlanner:
@@ -39,19 +48,36 @@ class SweepPlanner:
     def minpts_grid(self, values: Sequence[int]) -> List[Setting]:
         return [("minpts", int(v)) for v in values]
 
+    def hierarchy(self, min_cluster_weight: Optional[int] = None
+                  ) -> ClusterHierarchy:
+        """The index's condensed cluster tree (built/cached on the
+        facade) — ``cut``/``cut_minpts`` slices answer any grid with
+        zero distance computations."""
+        return self.index.hierarchy(min_cluster_weight)
+
     def sweep(self, settings: Sequence[Setting],
-              stats: Optional[QueryStats] = None) -> np.ndarray:
-        """(K, n) exact labels for the K settings, in request order."""
-        with obs.span("planner.sweep", k=len(settings),
-                      n=self.index.n):
-            return self._sweep_impl(settings, stats)
+              stats: Optional[QueryStats] = None) -> ClusteringResult:
+        """(K, n) exact labels for the K settings, in request order.
+
+        The result is a ``ClusteringResult`` (an ndarray carrying query
+        kind, index version and the normalized settings) — row k is
+        byte-identical to the scalar query for settings[k]; a
+        ``("hierarchy", w)`` row is ``hierarchy(w or None).extract()``.
+        """
+        norm = normalize_settings(settings)
+        with obs.span("planner.sweep", k=len(norm), n=self.index.n):
+            labels = self._sweep_impl(norm, stats)
+        return ClusteringResult.wrap(
+            labels, kind="sweep", version=self.index.version,
+            eps=self.index.eps, minpts=self.index.minpts, settings=norm)
 
     def _sweep_impl(self, settings, stats=None) -> np.ndarray:
-        # untraced body of :meth:`sweep`
+        # untraced body of :meth:`sweep`; settings are normalized pairs
         if stats is None:
             stats = self.index.query_stats
         eps_pos, eps_vals = [], []
         mp_pos, mp_vals = [], []
+        hier_pos, hier_vals = [], []
         for i, (kind, value) in enumerate(settings):
             if kind == "eps":
                 eps_pos.append(i)
@@ -59,10 +85,9 @@ class SweepPlanner:
             elif kind == "minpts":
                 mp_pos.append(i)
                 mp_vals.append(int(value))
-            else:
-                raise ValueError(
-                    f"unknown sweep setting kind {kind!r} at position {i} "
-                    "(expected 'eps' or 'minpts')")
+            else:        # normalize_settings admits exactly one more kind
+                hier_pos.append(i)
+                hier_vals.append(int(value))
         if eps_vals and self.index.engine is None:
             raise RuntimeError(
                 "ε*-sweeps need the distance engine for verification; "
@@ -76,4 +101,6 @@ class SweepPlanner:
         if mp_vals:
             out[mp_pos] = minpts_star_batch(
                 self.index.ordering, self.index.csr, mp_vals, stats=stats)
+        for i, w in zip(hier_pos, hier_vals):
+            out[i] = self.index.hierarchy(w or None).extract()
         return out

@@ -1,0 +1,334 @@
+"""Hierarchy-as-a-query contract suite.
+
+Pins the PR's central claims: (1) ``ClusterHierarchy.cut`` /
+``cut_minpts`` are label-identical to ``eps_star`` / ``minpts_star`` for
+every registered metric, before AND after incremental deltas, with ZERO
+new distance computations (asserted via the engine counter); (2) the
+vectorized condensed tree + stability selection match the brute-force
+all-level loop oracle ``reference_hierarchy`` up to canonical keying;
+(3) delta-then-hierarchy equals fresh-build-then-hierarchy; (4) the tree
+round-trips through the index npz archive; (5) the typed settings
+(``Eps`` / ``MinPts`` / ``Hierarchy``) and the tuple shim answer
+identically through planner and frontend."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Eps, FinexIndex, Hierarchy, MinPts,
+                        normalize_settings)
+from repro.core.hierarchy import HIERARCHY_ARRAY_KEYS
+from repro.core.queries import ClusteringResult
+from repro.core.reference import reference_hierarchy
+from repro.data.synthetic import (gaussian_mixture, heavy_tail_sets,
+                                  two_scale_blobs)
+from repro.metrics import register_metric
+from repro.neighbors.bitset import pack_sets
+from repro.service import SweepPlanner
+
+
+def _chebyshev(q, c):
+    return jnp.max(jnp.abs(q[:, None, :] - c[None, :, :]), axis=-1)
+
+
+try:
+    register_metric("hier-cheb", _chebyshev)
+except ValueError:
+    pass  # already registered by a previous import of this module
+
+
+def _vectors(n, seed):
+    return gaussian_mixture(n, d=4, k=5, seed=seed), None
+
+
+def _sets(n, seed):
+    sets, w = heavy_tail_sets(n, seed=seed)
+    return pack_sets(sets, universe=512), w
+
+
+# (metric, dataset factory, eps, minpts) — the same four-way coverage as
+# the incremental suite: euclidean, jaccard's packed bitmap tuple state,
+# cosine, and a register_metric user distance
+CASES = [
+    ("euclidean", _vectors, 0.35, 8),
+    ("jaccard", _sets, 0.4, 8),
+    ("cosine", _vectors, 0.02, 6),
+    ("hier-cheb", _vectors, 0.3, 6),
+]
+IDS = [c[0] for c in CASES]
+
+
+def take_rows(data, sel):
+    if isinstance(data, tuple):
+        return tuple(a[sel] for a in data)
+    return data[sel]
+
+
+def build(data, case, weights=None):
+    metric, _, eps, minpts = case
+    return FinexIndex.build(data, eps=eps, minpts=minpts, metric=metric,
+                            weights=weights)
+
+
+# --------------------------------------------------------------------------
+# canonical tree comparison: cluster ids are an implementation detail
+# (stack order vs recursion order), so rows are keyed by
+# (birth, size, smallest object id in the subtree) — unique by
+# construction — and parents are matched through their keys.
+# --------------------------------------------------------------------------
+def _subtree_mins(parent, attr, n):
+    nc = len(parent)
+    mins = np.full(nc, n, dtype=np.int64)
+    attr = np.asarray(attr)
+    objs = np.flatnonzero(attr >= 0)
+    np.minimum.at(mins, attr[objs], objs)
+    for c in range(nc - 1, -1, -1):        # parent[c] < c, both sides
+        p = int(parent[c])
+        if p >= 0:
+            mins[p] = min(mins[p], mins[c])
+    return mins
+
+
+def _canon(parent, birth, death, size, stability, selected, attr, n):
+    parent = np.asarray(parent, dtype=np.int64)
+    mins = _subtree_mins(parent, attr, n)
+    keys = [(round(float(birth[c]), 9), int(size[c]), int(mins[c]))
+            for c in range(parent.size)]
+    assert len(set(keys)) == len(keys), "canonical keys must be unique"
+    rows = {}
+    for c, key in enumerate(keys):
+        pk = keys[parent[c]] if parent[c] >= 0 else None
+        rows[key] = (pk, round(float(death[c]), 9),
+                     round(float(stability[c]), 6), bool(selected[c]))
+    return rows
+
+
+def _canon_of_hierarchy(h):
+    return _canon(h.parent, h.birth, h.death, h.size, h.stability,
+                  h.selected, h.leaf_cond, h.n)
+
+
+def _canon_of_reference(ref, n):
+    attr = np.full(n, -1, dtype=np.int64)       # the oracle keeps a dict
+    for p, c in ref["attr"].items():
+        attr[p] = c
+    return _canon(ref["parent"], ref["birth"], ref["death"], ref["size"],
+                  ref["stability"], ref["selected"], attr, n)
+
+
+# --------------------------------------------------------------------------
+# (1) cut-equivalence, per metric, pre/post deltas, zero distances
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_cuts_identical_to_queries_zero_distances(case):
+    metric, make, eps, minpts = case
+    data, w = make(240, seed=5)
+    extra, _ = make(252, seed=5)
+    index = build(data, case, weights=w)
+
+    def check_cuts(idx):
+        eps_cuts = [eps * f for f in (1.0, 0.7, 0.45, 0.2)]
+        mp_cuts = [minpts, minpts + 5, 4 * minpts]
+        # the oracles first (ε*-verification may compute distances) ...
+        want_e = [np.asarray(idx.eps_star(e)) for e in eps_cuts]
+        want_m = [np.asarray(idx.minpts_star(m)) for m in mp_cuts]
+        # ... then the whole hierarchy + every cut must cost ZERO rows
+        rows_before = idx.engine.distance_rows_computed
+        h = idx.hierarchy()
+        for e, want in zip(eps_cuts, want_e):
+            np.testing.assert_array_equal(h.cut(e), want)
+        for m, want in zip(mp_cuts, want_m):
+            np.testing.assert_array_equal(h.cut_minpts(m), want)
+        assert idx.engine.distance_rows_computed == rows_before
+        assert h.n_clusters >= 1 and (np.asarray(h.extract()) >= -1).all()
+
+    check_cuts(index)
+    stale = index.hierarchy()
+
+    # deltas invalidate the cache; the rebuilt tree must stay exact
+    index.insert(take_rows(extra, slice(240, 252)))
+    index.delete(np.arange(0, 24, 2))
+    assert index.hierarchy_stats()["built"] is False
+    check_cuts(index)
+    assert index.hierarchy() is not stale     # lazily rebuilt, not reused
+    assert index.hierarchy_stats()["built"] is True
+
+
+def test_lean_index_hierarchy_is_distance_free():
+    """MinPts*-side cuts and the tree itself need no engine at all."""
+    x, _ = _vectors(200, seed=3)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    want = np.asarray(idx.minpts_star(16))
+    lean = FinexIndex(idx.ordering, idx.csr, weights=idx.weights)
+    h = lean.hierarchy()
+    np.testing.assert_array_equal(h.cut_minpts(16), want)
+    np.testing.assert_array_equal(h.cut(0.2), idx.eps_star(0.2))
+    assert h.n_clusters == idx.hierarchy().n_clusters
+
+
+# --------------------------------------------------------------------------
+# (2) condensed tree + stability vs the brute-force loop oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("kind", ["vectors", "sets", "two-scale"])
+def test_condensed_tree_matches_reference(kind, seed):
+    if kind == "vectors":
+        x, w = gaussian_mixture(90, d=4, k=4, seed=seed), None
+        idx = FinexIndex.build(x, eps=0.5, minpts=5)
+    elif kind == "sets":
+        # discrete distances: heavy ties exercise the level-contracted
+        # multiway merges and the λ floor on duplicate (m = 0) pairs
+        sets, w = heavy_tail_sets(90, seed=seed)
+        idx = FinexIndex.build(pack_sets(sets, universe=512), eps=0.5,
+                               minpts=5, metric="jaccard", weights=w)
+    else:
+        x, w = two_scale_blobs(120, seed=seed), None
+        idx = FinexIndex.build(x, eps=0.45, minpts=5)
+    for W in (None, 2, 10):
+        h = idx.hierarchy(min_cluster_weight=W)
+        ref = reference_hierarchy(idx.ordering, idx.csr, idx.weights,
+                                  min_cluster_weight=W)
+        assert _canon_of_hierarchy(h) == _canon_of_reference(ref, idx.n)
+        np.testing.assert_array_equal(h.extract(),
+                                      np.asarray(ref["labels"]))
+
+
+def test_hierarchy_without_cores_is_empty():
+    x, _ = _vectors(60, seed=1)
+    idx = FinexIndex.build(x, eps=0.05, minpts=50)   # nobody qualifies
+    h = idx.hierarchy()
+    assert h.n_clusters == 0 and h.n_selected == 0
+    assert (np.asarray(h.extract()) == -1).all()
+    np.testing.assert_array_equal(h.cut(0.02), idx.eps_star(0.02))
+
+
+# --------------------------------------------------------------------------
+# (3) delta-then-hierarchy == fresh-build-then-hierarchy
+# --------------------------------------------------------------------------
+def test_delta_then_hierarchy_matches_fresh_build():
+    x = gaussian_mixture(220, d=4, k=5, seed=9)
+    extra = gaussian_mixture(240, d=4, k=5, seed=9)[220:]
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    idx.hierarchy()                       # warm cache, must invalidate
+    idx.insert(extra)
+    gone = np.arange(10, 40, 3)
+    idx.delete(gone)
+    mutated = np.delete(np.concatenate([x, extra]), gone, axis=0)
+    fresh = FinexIndex.build(mutated, eps=0.35, minpts=8)
+    a, b = idx.hierarchy(), fresh.hierarchy()
+    for f in ("parent", "birth", "death", "size", "selected",
+              "leaf_cond"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    np.testing.assert_allclose(a.stability, b.stability, rtol=1e-12)
+    np.testing.assert_array_equal(a.extract(), b.extract())
+    np.testing.assert_array_equal(a.cut(0.2), fresh.eps_star(0.2))
+
+
+# --------------------------------------------------------------------------
+# (4) npz round-trip: the tree rides the archive as optional keys
+# --------------------------------------------------------------------------
+def test_npz_roundtrip_warm_and_cold(tmp_path):
+    x = gaussian_mixture(180, d=4, k=4, seed=2)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+
+    cold_path = str(tmp_path / "cold.npz")
+    idx.save(cold_path)                   # saved before hierarchy(): no keys
+    with np.load(cold_path) as z:
+        assert not any(k in z for k in HIERARCHY_ARRAY_KEYS)
+    cold = FinexIndex.load(cold_path, data=x)
+    assert cold.hierarchy_stats()["built"] is False
+
+    h = idx.hierarchy()
+    warm_path = str(tmp_path / "warm.npz")
+    idx.save(warm_path)
+    with np.load(warm_path) as z:
+        assert all(k in z for k in HIERARCHY_ARRAY_KEYS)
+    warm = FinexIndex.load(warm_path, data=x)
+    st = warm.hierarchy_stats()
+    assert st["built"] is True and st["clusters"] == h.n_clusters
+    g = warm.hierarchy()                  # cache hit, no rebuild needed
+    for f in ("parent", "birth", "death", "size", "stability",
+              "selected", "leaf_cond"):
+        np.testing.assert_array_equal(getattr(g, f), getattr(h, f))
+    np.testing.assert_array_equal(g.extract(), h.extract())
+    np.testing.assert_array_equal(g.cut(0.2), idx.eps_star(0.2))
+    # the lazily-rebuilt cold tree converges to the same answer
+    np.testing.assert_array_equal(cold.hierarchy().extract(), h.extract())
+
+
+# --------------------------------------------------------------------------
+# (5) typed settings + unified result type, planner and frontend
+# --------------------------------------------------------------------------
+def test_normalize_settings_shim():
+    norm = normalize_settings(
+        [Eps(0.3), ("eps", 0.3), MinPts(12), ("minpts", 12),
+         Hierarchy(), Hierarchy(min_cluster_weight=7)])
+    assert norm == [("eps", 0.3), ("eps", 0.3), ("minpts", 12),
+                    ("minpts", 12), ("hierarchy", 0), ("hierarchy", 7)]
+    with pytest.raises(ValueError, match="unknown sweep setting"):
+        normalize_settings([("epsilon", 0.2)])
+    with pytest.raises(TypeError, match="must be Eps/MinPts"):
+        normalize_settings([0.2])
+
+
+def test_planner_typed_settings_equal_tuples_and_queries():
+    x = gaussian_mixture(200, d=4, k=4, seed=4)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    planner = SweepPlanner(idx)
+    typed = planner.sweep([Eps(0.2), MinPts(16), Hierarchy()])
+    tup = planner.sweep([("eps", 0.2), ("minpts", 16), ("hierarchy", 0)])
+    np.testing.assert_array_equal(typed, tup)
+    np.testing.assert_array_equal(typed[0], np.asarray(idx.eps_star(0.2)))
+    np.testing.assert_array_equal(typed[1],
+                                  np.asarray(idx.minpts_star(16)))
+    np.testing.assert_array_equal(typed[2],
+                                  np.asarray(idx.hierarchy().extract()))
+    assert isinstance(typed, ClusteringResult)
+    assert typed.kind == "sweep"
+    assert typed.settings == [("eps", 0.2), ("minpts", 16),
+                              ("hierarchy", 0)]
+    assert planner.hierarchy().n_clusters == idx.hierarchy().n_clusters
+
+
+def test_queries_return_clustering_result_with_provenance():
+    x = gaussian_mixture(160, d=4, k=4, seed=6)
+    idx = FinexIndex.build(x, eps=0.35, minpts=8)
+    res = idx.eps_star(0.2)
+    assert isinstance(res, ClusteringResult)
+    assert res.kind == "eps" and res.value == pytest.approx(0.2)
+    assert res.version == idx.version and res.minpts == 8
+    assert isinstance(res.labels, np.ndarray)
+    assert not isinstance(res.labels, ClusteringResult)
+    np.testing.assert_array_equal(res.labels, np.asarray(res))
+    assert idx.minpts_star(12).kind == "minpts"
+    assert idx.clustering().kind == "generating"
+    ext = idx.hierarchy().extract()
+    assert ext.kind == "stability" and ext.value == 8
+    # results behave as plain label arrays everywhere (old call sites)
+    assert res.shape == (idx.n,) and int(res.max()) >= 0
+    assert (np.sort(np.unique(res.labels)) == np.unique(res)).all()
+
+
+def test_frontend_hierarchy_op_and_stats():
+    from repro.service import (BuildOp, ClusterOp, HierarchyOp,
+                               ServiceFrontend, StatsOp, SweepOp)
+    x = gaussian_mixture(200, d=4, k=4, seed=8)
+    fe = ServiceFrontend(workers=2, window=4)
+    try:
+        fe.submit(BuildOp("hx", x, 0.35, 8)).result(timeout=120)
+        hier = fe.submit(HierarchyOp("hx")).result(timeout=120)
+        swp = fe.submit(
+            SweepOp("hx", [Hierarchy(), Eps(0.2), MinPts(16)])
+        ).result(timeout=120)
+        one = fe.submit(ClusterOp("hx", Eps(0.2))).result(timeout=120)
+        stats = fe.submit(StatsOp()).result(timeout=120)
+    finally:
+        fe.shutdown(drain=True, timeout=120)
+    assert hier.kind == "hierarchy" and hier.index == "hx"
+    np.testing.assert_array_equal(hier, swp[0])
+    np.testing.assert_array_equal(one, swp[1])
+    assert one.kind == "eps" and one.value == pytest.approx(0.2)
+    assert swp.settings == [("hierarchy", 0), ("eps", 0.2),
+                            ("minpts", 16)]
+    hs = stats["indexes"]["hx"]["hierarchy"]
+    assert hs["built"] is True and hs["clusters"] >= 1
